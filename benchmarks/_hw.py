@@ -1,0 +1,46 @@
+"""Shared benchmark utilities: timing + the paper's cluster model.
+
+The paper's experiments ran on 180 Yahoo! machines (2x quad-core Xeon E5420,
+16 GB, 1 Gbps).  CPU-container policy: every benchmark MEASURES what runs
+here (the real executors at laptop scale) and DERIVES cluster-scale curves
+from the planner's alpha-beta cost model — each CSV row says which.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+
+from repro.core.hardware import HardwareSpec
+
+# The paper's 2008-era cluster, for deriving Figs. 6-9 analogues.
+YAHOO_2012 = HardwareSpec(
+    name="yahoo-e5420",
+    peak_flops_bf16=80e9,        # ~10 GFLOP/s/core x 8 cores (f32 SSE)
+    hbm_bw=12.8e9,               # DDR2 FSB-class
+    ici_bw=0.125e9,              # 1 Gbps NIC
+    dcn_bw=0.125e9,
+    ici_latency=100e-6,          # TCP/JVM stack
+    dcn_latency=150e-6,
+    hbm_bytes=16 * 1024**3,
+)
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time per call in microseconds (blocking on jax arrays)."""
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

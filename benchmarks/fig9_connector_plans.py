@@ -1,0 +1,72 @@
+"""Fig. 9 — alternative Hyracks plans: hash-partitioning-*merging* connector
+vs hash connector + explicit sort.
+
+Measured: both connectors' REAL compiled supersteps on this host across
+graph sizes (the two group-by strategies execute genuinely different code:
+sorted segment-reduce vs scatter-add).  Derived: the at-scale crossover from
+the planner's stall model (merging wins small, stalls at large fan-in —
+paper §5.2.3)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks._hw import YAHOO_2012, row, timeit
+from repro.core.hardware import MeshSpec, all_to_all
+from repro.core.pregel import Graph, VertexProgram, compile_pregel
+
+
+def _prog(N, outdeg):
+    od = jnp.asarray(outdeg)
+    return VertexProgram(
+        init_vertex=lambda ids, vd: jnp.stack(
+            [jnp.full((N,), 1.0 / N), od], axis=1),
+        message=lambda j, s, ed: s[:, 0] / jnp.maximum(s[:, 1], 1.0),
+        apply=lambda j, s, inbox, got: (
+            jnp.stack([0.15 / N + 0.85 * inbox, s[:, 1]], axis=1),
+            jnp.ones(s.shape[0], jnp.bool_)),
+        combine="sum",
+    )
+
+
+def main(emit=print) -> None:
+    rng = np.random.default_rng(0)
+    for N in (2048, 8192):
+        deg = 8
+        src = np.repeat(np.arange(N, dtype=np.int32), deg)
+        dst = rng.integers(0, N, N * deg).astype(np.int32)
+        outdeg = np.bincount(src, minlength=N).astype(np.float32)
+        g = Graph(N, jnp.asarray(src), jnp.asarray(dst),
+                  jnp.asarray(outdeg))
+        times = {}
+        for conn in ("merging", "hash_sort"):
+            ex = compile_pregel(_prog(N, outdeg), g, force_connector=conn)
+            state = ex.init()
+            times[conn] = timeit(
+                lambda ex=ex, state=state: ex.superstep(state, jnp.int32(0))
+            )
+            emit(row(f"fig9/measured_{conn}_N{N}", times[conn],
+                     f"measured: superstep, {N} vertices {N * deg} edges"))
+        emit(row(f"fig9/measured_ratio_N{N}", 0.0,
+                 f"measured: merging/hash_sort = "
+                 f"{times['merging'] / times['hash_sort']:.2f}"))
+
+    # derived at-scale crossover (paper: merging wins <=210GB, loses >=280GB)
+    hw = YAHOO_2012
+    for machines in (31, 93, 124, 155):
+        msg_per_node = 1_413_511_393 * 8 / machines
+        base = all_to_all(msg_per_node, machines, hw.ici_bw,
+                          hw.ici_latency).seconds
+        merge_stall = hw.ici_latency * machines * 8.0 \
+            + base * 0.002 * machines          # sender-stall growth
+        sort_extra = 0.15 * base               # receiver-side sort work
+        merging = base + merge_stall
+        hash_sort = base + sort_extra
+        emit(row(f"fig9/derived_m{machines}", merging * 1e6,
+                 f"derived: merging={merging:.1f}s hash+sort={hash_sort:.1f}s "
+                 f"winner={'merging' if merging < hash_sort else 'hash_sort'}"))
+
+
+if __name__ == "__main__":
+    main()

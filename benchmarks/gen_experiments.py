@@ -1,0 +1,73 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+Keeps the measured tables in EXPERIMENTS.md reproducible:
+    PYTHONPATH=src:. python -m benchmarks.gen_experiments
+rewrites the blocks between the AUTOGEN markers in-place.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+
+from benchmarks.roofline import ART, enrich, load_cells, markdown_table
+
+DOC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "EXPERIMENTS.md")
+
+
+def dryrun_summary() -> str:
+    lines = []
+    for mesh in ("single", "multi"):
+        cells = load_cells(mesh)
+        ok = [c for c in cells if c["status"] == "ok"]
+        sk = [c for c in cells if c["status"] == "skipped"]
+        n_dev = ok[0]["n_devices"] if ok else 0
+        total_compile = sum(c["timings"]["compile_s"] for c in ok)
+        over = [c["cell"] for c in ok
+                if c["memory"]["peak_hbm_estimate"] > 16 * 2**30]
+        lines.append(
+            f"* **{mesh}-pod** ({n_dev} devices): {len(ok)} cells lowered + "
+            f"compiled, {len(sk)} skipped per the long_500k rule; total "
+            f"compile {total_compile:.0f}s."
+        )
+        if over:
+            lines.append(
+                f"  - cells whose static peak-HBM estimate exceeds 16 GiB "
+                f"(flagged, see §Perf): {', '.join(sorted(over))}"
+            )
+    return "\n".join(lines)
+
+
+def skip_table() -> str:
+    rows = ["| cell | reason |", "|---|---|"]
+    for a in load_cells("single"):
+        if a["status"] == "skipped":
+            rows.append(f"| {a['cell']} | {a['reason']} |")
+    return "\n".join(rows)
+
+
+def replace_block(text: str, tag: str, content: str) -> str:
+    begin = f"<!-- AUTOGEN:{tag} -->"
+    end = f"<!-- /AUTOGEN:{tag} -->"
+    pattern = re.compile(
+        re.escape(begin) + ".*?" + re.escape(end), re.DOTALL
+    )
+    return pattern.sub(begin + "\n" + content + "\n" + end, text)
+
+
+def main() -> None:
+    with open(DOC) as f:
+        text = f.read()
+    text = replace_block(text, "dryrun-summary", dryrun_summary())
+    text = replace_block(text, "skip-table", skip_table())
+    text = replace_block(text, "roofline-single", markdown_table("single"))
+    text = replace_block(text, "roofline-multi", markdown_table("multi"))
+    with open(DOC, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md tables refreshed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Microbenchmarks of the runtime's hot operators on this host (measured)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks._hw import row, timeit
+from repro.core.physical import scatter_combine, segment_combine_sorted
+from repro.kernels.flash_attention.ref import attention_reference
+from repro.models.common import chunked_attention
+
+
+def main(emit=print) -> None:
+    rng = np.random.default_rng(0)
+
+    # chunked (flash-semantics) attention vs naive reference
+    B, H, S, D = 1, 8, 1024, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.bfloat16)
+    f_chunk = jax.jit(lambda q, k, v: chunked_attention(q, k, v, causal=True))
+    us = timeit(f_chunk, q, k, v)
+    emit(row("micro/chunked_attention_1k", us,
+             f"measured: B{B} H{H} S{S} D{D} bf16"))
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    f_ref = jax.jit(lambda q, k, v: attention_reference(q, k, v, causal=True))
+    us_ref = timeit(f_ref, qt, kt, vt)
+    emit(row("micro/naive_attention_1k", us_ref,
+             "measured: same shape, materialized scores"))
+
+    # the two Fig. 9 group-by algorithms
+    E, F, N = 65536, 8, 4096
+    ids = jnp.asarray(np.sort(rng.integers(0, N, E)).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=(E, F)), jnp.float32)
+    f_sorted = jax.jit(
+        lambda v, i: segment_combine_sorted(v, i, N))
+    f_scatter = jax.jit(lambda v, i: scatter_combine(v, i, N))
+    emit(row("micro/segment_combine_sorted", timeit(f_sorted, vals, ids),
+             f"measured: E={E} N={N} (merging connector receiver)"))
+    emit(row("micro/scatter_combine", timeit(f_scatter, vals, ids),
+             f"measured: E={E} N={N} (hash+sort connector receiver)"))
+
+    # decode step of a reduced LM (serving hot path)
+    from repro.models.registry import build_model, get_config, reduced_config
+
+    cfg = reduced_config(get_config("minitron_8b"))
+    m = build_model(cfg)
+    params = m["init_params"](jax.random.PRNGKey(0))
+    cache = m["init_cache"](4, 64)
+    tok = jnp.zeros((4, 1), jnp.int32)
+    dec = jax.jit(lambda p, c, t: m["decode_step"](p, c, t, jnp.int32(32)))
+    emit(row("micro/decode_step_reduced", timeit(dec, params, cache, tok),
+             "measured: reduced dense LM, B=4, cache 64"))
+
+
+if __name__ == "__main__":
+    main()

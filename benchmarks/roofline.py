@@ -1,0 +1,161 @@
+"""§Roofline reader: aggregate dry-run artifacts into the per-cell table.
+
+Reads artifacts/dryrun/*.json (written by ``repro.launch.dryrun``) and
+emits, per (arch x shape x mesh):
+
+  - the three terms in seconds (compute / memory / collective),
+  - the dominant term,
+  - MODEL_FLOPS (6*N*D dense / 6*N_active*D MoE; serve analogues) and the
+    useful-compute ratio MODEL_FLOPS / HLO_FLOPs,
+  - roofline fraction = compute_term / step_lower_bound (how much of the
+    step's bound is spent doing useful math),
+  - per-device peak memory from memory_analysis.
+
+Also renders the markdown table embedded in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks._hw import row
+from repro.models.common import SHAPES
+from repro.models.registry import get_config
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "artifacts", "dryrun")
+
+
+def _active_params(cfg) -> float:
+    """Parameters touched per token (MoE: top_k experts + shared)."""
+
+    from repro.models import lm as lm_mod
+    import jax
+
+    params = lm_mod.abstract_params(cfg)
+    total = 0.0
+    active = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        n = float(np.prod(leaf.shape))
+        total += n
+        key = jax.tree_util.keystr(path)
+        if any(t in key for t in ("w_gate", "w_up", "w_down")) \
+                and "res_" not in key and cfg.n_experts:
+            # stacked experts: only top_k of n_experts active per token
+            if f"'moe'" in key:
+                n = n * cfg.top_k / cfg.n_experts
+        active += n
+    return total, active
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    """6*N_active*D for train; 2*N_active*D_step for serve steps."""
+
+    shp = SHAPES[shape_name]
+    total, active = _active_params(cfg)
+    if shp["kind"] == "train":
+        tokens = shp["batch"] * shp["seq"]
+        return 6.0 * active * tokens
+    if shp["kind"] == "prefill":
+        tokens = shp["batch"] * shp["seq"]
+        return 2.0 * active * tokens
+    # decode: one token per sequence per step
+    return 2.0 * active * shp["batch"]
+
+
+def load_cells(mesh: Optional[str] = None) -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            a = json.load(f)
+        if mesh and a.get("mesh") != mesh:
+            continue
+        if a.get("variant"):
+            continue
+        cells.append(a)
+    return cells
+
+
+def enrich(a: Dict) -> Dict:
+    cfg = get_config(a["arch"])
+    r = a["roofline"]
+    n_dev = a["n_devices"]
+    mf = model_flops(cfg, a["shape"])
+    hlo_total = r["hlo_flops_per_device"] * n_dev
+    useful = mf / hlo_total if hlo_total else 0.0
+    bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    ideal_compute = mf / n_dev / 197e12
+    if a["kind"] == "decode":
+        # decode is inherently memory-bound: the roofline target is the
+        # unavoidable read of params + cache (~= the argument bytes)
+        ideal = a["memory"]["argument_bytes"] / 819e9
+    else:
+        # train/prefill target: compute-bound at MODEL_FLOPS
+        ideal = ideal_compute
+    frac = ideal / bound if bound else 0.0
+    return {
+        **a,
+        "model_flops": mf,
+        "useful_ratio": useful,
+        "roofline_fraction": frac,
+        "mfu_at_bound": ideal_compute / bound if bound else 0.0,
+        "bound_s": bound,
+    }
+
+
+def markdown_table(mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | dominant | compute s | memory s | collective s |"
+        " peak GiB/dev | MODEL_FLOPS/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in load_cells(mesh):
+        if a["status"] == "skipped":
+            lines.append(
+                f"| {a['cell'].split('__')[0]} | {a['cell'].split('__')[1]} |"
+                f" SKIPPED | - | - | - | - | - | - |"
+            )
+            continue
+        e = enrich(a)
+        r = a["roofline"]
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {r['dominant'][:-2]} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} "
+            f"| {a['memory']['peak_hbm_estimate'] / 2**30:.1f} "
+            f"| {e['useful_ratio']:.2f} | {e['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def main(emit=print) -> None:
+    for mesh in ("single", "multi"):
+        cells = load_cells(mesh)
+        ok = [c for c in cells if c["status"] == "ok"]
+        if not cells:
+            emit(row(f"roofline/{mesh}_pod", 0.0, "derived: NO ARTIFACTS"))
+            continue
+        emit(row(
+            f"roofline/{mesh}_pod_cells", 0.0,
+            f"derived: {len(ok)} compiled + "
+            f"{len(cells) - len(ok)} skipped cells",
+        ))
+        for a in ok:
+            e = enrich(a)
+            r = a["roofline"]
+            emit(row(
+                f"roofline/{a['cell']}", r["step_lower_bound_s"] * 1e6,
+                f"derived: dom={r['dominant'][:-2]} "
+                f"frac={e['roofline_fraction']:.3f} "
+                f"useful={e['useful_ratio']:.2f} "
+                f"peak={a['memory']['peak_hbm_estimate'] / 2**30:.1f}GiB",
+            ))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Benchmark runner: one module per paper table/figure + roofline readout.
+
+Prints ``name,us_per_call,derived`` CSV.  ``measured`` rows time real
+executions on this host; ``derived`` rows come from the planner/roofline
+cost models (CPU container: TPU/2012-cluster numbers cannot be measured)."""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> int:
+    from benchmarks import (
+        fig6_bgd_speedup,
+        fig7_bgd_scaleup,
+        fig8_pagerank_speedup,
+        fig9_connector_plans,
+        table1_pagerank_scaleup,
+        roofline,
+        microbench,
+    )
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (fig6_bgd_speedup, fig7_bgd_scaleup, fig8_pagerank_speedup,
+                table1_pagerank_scaleup, fig9_connector_plans, microbench,
+                roofline):
+        try:
+            mod.main()
+        except Exception:  # noqa: BLE001 - keep the suite running
+            failures += 1
+            print(f"{mod.__name__},0.0,ERROR", file=sys.stderr)
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

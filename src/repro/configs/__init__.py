@@ -1,0 +1,6 @@
+"""Architecture configs: one module per assigned architecture (+ the paper's
+own BGD/PageRank task configs).  Each module exposes ``CONFIG``."""
+
+from repro.models.registry import ARCH_IDS, get_config
+
+__all__ = ["ARCH_IDS", "get_config"]

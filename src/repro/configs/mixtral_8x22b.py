@@ -1,0 +1,15 @@
+"""mixtral-8x22b [moe] — 8 experts top-2, sliding-window attention
+[arXiv:2401.04088; hf]."""
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x22b", family="moe",
+    n_layers=56, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=16384, vocab=32768, head_dim=128,
+    n_experts=8, top_k=2, moe_d_ff=16384,
+    window=4096, rope_theta=1000000.0,
+    notes="8 experts do not divide the 16-way model axis: planner selects "
+          "tensor-parallel expert FFN (expert_ffn -> model) instead of EP. "
+          "SWA makes long_500k decodable with a rolling window cache.",
+)

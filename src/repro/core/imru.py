@@ -1,0 +1,292 @@
+"""Iterative Map-Reduce-Update front-end (paper §2.2, Listing 2, Fig. 5).
+
+The user supplies the three UDFs of the programming model:
+
+* ``init_model() -> model``               (pytree of arrays)
+* ``map(records, model) -> stat``         (vectorized over a record batch;
+                                           the per-record map of the paper
+                                           fused with sender-side early
+                                           aggregation — Fig. 5's O5+O6)
+* ``update(j, model, stat) -> model``
+
+plus the ``reduce`` aggregate (default: pytree sum — the commutative/
+associative monoid the planner's early-aggregation rewrite relies on).
+
+Compilation pipeline (the paper's Figure 1 stack, end to end):
+
+1. the UDFs are registered into the Listing-2 Datalog ``Program``;
+2. the stratifier proves XY-stratification (Theorem 2) and derives the
+   iteration schedule;
+3. the algebra translator produces the Figure-2 logical plan;
+4. the planner lowers it to an :class:`IMRUPhysicalPlan` for the target mesh
+   (reduce-schedule selection, caching, microbatching);
+5. this module materializes that plan as jitted JAX: a ``shard_map`` step
+   with the planned collective schedule, wrapped in a fixpoint driver.
+
+Convergence is rule G3's ``M != NewM`` test: the fixpoint is reached when
+``update`` returns the model unchanged (to within ``tol``).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import algebra, stratify
+from repro.core.datalog import Aggregate, Program
+from repro.core.fixpoint import (
+    DriverConfig,
+    FixpointResult,
+    HostFixpointDriver,
+    device_fixpoint,
+)
+from repro.core.hardware import MeshSpec, TPU_V5E, HardwareSpec
+from repro.core.listings import imru_program
+from repro.core.physical import reduce_tree
+from repro.core.planner import IMRUPhysicalPlan, IMRUStats, plan_imru
+
+__all__ = ["IMRUTask", "IMRUExecutable", "compile_imru", "tree_sum_aggregate"]
+
+
+def tree_sum_aggregate() -> Aggregate:
+    """The default ``reduce``: elementwise pytree sum (BGD's gradient sum)."""
+
+    return Aggregate(
+        name="reduce",
+        zero=lambda: 0.0,
+        combine=lambda a, b: jax.tree_util.tree_map(jnp.add, a, b),
+    )
+
+
+@dataclass
+class IMRUTask:
+    """An Iterative Map-Reduce-Update task: the paper's three UDFs."""
+
+    init_model: Callable[[], Any]
+    map: Callable[[Any, Any], Any]
+    update: Callable[[Any, Any, Any], Any]
+    reduce: Aggregate = field(default_factory=tree_sum_aggregate)
+    name: str = "imru-task"
+    tol: float = 0.0  # convergence tolerance for the M != NewM test
+
+    def program(self) -> Program:
+        """The Listing-2 Datalog program with this task's UDFs bound."""
+
+        return imru_program(
+            udfs={
+                "init_model": self.init_model,
+                "map": self.map,
+                "update": self.update,
+            },
+            aggregates={"reduce": self.reduce},
+        )
+
+
+@dataclass
+class IMRUExecutable:
+    """A compiled IMRU task: physical plan + jitted step + fixpoint drivers."""
+
+    task: IMRUTask
+    program: Program
+    logical: algebra.LogicalPlan
+    plan: IMRUPhysicalPlan
+    step: Callable[[Any, Any], Any]          # (model, j) -> model
+    records: Any                              # device-resident cached EDB
+    mesh: Optional[Mesh]
+
+    def init(self) -> Any:
+        return self.task.init_model()
+
+    def converged(self, prev: Any, new: Any) -> jax.Array:
+        leaves_p = jax.tree_util.tree_leaves(prev)
+        leaves_n = jax.tree_util.tree_leaves(new)
+        same = jnp.bool_(True)
+        for a, b in zip(leaves_p, leaves_n):
+            same = jnp.logical_and(
+                same, jnp.all(jnp.abs(a - b) <= self.task.tol)
+            )
+        return same
+
+    # -- drivers ------------------------------------------------------------
+
+    def run(self, max_iters: int, on_device: bool = True) -> FixpointResult:
+        model = self.init()
+        if on_device:
+            return device_fixpoint(
+                lambda m, j: self.step(m, j),
+                self.converged,
+                model,
+                max_iters,
+            )
+        driver = HostFixpointDriver(
+            step=lambda m, j: self.step(m, jnp.int32(j)),
+            converged=self.converged,
+            config=DriverConfig(max_iters=max_iters),
+        )
+        return driver.run(model)
+
+    def driver(self, config: DriverConfig, **hooks) -> HostFixpointDriver:
+        return HostFixpointDriver(
+            step=lambda m, j: self.step(m, jnp.int32(j)),
+            converged=self.converged,
+            config=config,
+            **hooks,
+        )
+
+
+def _shard_records(records: Any, mesh: Mesh, batch_axes: Tuple[str, ...]):
+    spec = P(batch_axes if batch_axes else None)
+    return jax.device_put(
+        records,
+        NamedSharding(mesh, spec),
+    ) if mesh is not None else records
+
+
+def compile_imru(
+    task: IMRUTask,
+    records: Any,
+    *,
+    mesh: Optional[Mesh] = None,
+    mesh_spec: Optional[MeshSpec] = None,
+    hw: HardwareSpec = TPU_V5E,
+    stats: Optional[IMRUStats] = None,
+    force_reduce: Optional[str] = None,
+    codec: Optional[str] = None,
+    microbatches: Optional[int] = None,
+) -> IMRUExecutable:
+    """Compile an IMRU task through the full declarative stack.
+
+    ``records`` is a pytree whose leaves have a common leading (record)
+    dimension; it becomes the loop-invariant cached EDB.  With a ``mesh`` the
+    step runs under ``shard_map`` with the planned collective schedule; on a
+    single device the same code runs with trivial axes.
+    """
+
+    # (1)-(3): Datalog -> schedule -> logical plan.  These raise on any
+    # violation of the paper's semantic requirements.
+    program = task.program()
+    schedule = stratify.iteration_schedule(program)
+    assert tuple(r.label for r in schedule.body_rules) == ("G2", "G3")
+    logical = algebra.translate(program)
+
+    # (4): physical planning from data statistics.
+    leaves = jax.tree_util.tree_leaves(records)
+    n_records = int(leaves[0].shape[0])
+    record_bytes = sum(
+        int(np.prod(l.shape[1:])) * l.dtype.itemsize for l in leaves
+    )
+    model0 = jax.eval_shape(task.init_model)
+    model_bytes = sum(
+        int(np.prod(l.shape)) * l.dtype.itemsize
+        for l in jax.tree_util.tree_leaves(model0)
+    )
+    if stats is None:
+        stats = IMRUStats(
+            n_records=n_records,
+            record_bytes=record_bytes,
+            model_bytes=model_bytes,
+            stat_bytes=model_bytes,  # gradient-shaped statistic
+            flops_per_record=2.0 * model_bytes / 4.0,
+        )
+    if mesh_spec is None:
+        if mesh is not None:
+            mesh_spec = MeshSpec(
+                tuple((n, s) for n, s in zip(mesh.axis_names, mesh.devices.shape))
+            )
+        else:
+            mesh_spec = MeshSpec((("data", 1),))
+    plan = plan_imru(
+        stats, mesh_spec, hw,
+        force_reduce=force_reduce, codec=codec, microbatches=microbatches,
+    )
+
+    # (5): materialize the physical plan as a jitted step.
+    reduce_sched = plan.reduce
+    data_axes = tuple(a for a in ("data",) if mesh_spec.size(a) > 1) or ("data",)
+    n_mb = plan.microbatches
+
+    def local_partial(records_shard: Any, model: Any) -> Any:
+        """map + sender-side early aggregation over the local shard, with
+        optional microbatching (Fig. 5 O5+O6)."""
+
+        if n_mb <= 1:
+            return task.map(records_shard, model)
+        leaves0 = jax.tree_util.tree_leaves(records_shard)
+        n_local = leaves0[0].shape[0]
+        mb = max(1, n_local // n_mb)
+
+        def body(acc, i):
+            batch = jax.tree_util.tree_map(
+                lambda x: lax.dynamic_slice_in_dim(x, i * mb, mb, 0),
+                records_shard,
+            )
+            stat = task.map(batch, model)
+            acc = jax.tree_util.tree_map(jnp.add, acc, stat)
+            return acc, None
+
+        zero_stat = jax.tree_util.tree_map(
+            jnp.zeros_like,
+            jax.eval_shape(
+                lambda: task.map(
+                    jax.tree_util.tree_map(lambda x: x[:mb], records_shard),
+                    model,
+                )
+            ),
+        )
+        acc, _ = lax.scan(body, zero_stat, jnp.arange(n_local // mb))
+        return acc
+
+    if mesh is not None and any(
+        mesh.shape.get(a, 1) > 1 for a in ("pod", "data")
+    ):
+        batch_axes = tuple(
+            a for a in ("pod", "data") if mesh.shape.get(a, 1) > 1
+        )
+        records = _shard_records(records, mesh, batch_axes)
+
+        from jax.experimental.shard_map import shard_map
+
+        in_specs = (
+            jax.tree_util.tree_map(lambda _: P(batch_axes), records),
+            P(),  # model replicated
+            P(),  # j replicated
+        )
+
+        def sharded_step(records_shard, model, j):
+            partial = local_partial(records_shard, model)
+            total = reduce_tree(
+                partial, reduce_sched,
+                data_axes=tuple(a for a in ("data",) if a in batch_axes),
+                pod_axis="pod",
+            )
+            return task.update(j, model, total)
+
+        step_inner = shard_map(
+            sharded_step, mesh=mesh,
+            in_specs=in_specs, out_specs=P(),
+            check_rep=False,
+        )
+        step = jax.jit(lambda model, j: step_inner(records, model, j))
+    else:
+        def step_fn(model, j):
+            partial = local_partial(records, model)
+            return task.update(j, model, partial)
+
+        step = jax.jit(step_fn)
+
+    return IMRUExecutable(
+        task=task,
+        program=program,
+        logical=logical,
+        plan=plan,
+        step=step,
+        records=records,
+        mesh=mesh,
+    )

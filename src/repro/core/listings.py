@@ -1,0 +1,210 @@
+"""The paper's Datalog programs (Listings 1 and 2), as AST constructors.
+
+These are the ground truth for the whole stack: the stratifier proves they
+are XY-stratified (Theorem 1), the algebra translator turns them into the
+Figure 2/3 logical plans, and the planner lowers those to physical plans.
+UDFs are registered by name here; concrete implementations are bound by the
+programming-model front-ends (:mod:`repro.core.imru`, :mod:`repro.core.pregel`).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Mapping, Optional
+
+from repro.core.datalog import (
+    AggExpr,
+    Aggregate,
+    Atom,
+    Comparison,
+    Const,
+    FunctionAtom,
+    Program,
+    Rule,
+    TempSucc,
+    TempVar,
+    TempZero,
+    SetTerm,
+    UDF,
+    Var,
+    fresh_var,
+)
+
+__all__ = ["pregel_program", "imru_program", "ACTIVATION_MSG"]
+
+ACTIVATION_MSG = "__ACTIVATION__"
+
+
+def pregel_program(
+    udfs: Optional[Mapping[str, Callable]] = None,
+    aggregates: Optional[Mapping[str, Aggregate]] = None,
+) -> Program:
+    """Listing 1 — the Pregel programming model.
+
+    Rules (labels match the paper):
+
+    * L1  vertex(0, Id, State)      :- data(Id, Datum), init_vertex(Id, Datum, State).
+    * L2  send(0, Id, ACTIVATION)   :- vertex(0, Id, _).
+    * L3  collect(J, Id, combine<M>):- send(J, Id, M).
+    * L4  maxVertexJ(Id, max<J>)    :- vertex(J, Id, State).
+    * L5  local(Id, State)          :- maxVertexJ(Id, J), vertex(J, Id, State).
+    * L6  superstep(J, Id, OutState, OutMsgs)
+                                    :- collect(J, Id, InMsgs), local(Id, InState),
+                                       update(J, Id, InState, InMsgs, OutState, OutMsgs).
+    * L7  vertex(J+1, Id, State)    :- superstep(J, Id, State, _), State != null.
+    * L8  send(J+1, Id, M)          :- superstep(J, _, _, {(Id, M)}).
+    """
+
+    J, Jp1, J0 = TempVar("J"), TempSucc("J"), TempZero()
+    Id, Datum, State = Var("Id"), Var("Datum"), Var("State")
+    Msg, InMsgs = Var("Msg"), Var("InMsgs")
+    InState, OutState, OutMsgs = Var("InState"), Var("OutState"), Var("OutMsgs")
+    M = Var("M")
+
+    rules = (
+        Rule(
+            Atom("vertex", (J0, Id, State), temporal=True),
+            (
+                Atom("data", (Id, Datum)),
+                FunctionAtom("init_vertex", (Id, Datum, State), n_in=2),
+            ),
+            label="L1",
+        ),
+        Rule(
+            Atom("send", (J0, Id, Const(ACTIVATION_MSG)), temporal=True),
+            (Atom("vertex", (J0, Id, fresh_var()), temporal=True),),
+            label="L2",
+        ),
+        Rule(
+            Atom("collect", (J, Id, AggExpr("combine", Msg)), temporal=True),
+            (Atom("send", (J, Id, Msg), temporal=True),),
+            label="L3",
+        ),
+        Rule(
+            Atom("maxVertexJ", (Id, AggExpr("max", Var("J")))),
+            (Atom("vertex", (J, Id, State), temporal=True),),
+            label="L4",
+            frontier=True,
+        ),
+        Rule(
+            Atom("local", (Id, State)),
+            (
+                Atom("maxVertexJ", (Id, Var("J"))),
+                Atom("vertex", (J, Id, State), temporal=True),
+            ),
+            label="L5",
+            frontier=True,
+        ),
+        Rule(
+            Atom("superstep", (J, Id, OutState, OutMsgs), temporal=True),
+            (
+                Atom("collect", (J, Id, InMsgs), temporal=True),
+                Atom("local", (Id, InState)),
+                FunctionAtom(
+                    "update",
+                    (Var("J"), Id, InState, InMsgs, OutState, OutMsgs),
+                    n_in=4,
+                ),
+            ),
+            label="L6",
+        ),
+        Rule(
+            Atom("vertex", (Jp1, Id, State), temporal=True),
+            (
+                Atom("superstep", (J, Id, State, fresh_var()), temporal=True),
+                Comparison("!=", State, Const(None)),
+            ),
+            label="L7",
+        ),
+        Rule(
+            Atom("send", (Jp1, Id, M), temporal=True),
+            (
+                Atom(
+                    "superstep",
+                    (J, fresh_var(), fresh_var(), SetTerm((Id, M))),
+                    temporal=True,
+                ),
+            ),
+            label="L8",
+        ),
+    )
+
+    udfs = dict(udfs or {})
+    registry = {
+        "init_vertex": UDF("init_vertex", udfs.get("init_vertex"), n_in=2, n_out=1),
+        "update": UDF("update", udfs.get("update"), n_in=4, n_out=2),
+    }
+    aggs = dict(aggregates or {})
+    aggs.setdefault(
+        "max",
+        Aggregate("max", zero=lambda: float("-inf"), combine=max),
+    )
+    if "combine" not in aggs:
+        raise ValueError("Pregel program requires a 'combine' aggregate")
+    return Program(
+        rules=rules,
+        edb={"data": 2},
+        udfs=registry,
+        aggregates=aggs,
+        name="pregel",
+    )
+
+
+def imru_program(
+    udfs: Optional[Mapping[str, Callable]] = None,
+    aggregates: Optional[Mapping[str, Aggregate]] = None,
+) -> Program:
+    """Listing 2 — the Iterative Map-Reduce-Update programming model.
+
+    * G1  model(0, M)            :- init_model(M).
+    * G2  collect(J, reduce<S>)  :- model(J, M), training_data(Id, R), map(R, M, S).
+    * G3  model(J+1, NewM)       :- collect(J, AggrS), model(J, M),
+                                    update(J, M, AggrS, NewM), M != NewM.
+    """
+
+    J, Jp1, J0 = TempVar("J"), TempSucc("J"), TempZero()
+    M, NewM, R, S, AggrS = Var("M"), Var("NewM"), Var("R"), Var("S"), Var("AggrS")
+    Id = Var("Id")
+
+    rules = (
+        Rule(
+            Atom("model", (J0, M), temporal=True),
+            (FunctionAtom("init_model", (M,), n_in=0),),
+            label="G1",
+        ),
+        Rule(
+            Atom("collect", (J, AggExpr("reduce", S)), temporal=True),
+            (
+                Atom("model", (J, M), temporal=True),
+                Atom("training_data", (Id, R)),
+                FunctionAtom("map", (R, M, S), n_in=2),
+            ),
+            label="G2",
+        ),
+        Rule(
+            Atom("model", (Jp1, NewM), temporal=True),
+            (
+                Atom("collect", (J, AggrS), temporal=True),
+                Atom("model", (J, M), temporal=True),
+                FunctionAtom("update", (Var("J"), M, AggrS, NewM), n_in=3),
+                Comparison("!=", M, NewM),
+            ),
+            label="G3",
+        ),
+    )
+
+    udfs = dict(udfs or {})
+    registry = {
+        "init_model": UDF("init_model", udfs.get("init_model"), n_in=0, n_out=1),
+        "map": UDF("map", udfs.get("map"), n_in=2, n_out=1),
+        "update": UDF("update", udfs.get("update"), n_in=3, n_out=1),
+    }
+    aggs = dict(aggregates or {})
+    if "reduce" not in aggs:
+        raise ValueError("IMRU program requires a 'reduce' aggregate")
+    return Program(
+        rules=rules,
+        edb={"training_data": 2},
+        udfs=registry,
+        aggregates=aggs,
+        name="imru",
+    )

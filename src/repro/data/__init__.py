@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, SyntheticLMStream, batch_for_step
+
+__all__ = ["DataConfig", "SyntheticLMStream", "batch_for_step"]

@@ -1,0 +1,3 @@
+from repro.ft.elastic import ElasticPlanner, FailureEvent, FailureInjector
+
+__all__ = ["ElasticPlanner", "FailureEvent", "FailureInjector"]

@@ -1,0 +1,398 @@
+"""Pallas TPU flash-attention kernels (forward + backward).
+
+TPU-native adaptation of blockwise online-softmax attention:
+
+* Grid ``(B, H, n_q_blocks, n_kv_blocks)`` — the last dimension iterates
+  sequentially on a TensorCore, so the running max / normalizer / output
+  accumulator live in **VMEM scratch** that persists across the kv steps
+  (the canonical TPU accumulation idiom; no atomics, no shared-memory
+  reductions — those are the GPU mechanisms this replaces).
+* BlockSpecs tile Q/K/V/O into VMEM with MXU-aligned ``(block_q, d)`` /
+  ``(block_k, d)`` tiles; ``d`` and block sizes should be multiples of 128
+  for full MXU utilization (asserted softly in ops.py).
+* Causal and sliding-window masking use 2-D ``broadcasted_iota`` (TPU needs
+  >=2-D iota); whole blocks outside the band are skipped with ``pl.when``
+  (structural band skipping — the compute saving that makes SWA
+  sub-quadratic).
+* GQA is expressed through the K/V index_map (query head ``h`` reads KV head
+  ``h // group``) — no materialized ``repeat``.
+
+The backward pass uses the standard two-kernel split with a precomputed
+``delta = rowsum(dO * O)``:
+
+* ``dq`` kernel: same grid as forward, accumulates dQ over kv blocks.
+* ``dkv`` kernel: grid ``(B, H, n_kv_blocks, n_q_blocks)`` — for a fixed KV
+  block, iterate q blocks, accumulating dK/dV in scratch.
+
+Both recompute the attention probabilities from saved (m, l) statistics —
+flash attention's memory-for-flops trade, which on TPU also keeps the
+working set inside VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = [
+    "flash_fwd",
+    "flash_bwd_dq",
+    "flash_bwd_dkv",
+    "DEFAULT_BLOCK_Q",
+    "DEFAULT_BLOCK_K",
+]
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+_NEG_INF = -1e30  # large-negative instead of -inf: keeps exp/fma well-defined
+_LANES = 128      # TPU VREG lane count; scratch stats keep 128 lanes
+
+
+def _band(qi, ki, block_q, block_k, q_off, causal, window):
+    """Whether kv block ``ki`` intersects the visible band of q block ``qi``.
+
+    ``q_off = S_kv - S_q`` aligns suffixes (decode: 1 query row sees the
+    whole cache).  Returns a traced bool.
+    """
+
+    q_lo = qi * block_q + q_off              # absolute first query row
+    q_hi = q_lo + block_q - 1
+    k_lo = ki * block_k
+    k_hi = k_lo + block_k - 1
+    ok = jnp.bool_(True)
+    if causal:
+        ok = jnp.logical_and(ok, k_lo <= q_hi)
+    if window is not None:
+        ok = jnp.logical_and(ok, k_hi > q_lo - window)
+    return ok
+
+
+def _mask(block_q, block_k, qi, ki, q_off, causal, window):
+    row = jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) \
+        + qi * block_q + q_off
+    col = jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1) \
+        + ki * block_k
+    m = jnp.ones((block_q, block_k), dtype=jnp.bool_)
+    if causal:
+        m = jnp.logical_and(m, col <= row)
+    if window is not None:
+        m = jnp.logical_and(m, col > row - window)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                m_scr, l_scr, acc_scr,
+                *, causal, window, sm_scale, block_q, block_k, q_off):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(_band(qi, ki, block_q, block_k, q_off, causal, window))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * sm_scale                                  # (bq, bk)
+        mask = _mask(block_q, block_k, qi, ki, q_off, causal, window)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_scr[...][:, :1]                    # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)    # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                        # (bq, bk)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)                # (bq, 1)
+        l_new = corr * l_scr[...][:, :1] + jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[...][:, :1]
+        o_ref[0, 0] = (
+            acc_scr[...] / jnp.where(l > 0.0, l, 1.0)
+        ).astype(o_ref.dtype)
+        m_ref[0, 0] = m_scr[...]
+        l_ref[0, 0] = l_scr[...]
+
+
+def flash_fwd(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool, window: Optional[int], sm_scale: float,
+    block_q: int = DEFAULT_BLOCK_Q, block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+):
+    """Returns (out[B,H,Sq,D], m[B,H,Sq,LANES], l[B,H,Sq,LANES])."""
+
+    B, H, Sq, D = q.shape
+    _, KH, Skv, _ = k.shape
+    group = H // KH
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    nq, nk = Sq // block_q, Skv // block_k
+    q_off = Skv - Sq
+
+    kernel = functools.partial(
+        _fwd_kernel,
+        causal=causal, window=window, sm_scale=sm_scale,
+        block_q=block_q, block_k=block_k, q_off=q_off,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, D),
+                lambda b, h, qi, ki, group=group: (b, h // group, ki, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, D),
+                lambda b, h, qi, ki, group=group: (b, h // group, ki, 0),
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, block_q, _LANES), lambda b, h, qi, ki: (b, h, qi, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_q, _LANES), lambda b, h, qi, ki: (b, h, qi, 0)
+            ),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+            jax.ShapeDtypeStruct((B, H, Sq, _LANES), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, Sq, _LANES), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Backward: dQ kernel (grid = B, H, nq, nk — accumulate over kv blocks)
+# ---------------------------------------------------------------------------
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, delta_ref,
+                   dq_ref, dq_scr,
+                   *, causal, window, sm_scale, block_q, block_k, q_off):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    @pl.when(_band(qi, ki, block_q, block_k, q_off, causal, window))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        m = m_ref[0, 0][:, :1]
+        l = l_ref[0, 0][:, :1]
+        delta = delta_ref[0, 0][:, :1]
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * sm_scale
+        mask = _mask(block_q, block_k, qi, ki, q_off, causal, window)
+        s = jnp.where(mask, s, _NEG_INF)
+        p = jnp.exp(s - m) / jnp.where(l > 0.0, l, 1.0)
+        p = jnp.where(mask, p, 0.0)
+        dp = jax.lax.dot_general(
+            do, v, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        ds = p * (dp - delta) * sm_scale
+        dq_scr[...] += jax.lax.dot(ds, k, preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        dq_ref[0, 0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def flash_bwd_dq(q, k, v, do, m, l, delta,
+                 *, causal, window, sm_scale,
+                 block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K,
+                 interpret=False):
+    B, H, Sq, D = q.shape
+    _, KH, Skv, _ = k.shape
+    group = H // KH
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    nq, nk = Sq // block_q, Skv // block_k
+    q_off = Skv - Sq
+
+    kernel = functools.partial(
+        _bwd_dq_kernel,
+        causal=causal, window=window, sm_scale=sm_scale,
+        block_q=block_q, block_k=block_k, q_off=q_off,
+    )
+    stat_spec = pl.BlockSpec(
+        (1, 1, block_q, _LANES), lambda b, h, qi, ki: (b, h, qi, 0)
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, D),
+                lambda b, h, qi, ki, group=group: (b, h // group, ki, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, D),
+                lambda b, h, qi, ki, group=group: (b, h // group, ki, 0),
+            ),
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            stat_spec, stat_spec, stat_spec,
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, m, l, delta)
+
+
+# ---------------------------------------------------------------------------
+# Backward: dK/dV kernel (grid = B, H, nk, nq — accumulate over q blocks)
+# ---------------------------------------------------------------------------
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, delta_ref,
+                    dk_ref, dv_ref, dk_scr, dv_scr,
+                    *, causal, window, sm_scale, block_q, block_k, q_off):
+    ki = pl.program_id(2)
+    qi = pl.program_id(3)
+    nq = pl.num_programs(3)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    @pl.when(_band(qi, ki, block_q, block_k, q_off, causal, window))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        m = m_ref[0, 0][:, :1]
+        l = l_ref[0, 0][:, :1]
+        delta = delta_ref[0, 0][:, :1]
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * sm_scale
+        mask = _mask(block_q, block_k, qi, ki, q_off, causal, window)
+        s = jnp.where(mask, s, _NEG_INF)
+        p = jnp.exp(s - m) / jnp.where(l > 0.0, l, 1.0)   # (bq, bk)
+        p = jnp.where(mask, p, 0.0)
+        dv_scr[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                  # (bk, d)
+        dp = jax.lax.dot_general(
+            do, v, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                  # (bq, bk)
+        ds = p * (dp - delta) * sm_scale
+        dk_scr[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                  # (bk, d)
+
+    @pl.when(qi == nq - 1)
+    def _finalize():
+        dk_ref[0, 0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def flash_bwd_dkv(q, k, v, do, m, l, delta,
+                  *, causal, window, sm_scale,
+                  block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K,
+                  interpret=False):
+    """Returns per-query-head dK/dV of shape [B, H, Skv, D]; the GQA group
+    sum (H -> KH) happens in ops.py (cheap XLA reduce, keeps the kernel
+    write pattern trivially parallel)."""
+
+    B, H, Sq, D = q.shape
+    _, KH, Skv, _ = k.shape
+    group = H // KH
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    nq, nk = Sq // block_q, Skv // block_k
+    q_off = Skv - Sq
+
+    kernel = functools.partial(
+        _bwd_dkv_kernel,
+        causal=causal, window=window, sm_scale=sm_scale,
+        block_q=block_q, block_k=block_k, q_off=q_off,
+    )
+    stat_spec = pl.BlockSpec(
+        (1, 1, block_q, _LANES), lambda b, h, ki, qi: (b, h, qi, 0)
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nk, nq),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, ki, qi: (b, h, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, D),
+                lambda b, h, ki, qi, group=group: (b, h // group, ki, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, D),
+                lambda b, h, ki, qi, group=group: (b, h // group, ki, 0),
+            ),
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, ki, qi: (b, h, qi, 0)),
+            stat_spec, stat_spec, stat_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ki, qi: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ki, qi: (b, h, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Skv, D), q.dtype),
+            jax.ShapeDtypeStruct((B, H, Skv, D), q.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_k, D), jnp.float32),
+            pltpu.VMEM((block_k, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, m, l, delta)

@@ -1,0 +1,110 @@
+"""jit'd public wrapper for the flash-attention Pallas kernels.
+
+``flash_attention`` is differentiable (custom_vjp wiring the dq/dkv Pallas
+kernels), GQA-aware, and supports causal + sliding-window masking.  On
+non-TPU backends (this CPU container) it runs the kernels in interpret mode
+when ``interpret=True`` (tests) or falls back to the pure-jnp reference
+(production CPU path) — the TPU path compiles the real kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as K
+from repro.kernels.flash_attention.ref import attention_reference
+
+__all__ = ["flash_attention", "mha_reference"]
+
+mha_reference = attention_reference
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8)
+)
+def _flash(q, k, v, causal, window, sm_scale, block_q, block_k, interpret):
+    out, _, _ = K.flash_fwd(
+        q, k, v, causal=causal, window=window, sm_scale=sm_scale,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, sm_scale, block_q, block_k, interpret):
+    out, m, l = K.flash_fwd(
+        q, k, v, causal=causal, window=window, sm_scale=sm_scale,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out, (q, k, v, out, m, l)
+
+
+def _flash_bwd(causal, window, sm_scale, block_q, block_k, interpret,
+               residuals, do):
+    q, k, v, out, m, l = residuals
+    B, H, Sq, D = q.shape
+    _, KH, Skv, _ = k.shape
+    group = H // KH
+    # delta = rowsum(dO * O), broadcast to the stats' lane layout.
+    delta = jnp.sum(
+        do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1,
+        keepdims=True,
+    )
+    delta = jnp.broadcast_to(delta, (B, H, Sq, K._LANES))
+    dq = K.flash_bwd_dq(
+        q, k, v, do, m, l, delta,
+        causal=causal, window=window, sm_scale=sm_scale,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    dk_h, dv_h = K.flash_bwd_dkv(
+        q, k, v, do, m, l, delta,
+        causal=causal, window=window, sm_scale=sm_scale,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    # GQA group-sum: fold the query-head group back onto its KV head.
+    dk = dk_h.reshape(B, KH, group, Skv, D).sum(axis=2).astype(k.dtype)
+    dv = dv_h.reshape(B, KH, group, Skv, D).sum(axis=2).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    sm_scale: Optional[float] = None,
+    block_q: int = K.DEFAULT_BLOCK_Q,
+    block_k: int = K.DEFAULT_BLOCK_K,
+    interpret: Optional[bool] = None,
+    use_kernel: Optional[bool] = None,
+) -> jax.Array:
+    """Blockwise attention.  q:[B,H,Sq,D], k/v:[B,KH,Skv,D] -> [B,H,Sq,D].
+
+    ``use_kernel=None`` auto-selects: Pallas on TPU, reference elsewhere
+    (tests pass ``interpret=True`` to execute the kernel body on CPU).
+    """
+
+    if sm_scale is None:
+        sm_scale = 1.0 / (q.shape[-1] ** 0.5)
+    if use_kernel is None:
+        use_kernel = _on_tpu() or bool(interpret)
+    if not use_kernel:
+        return attention_reference(
+            q, k, v, causal=causal, window=window, sm_scale=sm_scale
+        )
+    return _flash(
+        q, k, v, causal, window, sm_scale, block_q, block_k,
+        bool(interpret) and not _on_tpu(),
+    )

@@ -1,0 +1,61 @@
+"""Pure-jnp oracle for blockwise (flash) attention.
+
+Semantics contract shared with the Pallas kernel and swept by the tests:
+
+* ``q``: f32/bf16[B, H, S_q, D]; ``k``/``v``: [B, KH, S_kv, D] with
+  ``H % KH == 0`` (GQA: query-head group ``H // KH`` shares one KV head).
+* ``causal=True`` masks ``col > row + (S_kv - S_q)`` (aligned suffixes, so a
+  single decode row attends to the whole cache).
+* ``window=w`` additionally masks ``col <= row_abs - w`` (sliding-window /
+  Mistral-style SWA).  ``window=None`` means full attention.
+* softmax is computed in f32 regardless of input dtype; output cast back.
+* Rows with no visible keys (fully masked) return zeros.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_reference"]
+
+
+def attention_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    sm_scale: Optional[float] = None,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    Bk, KH, Skv, Dk = k.shape
+    assert (B, D) == (Bk, Dk) and H % KH == 0, (q.shape, k.shape)
+    group = H // KH
+    scale = sm_scale if sm_scale is not None else 1.0 / (D ** 0.5)
+
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) * scale
+
+    row = jnp.arange(Sq)[:, None] + (Skv - Sq)  # absolute key-space position
+    col = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= col <= row
+    if window is not None:
+        mask &= col > row - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)  # fully-masked rows
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = jnp.where(l > 0, p / jnp.maximum(l, 1e-30), 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

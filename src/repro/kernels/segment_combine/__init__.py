@@ -1,0 +1,3 @@
+from repro.kernels.segment_combine.ops import segment_combine
+
+__all__ = ["segment_combine"]

@@ -1,0 +1,36 @@
+"""Public wrapper for the sorted segment combiner.
+
+Auto-selects the Pallas kernel on TPU (or interpret mode when requested) and
+the jnp reference elsewhere — same dispatch contract as
+:mod:`repro.kernels.flash_attention.ops`.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.segment_combine.kernel import segment_combine_pallas
+from repro.kernels.segment_combine.ref import segment_combine_reference
+
+__all__ = ["segment_combine"]
+
+
+def segment_combine(
+    values: jax.Array,
+    segment_ids: jax.Array,
+    n_segments: int,
+    op: str = "sum",
+    *,
+    interpret: Optional[bool] = None,
+    use_kernel: Optional[bool] = None,
+) -> jax.Array:
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu" or bool(interpret)
+    if not use_kernel:
+        return segment_combine_reference(values, segment_ids, n_segments, op)
+    return segment_combine_pallas(
+        values, segment_ids, n_segments, op,
+        interpret=bool(interpret) and jax.default_backend() != "tpu",
+    )

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the sorted segment combiner (paper Fig. 4 O14/O15).
+
+Contract: ``values`` f32[E, F], ``segment_ids`` int32[E] sorted ascending in
+[0, n_segments) (negative ids = padding rows, dropped), combine op in
+{sum, max, min}.  Output [n_segments, F].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["segment_combine_reference"]
+
+
+def segment_combine_reference(
+    values: jax.Array,
+    segment_ids: jax.Array,
+    n_segments: int,
+    op: str = "sum",
+) -> jax.Array:
+    valid = segment_ids >= 0
+    ids = jnp.where(valid, segment_ids, n_segments)  # spill row
+    if op == "sum":
+        vals = jnp.where(valid[:, None], values, 0.0)
+        out = jax.ops.segment_sum(vals, ids, n_segments + 1,
+                                  indices_are_sorted=False)
+    elif op == "max":
+        vals = jnp.where(valid[:, None], values, -jnp.inf)
+        out = jax.ops.segment_max(vals, ids, n_segments + 1,
+                                  indices_are_sorted=False)
+        out = jnp.where(jnp.isfinite(out), out, 0.0)
+    elif op == "min":
+        vals = jnp.where(valid[:, None], values, jnp.inf)
+        out = jax.ops.segment_min(vals, ids, n_segments + 1,
+                                  indices_are_sorted=False)
+        out = jnp.where(jnp.isfinite(out), out, 0.0)
+    else:
+        raise ValueError(op)
+    return out[:n_segments]

@@ -1,0 +1,382 @@
+"""Post-SPMD HLO analysis: trip-corrected roofline terms + collective census.
+
+``compiled.cost_analysis()`` counts every ``while`` body ONCE (verified in
+tests), so for scan-over-layers programs it understates FLOPs/bytes by the
+loop trip counts.  This module re-derives all three roofline inputs from
+``compiled.as_text()`` with loop attribution:
+
+1. **computation graph** — the module is split into named computations;
+   ``while`` instructions link bodies/conditions (trip count = the loop
+   bound constant in the condition computation), ``fusion``/``call``/
+   ``to_apply`` link callees.  Every computation gets a multiplier =
+   product of trip counts on its reference chain.
+2. **FLOPs** — ``dot``/``convolution`` instructions contribute
+   ``2 * prod(output) * K`` (K = contracted extent, from the lhs operand's
+   shape + ``lhs_contracting_dims``), times the multiplier.  Elementwise
+   FLOPs are ignored (matmul-dominated workloads; recorded as methodology).
+3. **bytes** — instructions in *dataflow* computations (entry + while
+   bodies; fusion internals excluded — they never touch HBM) contribute
+   ``output bytes + operand bytes``, times the multiplier.
+4. **collectives** — per-op operand bytes and ring link volumes
+   (2(n-1)/n all-reduce, (n-1)/n gather/scatter/a2a), attributed to ICI or
+   DCN by reconstructing replica groups (iota or explicit format) and
+   checking whether any group crosses a pod boundary.
+
+The three terms (assignment formulas, evaluated on the per-chip program):
+
+    compute    = dot_FLOPs_per_device / peak_FLOPs
+    memory     = bytes_per_device / HBM_bw
+    collective = ici_link_bytes / ici_bw + dcn_link_bytes / dcn_bw
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.hardware import HardwareSpec, TPU_V5E
+
+__all__ = ["HLOCensus", "analyze_hlo", "roofline_terms"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^=]*?\))|(?:[\w\[\],{}]+))\s+"
+    r"([\w\-]+)\("
+)
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)"
+)
+_CALL_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_IOTA_GROUPS_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?"
+)
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{(\{[\d,{}\s]*\})\}")
+_CONST_RE = re.compile(r"[su]32\[\]\s+constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_FREE_OPS = {"parameter", "tuple", "get-tuple-element", "constant",
+             "bitcast", "after-all", "partition-id", "replica-id"}
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes_fast(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = int(np.prod(dims)) if dims else 1
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_info(line: str, pod_stride: int) -> Tuple[int, bool]:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        g, n = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        perm = (
+            [int(x) for x in m.group(4).split(",")]
+            if m.group(4) else list(range(len(dims)))
+        )
+        ids = np.arange(int(np.prod(dims))).reshape(dims).transpose(perm)
+        ids = ids.reshape(g, n)
+        crosses = bool(
+            ((ids // pod_stride).max(axis=1)
+             != (ids // pod_stride).min(axis=1)).any()
+        ) if pod_stride else False
+        return n, crosses
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        groups = [
+            [int(x) for x in grp.split(",") if x.strip()]
+            for grp in re.findall(r"\{([\d,\s]*)\}", m.group(1))
+        ]
+        n = max((len(g) for g in groups), default=1)
+        crosses = False
+        if pod_stride:
+            for g in groups:
+                if g and (max(g) // pod_stride != min(g) // pod_stride):
+                    crosses = True
+                    break
+        return n, crosses
+    pairs = re.search(r"source_target_pairs=\{(.*?)\}\s*[,)]", line)
+    if pairs:
+        ids = [int(x) for x in re.findall(r"\d+", pairs.group(1))]
+        crosses = False
+        if pod_stride:
+            it = iter(ids)
+            for a, b in zip(it, it):
+                if a // pod_stride != b // pod_stride:
+                    crosses = True
+                    break
+        return 2, crosses
+    return 1, False
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*)?\{", line)
+            if m and not line.startswith(" "):
+                cur = "ENTRY" if line.startswith("ENTRY") else m.group(1)
+                comps[cur] = []
+            continue
+        if line.startswith("}") or line.strip() == "}":
+            cur = None
+            continue
+        comps[cur].append(line)
+    return comps
+
+
+def _operands(line: str, op: str) -> List[str]:
+    idx = line.find(op + "(")
+    if idx < 0:
+        return []
+    depth, start = 0, idx + len(op) + 1
+    end = start
+    for i in range(start, len(line)):
+        ch = line[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                end = i
+                break
+            depth -= 1
+    args = line[start:end]
+    return re.findall(r"%([\w.\-]+)", args)
+
+
+@dataclass
+class HLOCensus:
+    dot_flops: float = 0.0
+    bytes_accessed: float = 0.0
+    vmem_region_bytes: float = 0.0   # traffic inside *_vmem_region scopes:
+    # on TPU these regions are Pallas kernels whose intermediates (attention
+    # probabilities, SSD decay tiles) never leave VMEM; the XLA-fallback
+    # lowering materializes them, so the census separates this class.
+    by_type_bytes: Dict[str, float] = field(default_factory=dict)
+    by_type_count: Dict[str, int] = field(default_factory=dict)
+    ici_link_bytes: float = 0.0
+    dcn_link_bytes: float = 0.0
+    total_operand_bytes: float = 0.0
+    while_trips: Dict[str, int] = field(default_factory=dict)
+    details: List[Dict] = field(default_factory=list)
+
+    def add_collective(self, kind: str, out_bytes: int, group: int,
+                       crosses: bool, mult: float, comp: str) -> None:
+        if kind == "all-gather":
+            operand = out_bytes / max(group, 1)
+        elif kind == "reduce-scatter":
+            operand = out_bytes * max(group, 1)
+        else:
+            operand = out_bytes
+        n = max(group, 1)
+        if kind == "all-reduce":
+            link = 2.0 * operand * (n - 1) / n
+        elif kind == "all-gather":
+            link = out_bytes * (n - 1) / n
+        elif kind in ("reduce-scatter", "all-to-all"):
+            link = operand * (n - 1) / n
+        else:
+            link = operand
+        self.by_type_bytes[kind] = self.by_type_bytes.get(kind, 0.0) \
+            + operand * mult
+        self.by_type_count[kind] = self.by_type_count.get(kind, 0) + 1
+        self.total_operand_bytes += operand * mult
+        if crosses:
+            self.dcn_link_bytes += link * mult
+        else:
+            self.ici_link_bytes += link * mult
+        self.details.append({
+            "computation": comp, "kind": kind, "bytes": out_bytes,
+            "group": group, "crosses_pod": crosses, "mult": mult,
+        })
+
+
+def analyze_hlo(hlo: str, n_devices: int, pod_stride: int = 0) -> HLOCensus:
+    comps = _split_computations(hlo)
+
+    # ---- reference graph + trip counts -------------------------------------
+    parents: Dict[str, Tuple[str, int]] = {}   # callee -> (caller, trip)
+    dataflow = {"ENTRY"}
+    for cname, lines in comps.items():
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trip = 1
+                for cl in comps.get(cond, ()):
+                    cm = _CONST_RE.search(cl)
+                    if cm:
+                        trip = int(cm.group(1))
+                parents[body] = (cname, trip)
+                parents[cond] = (cname, trip)
+                dataflow.add(body)
+                continue
+            cm = _CALL_RE.search(line)
+            if cm and cm.group(1) in comps:
+                parents.setdefault(cm.group(1), (cname, 1))
+
+    def multiplier(cname: str, depth: int = 0) -> float:
+        if depth > 16 or cname not in parents:
+            return 1.0
+        caller, trip = parents[cname]
+        return trip * multiplier(caller, depth + 1)
+
+    census = HLOCensus()
+    census.while_trips = {
+        b: t for b, (c, t) in parents.items() if t > 1
+    }
+
+    # ---- per-computation symbol tables + accounting -------------------------
+    for cname, lines in comps.items():
+        mult = multiplier(cname)
+        symtab: Dict[str, str] = {}
+        parsed = []
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, type_str, op = m.group(1), m.group(2), m.group(3)
+            symtab[name] = type_str
+            parsed.append((name, type_str, op, line))
+
+        in_dataflow = cname in dataflow
+        for name, type_str, op, line in parsed:
+            if op in ("dot", "convolution"):
+                out_elems = sum(
+                    int(np.prod(d)) if d else 1
+                    for _, d in _shape_dims(type_str)
+                )
+                k = 1
+                ops_ = _operands(line, op)
+                cm = _CONTRACT_RE.search(line)
+                if cm and ops_:
+                    lhs_type = symtab.get(ops_[0], "")
+                    dims_list = _shape_dims(lhs_type)
+                    if dims_list:
+                        lhs_dims = dims_list[0][1]
+                        for ci in cm.group(1).split(","):
+                            if ci and int(ci) < len(lhs_dims):
+                                k *= lhs_dims[int(ci)]
+                census.dot_flops += 2.0 * out_elems * k * mult
+
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLLS and not op.endswith("-done"):
+                group, crosses = _group_info(line, pod_stride)
+                census.add_collective(
+                    base, _shape_bytes_fast(type_str), group, crosses,
+                    mult, cname,
+                )
+
+            if in_dataflow and op not in _FREE_OPS:
+                # Slicing/gathering ops only touch the sliced region, not
+                # the whole operand (counting the full operand would charge
+                # a layer's dynamic-slice of the stacked params with the
+                # entire stack, L times over).
+                ops_ = _operands(line, op)
+                if op in ("dynamic-slice", "slice", "gather"):
+                    nbytes = 2 * _shape_bytes_fast(type_str)
+                elif op == "dynamic-update-slice":
+                    upd = symtab.get(ops_[1], "") if len(ops_) > 1 else ""
+                    nbytes = 2 * _shape_bytes_fast(upd)
+                elif op == "scatter":
+                    upd = symtab.get(ops_[2], "") if len(ops_) > 2 else ""
+                    nbytes = 2 * _shape_bytes_fast(upd)
+                elif op in ("while", "conditional", "call"):
+                    # control flow: bodies are accounted directly
+                    nbytes = 0
+                elif op == "fusion" and "dynamic-slice" in name \
+                        and "dynamic-update-slice" not in name:
+                    # fusion rooted at a dynamic-slice of a big (stacked)
+                    # buffer: traffic ~ the slice, not the stack
+                    nbytes = 2 * _shape_bytes_fast(type_str)
+                elif op == "fusion" and "dynamic-update-slice" in name:
+                    # in-place DUS fusion (scan ys-stacking, cache update):
+                    # real traffic is the written slice, not the aliased
+                    # buffer.  The update operand is the largest operand
+                    # strictly smaller than the output.
+                    out_b = _shape_bytes_fast(type_str)
+                    upd_b = max(
+                        (
+                            _shape_bytes_fast(symtab.get(o, ""))
+                            for o in ops_
+                            if 0 < _shape_bytes_fast(symtab.get(o, "")) < out_b
+                        ),
+                        default=out_b,
+                    )
+                    nbytes = 2 * upd_b
+                else:
+                    nbytes = _shape_bytes_fast(type_str)
+                    for operand in ops_:
+                        nbytes += _shape_bytes_fast(symtab.get(operand, ""))
+                census.bytes_accessed += nbytes * mult
+                if "_vmem_region" in line:
+                    census.vmem_region_bytes += nbytes * mult
+
+    return census
+
+
+def roofline_terms(
+    census: HLOCensus,
+    n_devices: int,
+    hw: HardwareSpec = TPU_V5E,
+    raw_cost: Optional[Dict[str, float]] = None,
+) -> Dict[str, float]:
+    compute_s = census.dot_flops / hw.peak_flops_bf16
+    # HBM term excludes *_vmem_region traffic: on TPU those regions compile
+    # to the Pallas kernels (kernels/flash_attention, SSD) whose
+    # intermediates stay in VMEM; the raw census is reported alongside.
+    hbm_bytes = census.bytes_accessed - census.vmem_region_bytes
+    memory_s = hbm_bytes / hw.hbm_bw
+    collective_s = (
+        census.ici_link_bytes / hw.ici_bw
+        + census.dcn_link_bytes / hw.dcn_bw
+    )
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "memory_s_xla_fallback": census.bytes_accessed / hw.hbm_bw,
+        "vmem_region_bytes": census.vmem_region_bytes,
+    }
+    three = {k: terms[k] for k in ("compute_s", "memory_s", "collective_s")}
+    dominant = max(three, key=three.get)
+    terms.update({
+        "dominant": dominant,
+        "step_lower_bound_s": max(three.values()),
+        "hlo_flops_per_device": census.dot_flops,
+        "hlo_bytes_per_device": census.bytes_accessed,
+        "ici_link_bytes": census.ici_link_bytes,
+        "dcn_link_bytes": census.dcn_link_bytes,
+        "collective_operand_bytes": census.total_operand_bytes,
+    })
+    if raw_cost:
+        terms["xla_cost_flops_uncorrected"] = raw_cost.get("flops", 0.0)
+        terms["xla_cost_bytes_uncorrected"] = raw_cost.get(
+            "bytes accessed", 0.0)
+    return terms

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state; callers (dryrun, launchers)
+decide when devices are realized.  The single-pod mesh is 16 x 16 = 256
+chips (data x model); the multi-pod mesh adds a leading pod axis:
+2 x 16 x 16 = 512 chips.  Axis order puts ``pod`` outermost so consecutive
+device ids share a pod — intra-pod collectives stay on ICI and the cross-pod
+hop is the paper's 1-level aggregation tree over DCN.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_spec_of", "SINGLE_POD_AXES",
+           "MULTI_POD_AXES"]
+
+SINGLE_POD_AXES = (("data", 16), ("model", 16))
+MULTI_POD_AXES = (("pod", 2), ("data", 16), ("model", 16))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def mesh_spec_of(mesh) -> "MeshSpec":
+    from repro.core.hardware import MeshSpec
+
+    return MeshSpec(
+        tuple((n, int(s)) for n, s in zip(mesh.axis_names, mesh.devices.shape))
+    )

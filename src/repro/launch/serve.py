@@ -1,0 +1,82 @@
+"""Serve-step builders: prefill and decode as jitted SPMD programs.
+
+``decode_step`` is the paper's fixpoint viewed at token granularity: carried
+state = (KV cache / SSM state, position), loop body = one superstep of the
+serving dataflow.  The cache is donated so the update is in-place (the
+paper's B-tree primary-key update, TPU-native).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.lm_planner import LMPlan
+from repro.models import lm
+from repro.models.common import ArchConfig
+from repro.parallel import (
+    activation_sharding_context,
+    logical_to_spec,
+)
+from repro.launch.train import batch_shardings, param_shardings
+
+__all__ = ["cache_shardings", "build_prefill_step", "build_decode_step",
+           "greedy_sample"]
+
+
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, rules, batch: int, seq: int):
+    axes = lm.cache_axes(cfg, batch, seq)
+    abstract = lm.abstract_cache(cfg, batch, seq)
+    return jax.tree_util.tree_map(
+        lambda ax, a: NamedSharding(
+            mesh, logical_to_spec(rules, ax, shape=a.shape, mesh=mesh)
+        ),
+        axes, abstract,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+
+
+def build_prefill_step(plan: LMPlan, mesh: Optional[Mesh], cache_len: int):
+    cfg = plan.cfg
+
+    def prefill_fn(params, batch):
+        with activation_sharding_context(mesh, plan.rules):
+            return lm.prefill(
+                params, batch["tokens"], cfg, cache_len,
+                enc_input=batch.get("enc_input"),
+                remat_policy=plan.remat,
+            )
+
+    if mesh is None:
+        return jax.jit(prefill_fn), None
+    return jax.jit(prefill_fn), param_shardings(cfg, mesh, plan.rules)
+
+
+def build_decode_step(plan: LMPlan, mesh: Optional[Mesh]):
+    cfg = plan.cfg
+
+    def decode_fn(params, cache, token, pos):
+        with activation_sharding_context(mesh, plan.rules):
+            return lm.decode_step(params, cache, token, pos, cfg)
+
+    if mesh is None:
+        return jax.jit(decode_fn, donate_argnums=(1,)), None, None
+
+    p_sh = param_shardings(cfg, mesh, plan.rules)
+
+    def c_sh(batch: int, seq: int):
+        return cache_shardings(cfg, mesh, plan.rules, batch, seq)
+
+    jitted = jax.jit(decode_fn, donate_argnums=(1,))
+    return jitted, p_sh, c_sh
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]

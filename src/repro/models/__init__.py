@@ -1,0 +1,4 @@
+from repro.models.common import ArchConfig
+from repro.models.registry import build_model
+
+__all__ = ["ArchConfig", "build_model"]

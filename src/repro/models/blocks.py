@@ -1,0 +1,725 @@
+"""Layer blocks for every assigned architecture family.
+
+Each family provides three things, consumed by :mod:`repro.models.lm`:
+
+* ``<family>_layer_specs(cfg)`` — pytree of :class:`ParamSpec` (shape +
+  logical sharding axes): the single source of truth for init, abstract
+  (dry-run) params, and sharding.
+* ``<family>_layer_apply(params, x, ctx)`` — the layer forward.  ``ctx``
+  bundles mode ("train" | "prefill" | "decode"), rope tables, cache slice
+  and position; returns ``(y, new_cache)``.
+* cache spec builders for serving.
+
+All mixers keep softmax/scan statistics in f32 and matmuls in the config's
+compute dtype; activations carry logical sharding annotations only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import (
+    ArchConfig,
+    apply_rope,
+    chunked_attention,
+    decode_attention,
+    dtype_of,
+    rms_norm,
+)
+from repro.parallel import ambient_axis_size, shard
+
+__all__ = [
+    "ParamSpec",
+    "LayerCtx",
+    "layer_specs",
+    "layer_apply",
+    "layer_cache_specs",
+    "attention_mixer",
+    "ssm_mixer",
+    "mlp_apply",
+]
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | small_normal
+    dtype: Optional[str] = None  # override param dtype (e.g. f32 for norms)
+
+
+@dataclass
+class LayerCtx:
+    cfg: ArchConfig
+    mode: str                    # train | prefill | decode
+    sin: Optional[jax.Array] = None    # rope tables for current positions
+    cos: Optional[jax.Array] = None
+    pos: Optional[jax.Array] = None    # scalar int32 (decode) / None
+    cache_len: int = 0
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None  # whisper
+    causal: bool = True
+
+
+def _cdt(cfg):
+    return dtype_of(cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ArchConfig, d_ff: Optional[int] = None) -> Dict[str, ParamSpec]:
+    E, F = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_type == "swiglu":
+        return {
+            "w_gate": ParamSpec((E, F), ("embed", "ffn")),
+            "w_up": ParamSpec((E, F), ("embed", "ffn")),
+            "w_down": ParamSpec((F, E), ("ffn", "embed"), init="small_normal"),
+        }
+    return {
+        "w_up": ParamSpec((E, F), ("embed", "ffn")),
+        "b_up": ParamSpec((F,), ("ffn",), init="zeros"),
+        "w_down": ParamSpec((F, E), ("ffn", "embed"), init="small_normal"),
+        "b_down": ParamSpec((E,), ("embed",), init="zeros"),
+    }
+
+
+def mlp_apply(p: Dict[str, jax.Array], x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    dt = _cdt(cfg)
+    x = x.astype(dt)
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(dt)) * (x @ p["w_up"].astype(dt))
+        h = shard(h, "batch", "seq", "ffn")
+        return h @ p["w_down"].astype(dt)
+    h = jax.nn.gelu(x @ p["w_up"].astype(dt) + p["b_up"].astype(dt))
+    h = shard(h, "batch", "seq", "ffn")
+    return h @ p["w_down"].astype(dt) + p["b_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention mixer (dense / moe / hybrid / whisper self+cross)
+# ---------------------------------------------------------------------------
+
+
+def attention_specs(cfg: ArchConfig, cross: bool = False) -> Dict[str, ParamSpec]:
+    E, H, KH, D = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    specs = {
+        "wq": ParamSpec((E, H * D), ("embed", "qkv")),
+        "wk": ParamSpec((E, KH * D), ("embed", "qkv")),
+        "wv": ParamSpec((E, KH * D), ("embed", "qkv")),
+        "wo": ParamSpec((H * D, E), ("qkv", "embed"), init="small_normal"),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec((D,), (None,), init="ones", dtype="float32")
+        specs["k_norm"] = ParamSpec((D,), (None,), init="ones", dtype="float32")
+    return specs
+
+
+def _qkv(p, x, cfg, rope_tabs, *, skip_rope=False):
+    dt = _cdt(cfg)
+    B, S, _ = x.shape
+    H, KH, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x.astype(dt) @ p["wq"].astype(dt)).reshape(B, S, H, D)
+    k = (x.astype(dt) @ p["wk"].astype(dt)).reshape(B, S, KH, D)
+    v = (x.astype(dt) @ p["wv"].astype(dt)).reshape(B, S, KH, D)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if not skip_rope and rope_tabs[0] is not None:
+        sin, cos = rope_tabs
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def _maybe_repeat_kv(k, v, cfg):
+    """GQA under TP: when query heads divide the model axis but KV heads do
+    not (8 kv heads on a 16-way axis), replicate-and-repeat KV to the full
+    head count before attention — the repeat from replicated KV is a local
+    slice per shard (no collective), and every attention einsum then shards
+    cleanly on heads (Megatron's kv-replication-within-tp-group,
+    TPU-native).  The KV *cache* always stores the raw KH heads."""
+
+    H, KH = cfg.n_heads, cfg.n_kv_heads
+    tp = ambient_axis_size("model")
+    if tp > 1 and H % tp == 0 and KH % tp != 0 and H != KH:
+        group = H // KH
+        k = shard(jnp.repeat(k, group, axis=2), "batch", "seq", "heads", None)
+        v = shard(jnp.repeat(v, group, axis=2), "batch", "seq", "heads", None)
+    return k, v
+
+
+def attention_mixer(
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    ctx: LayerCtx,
+    cache: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    cfg = ctx.cfg
+    dt = _cdt(cfg)
+    B, S, _ = x.shape
+    H, KH, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    if ctx.mode == "decode":
+        q, k_new, v_new = _qkv(p, x, cfg, (ctx.sin, ctx.cos))
+        L = cache["k"].shape[1]
+        slot = ctx.pos % L if cfg.window is not None else ctx.pos
+        k_c = lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+        v_c = lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+        k_c = shard(k_c, "batch", "kv_seq", None, None)
+        v_c = shard(v_c, "batch", "kv_seq", None, None)
+        slots = jnp.arange(L)
+        if cfg.window is not None:
+            # Ring cache: slot i holds absolute position p = the largest
+            # p <= pos with p % L == i.  Visible iff p exists and lies in
+            # the window (pos - window, pos].
+            p_abs = ctx.pos - ((ctx.pos - slots) % L)
+            valid = jnp.logical_and(p_abs >= 0, p_abs > ctx.pos - cfg.window)
+        else:
+            valid = slots <= ctx.pos
+        valid = jnp.broadcast_to(valid[None, :], (B, L))
+        out = decode_attention(q, k_c, v_c, valid)
+        new_cache = {"k": k_c, "v": v_c}
+    else:
+        q, k, v = _qkv(p, x, cfg, (ctx.sin, ctx.cos))
+        k_att, v_att = _maybe_repeat_kv(k, v, cfg)
+        out = chunked_attention(
+            q, k_att, v_att, causal=ctx.causal, window=cfg.window
+        )
+        new_cache = None
+        if ctx.mode == "prefill":
+            Lc = ctx.cache_len
+            if cfg.window is not None and Lc < S:
+                k_keep, v_keep = k[:, -Lc:], v[:, -Lc:]
+                # ring layout: slot i holds absolute position p, p % Lc == i
+                roll = S % Lc
+                k_keep = jnp.roll(k_keep, roll, axis=1)
+                v_keep = jnp.roll(v_keep, roll, axis=1)
+            else:
+                pad = Lc - S
+                k_keep = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v_keep = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            new_cache = {
+                "k": shard(k_keep, "batch", "kv_seq", None, None),
+                "v": shard(v_keep, "batch", "kv_seq", None, None),
+            }
+    out = shard(out.reshape(B, S, H * D), "batch", "seq", "qkv")
+    y = out.astype(dt) @ p["wo"].astype(dt)
+    return y, new_cache
+
+
+def attention_cache_specs(cfg: ArchConfig, batch: int, seq: int):
+    L = min(seq, cfg.window) if cfg.window is not None else seq
+    kv = (batch, L, cfg.n_kv_heads, cfg.hd)
+    axes = ("batch", "kv_seq", None, None)
+    return {
+        "k": ParamSpec(kv, axes, init="zeros", dtype=cfg.compute_dtype),
+        "v": ParamSpec(kv, axes, init="zeros", dtype=cfg.compute_dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA mixer (MiniCPM3 / DeepSeek-style multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def mla_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    E, H = cfg.d_model, cfg.n_heads
+    Qr, KVr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nd, rd, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    return {
+        "q_down": ParamSpec((E, Qr), ("embed", None)),
+        "q_norm": ParamSpec((Qr,), (None,), init="ones", dtype="float32"),
+        "q_up": ParamSpec((Qr, H * (nd + rd)), (None, "qkv")),
+        "kv_down": ParamSpec((E, KVr + rd), ("embed", None)),
+        "kv_norm": ParamSpec((KVr,), (None,), init="ones", dtype="float32"),
+        "k_up": ParamSpec((KVr, H * nd), ("kv_lora", "qkv")),
+        "v_up": ParamSpec((KVr, H * vd), ("kv_lora", "qkv")),
+        "wo": ParamSpec((H * vd, E), ("qkv", "embed"), init="small_normal"),
+    }
+
+
+def mla_mixer(p, x, ctx, cache=None):
+    cfg = ctx.cfg
+    dt = _cdt(cfg)
+    B, S, E = x.shape
+    H = cfg.n_heads
+    nd, rd, vd, KVr = (cfg.nope_head_dim, cfg.rope_head_dim,
+                       cfg.v_head_dim, cfg.kv_lora_rank)
+
+    cq = rms_norm(x.astype(dt) @ p["q_down"].astype(dt), p["q_norm"])
+    q = (cq @ p["q_up"].astype(dt)).reshape(B, S, H, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    kv = x.astype(dt) @ p["kv_down"].astype(dt)
+    c_kv = rms_norm(kv[..., :KVr], p["kv_norm"])       # (B,S,KVr) latent
+    k_rope = kv[..., KVr:].reshape(B, S, 1, rd)
+    if ctx.sin is not None:
+        q_rope = apply_rope(q_rope, ctx.sin, ctx.cos)
+        k_rope = apply_rope(k_rope, ctx.sin, ctx.cos)
+
+    if ctx.mode == "decode":
+        # Absorbed-matrix decode: score and value contraction happen in the
+        # latent space; per-step cost independent of head count x cache len.
+        c_cache = lax.dynamic_update_slice_in_dim(
+            cache["c"], c_kv.astype(cache["c"].dtype), ctx.pos, axis=1
+        )
+        kr_cache = lax.dynamic_update_slice_in_dim(
+            cache["kr"], k_rope[:, :, 0, :].astype(cache["kr"].dtype),
+            ctx.pos, axis=1,
+        )
+        c_cache = shard(c_cache, "batch", "kv_seq", None)
+        kr_cache = shard(kr_cache, "batch", "kv_seq", None)
+        Lc = c_cache.shape[1]
+        valid = jnp.arange(Lc)[None, :] <= ctx.pos
+        k_up = p["k_up"].astype(dt).reshape(KVr, H, nd)
+        # absorb k_up into q: q_lat (B,1,H,KVr)
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, k_up.transpose(0, 1, 2))
+        scale = 1.0 / ((nd + rd) ** 0.5)
+        s = (
+            jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                       c_cache.astype(jnp.float32))
+            + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                         kr_cache.astype(jnp.float32))
+        ) * scale
+        s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+        w = jax.nn.softmax(s, axis=-1)
+        ctx_lat = jnp.einsum(
+            "bhst,btr->bshr", w, c_cache.astype(jnp.float32)
+        ).astype(dt)
+        v_up = p["v_up"].astype(dt).reshape(KVr, H, vd)
+        out = jnp.einsum("bshr,rhv->bshv", ctx_lat, v_up)
+        new_cache = {"c": c_cache, "kr": kr_cache}
+    else:
+        k_nope = (c_kv @ p["k_up"].astype(dt)).reshape(B, S, H, nd)
+        v = (c_kv @ p["v_up"].astype(dt)).reshape(B, S, H, vd)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (B, S, H, rd))], axis=-1
+        )
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # pad v to qk head dim for the shared attention primitive
+        pad = (nd + rd) - vd
+        v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        out = chunked_attention(q_full, k, v_p, causal=ctx.causal)[..., :vd]
+        new_cache = None
+        if ctx.mode == "prefill":
+            padlen = ctx.cache_len - S
+            new_cache = {
+                "c": shard(jnp.pad(c_kv, ((0, 0), (0, padlen), (0, 0))),
+                           "batch", "kv_seq", None),
+                "kr": shard(
+                    jnp.pad(k_rope[:, :, 0, :], ((0, 0), (0, padlen), (0, 0))),
+                    "batch", "kv_seq", None),
+            }
+    out = out.reshape(B, S, H * vd)
+    return out.astype(dt) @ p["wo"].astype(dt), new_cache
+
+
+def mla_cache_specs(cfg: ArchConfig, batch: int, seq: int):
+    return {
+        "c": ParamSpec((batch, seq, cfg.kv_lora_rank),
+                       ("batch", "kv_seq", None), init="zeros",
+                       dtype=cfg.compute_dtype),
+        "kr": ParamSpec((batch, seq, cfg.rope_head_dim),
+                        ("batch", "kv_seq", None), init="zeros",
+                        dtype=cfg.compute_dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MoE (mixtral / arctic): top-k routing, sort-based capacity dispatch
+# ---------------------------------------------------------------------------
+
+
+def moe_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    E, X, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff or cfg.d_ff
+    specs = {
+        "router": ParamSpec((E, X), ("embed", None)),
+        "w_gate": ParamSpec((X, E, F), ("experts", "embed", "expert_ffn")),
+        "w_up": ParamSpec((X, E, F), ("experts", "embed", "expert_ffn")),
+        "w_down": ParamSpec((X, F, E), ("experts", "expert_ffn", "embed"),
+                            init="small_normal"),
+    }
+    if cfg.dense_residual:
+        for k, v in mlp_specs(cfg, cfg.d_ff).items():
+            specs[f"res_{k}"] = v
+    return specs
+
+
+def moe_apply(p, x, cfg: ArchConfig) -> jax.Array:
+    """Top-k MoE with static-capacity sort-based dispatch, *local per data
+    shard* (the paper's sender-side early grouping): tokens are grouped by
+    expert within their own data shard, so routing never moves tokens
+    across the data axis — only the (d, X, C, .) expert buffer interacts
+    with the expert placement (EP: X over `model`; else TP on the ffn dim).
+    A global-sort formulation would all-gather every token on every device
+    (measured: 125 GiB/device at arctic prefill); this one keeps dispatch
+    collective-free.
+    """
+
+    from repro.parallel import ambient_axis_size
+
+    dt = _cdt(cfg)
+    B, S, E = x.shape
+    X, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    dp = ambient_axis_size("data") * ambient_axis_size("pod")
+    if T % dp or (B % dp and B > 1):
+        dp = 1
+    t_local = T // dp
+    cap = int(max(1, round(t_local * k / X * cfg.capacity_factor)))
+
+    xg = shard(x.reshape(dp, t_local, E).astype(dt), "batch", None, None)
+
+    def dispatch_one(xf, w_router, w_gate, w_up, w_down):
+        logits = (xf @ w_router).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, idx = lax.top_k(probs, k)                  # (t, k)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+        token_ids = jnp.repeat(jnp.arange(t_local, dtype=jnp.int32), k)
+        expert_ids = idx.reshape(-1).astype(jnp.int32)
+        wts = gates.reshape(-1)
+        order = jnp.argsort(expert_ids)
+        e_s = expert_ids[order]
+        t_s = token_ids[order]
+        w_s = wts[order]
+        pos = jnp.arange(t_local * k, dtype=jnp.int32)
+        start = jnp.searchsorted(e_s, e_s, side="left").astype(jnp.int32)
+        rank = pos - start
+        keep = rank < cap
+        slot = e_s * cap + jnp.minimum(rank, cap - 1)
+
+        buf = jnp.zeros((X * cap, E), dt)
+        gathered = jnp.take(xf, t_s, axis=0)
+        buf = buf.at[slot].set(jnp.where(keep[:, None], gathered, 0))
+        buf = buf.reshape(X, cap, E)
+
+        h = jnp.einsum("xce,xef->xcf", buf, w_gate)
+        u = jnp.einsum("xce,xef->xcf", buf, w_up)
+        y = jnp.einsum("xcf,xfe->xce", jax.nn.silu(h) * u, w_down)
+        y = y.reshape(X * cap, E)
+        contrib = jnp.take(y, slot, axis=0) \
+            * jnp.where(keep, w_s, 0.0)[:, None]
+        return jnp.zeros((t_local, E), dt).at[t_s].add(contrib)
+
+    out = jax.vmap(
+        dispatch_one, in_axes=(0, None, None, None, None)
+    )(xg, p["router"].astype(dt), p["w_gate"].astype(dt),
+      p["w_up"].astype(dt), p["w_down"].astype(dt))
+    out = shard(out, "batch", None, None).reshape(B, S, E)
+
+    if cfg.dense_residual:
+        res = {kk[4:]: vv for kk, vv in p.items() if kk.startswith("res_")}
+        out = out + mlp_apply(res, x, cfg)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD mixer
+# ---------------------------------------------------------------------------
+
+
+def ssm_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    E = cfg.d_model
+    Din = cfg.d_inner
+    H, P, N, G = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    conv_dim = Din + 2 * G * N
+    return {
+        "in_proj": ParamSpec(
+            (E, 2 * Din + 2 * G * N + H), ("embed", "conv_dim")
+        ),
+        "conv_w": ParamSpec((cfg.d_conv, conv_dim), (None, "conv_dim")),
+        "conv_b": ParamSpec((conv_dim,), ("conv_dim",), init="zeros"),
+        "A_log": ParamSpec((H,), ("ssm_heads",), init="ones", dtype="float32"),
+        "D": ParamSpec((H,), ("ssm_heads",), init="ones", dtype="float32"),
+        "dt_bias": ParamSpec((H,), ("ssm_heads",), init="zeros",
+                             dtype="float32"),
+        "norm": ParamSpec((Din,), ("conv_dim",), init="ones", dtype="float32"),
+        "out_proj": ParamSpec((Din, E), ("conv_dim", "embed"),
+                              init="small_normal"),
+    }
+
+
+def _segsum_decay(dA_chunk):
+    """dA_chunk: (..., Q) log-decay increments -> (..., Q, Q) decay matrix
+    L[i, j] = exp(sum_{k=j+1..i} dA_k) for i >= j, else 0."""
+
+    cs = jnp.cumsum(dA_chunk, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    Q = dA_chunk.shape[-1]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(tri, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x, dt, A_log, Bm, Cm, D, chunk):
+    """Chunked state-space duality scan (Mamba2, arXiv:2405.21060 §6).
+
+    x: (b,s,h,p) f32; dt: (b,s,h) f32 (post-softplus); Bm/Cm: (b,s,g,n);
+    A_log: (h,); D: (h,).  Returns y: (b,s,h,p) and the final state
+    (b,h,p,n) — the decode handoff.
+    """
+
+    b, s0, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    # Pad to a chunk multiple: padded steps carry dt=0 (decay 1, zero input),
+    # so they perturb neither outputs nor the final state.
+    pad = (-s0) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s = s0 + pad
+    A = -jnp.exp(A_log)                     # (h,) negative decay rates
+    dA = dt * A                             # (b,s,h)
+    nc = s // chunk
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    dAc = dA.reshape(b, nc, chunk, h).transpose(0, 1, 3, 2)   # (b,nc,h,Q)
+    Bh = jnp.repeat(Bm.reshape(b, nc, chunk, g, n), rep, axis=3)
+    Ch = jnp.repeat(Cm.reshape(b, nc, chunk, g, n), rep, axis=3)
+
+    # Single sequential scan over chunks: intra-chunk (Q x Q) tiles, the
+    # state recurrence, and the inter-chunk output are computed per chunk
+    # inside a CHECKPOINTED body, so no (b, nc, h, Q, Q) tensor for all
+    # chunks ever materializes — forward or backward.  On TPU the body is
+    # the fused Pallas-class SSD kernel (vmem_region tag for the census).
+    @jax.checkpoint
+    def chunk_step(st, inp):
+        xcc, dAcc, dtcc, Bcc, Ccc = inp    # (b,Q,h,p) (b,h,Q) (b,h,Q) ...
+        with jax.named_scope("ssd_vmem_region"):
+            cs = jnp.cumsum(dAcc, axis=-1)                  # (b,h,Q)
+            L = _segsum_decay(dAcc)                         # (b,h,Q,Q)
+            scores = jnp.einsum("bqhn,bkhn->bhqk", Ccc, Bcc)
+            M = scores * L * dtcc[:, :, None, :]
+            y_diag = jnp.einsum("bhqk,bkhp->bqhp", M, xcc)
+            decay_states = jnp.exp(cs[..., -1:] - cs)       # (b,h,Q)
+            st_c = jnp.einsum(
+                "bkhn,bhk,bkhp->bhpn", Bcc, decay_states * dtcc, xcc
+            )
+            out_decay = jnp.exp(cs)                         # (b,h,Q)
+            y_off = jnp.einsum("bqhn,bhpn,bhq->bqhp", Ccc, st, out_decay)
+            new_st = st * jnp.exp(cs[..., -1])[..., None, None] + st_c
+            return new_st, y_diag + y_off
+
+    st0 = jnp.zeros((b, h, p, n), jnp.float32)
+    final_state, y_chunks = lax.scan(
+        chunk_step, st0,
+        (
+            xc.transpose(1, 0, 2, 3, 4),                     # (nc,b,Q,h,p)
+            dAc.transpose(1, 0, 2, 3),                       # (nc,b,h,Q)
+            dtc.reshape(b, nc, chunk, h).transpose(1, 0, 3, 2),
+            Bh.transpose(1, 0, 2, 3, 4),                     # (nc,b,Q,h,n)
+            Ch.transpose(1, 0, 2, 3, 4),
+        ),
+    )
+    y = y_chunks.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    y = y + x * D[None, None, :, None]
+    return y[:, :s0], final_state
+
+
+def _split_in_proj(z, cfg):
+    Din = cfg.d_inner
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads
+    zgate = z[..., :Din]
+    xbc = z[..., Din:Din + Din + 2 * G * N]
+    dt = z[..., Din + Din + 2 * G * N:]
+    return zgate, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv over (B, S, C) with kernel (K, C)."""
+
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :] for i in range(K)
+    )
+    return out + b[None, None, :]
+
+
+def ssm_mixer(p, x, ctx, cache=None):
+    cfg = ctx.cfg
+    dt_c = _cdt(cfg)
+    B, S, E = x.shape
+    Din = cfg.d_inner
+    G, N, H, P = cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+
+    z = x.astype(dt_c) @ p["in_proj"].astype(dt_c)
+    z = shard(z, "batch", "seq", "conv_dim")
+    zgate, xbc, dt_raw = _split_in_proj(z, cfg)
+
+    if ctx.mode == "decode":
+        conv_state = cache["conv"]                    # (B, K-1, C)
+        window = jnp.concatenate(
+            [conv_state, xbc.astype(jnp.float32)], axis=1
+        )
+        w = p["conv_w"].astype(jnp.float32)
+        conv_out = jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"]
+        xbc_a = jax.nn.silu(conv_out)[:, None, :]     # (B,1,C)
+        new_conv = window[:, 1:, :].astype(conv_state.dtype)
+    else:
+        conv = _causal_conv(
+            xbc.astype(jnp.float32), p["conv_w"].astype(jnp.float32),
+            p["conv_b"].astype(jnp.float32),
+        )
+        xbc_a = jax.nn.silu(conv)
+        new_conv = None
+        if ctx.mode == "prefill":
+            K = cfg.d_conv
+            new_conv = xbc.astype(jnp.float32)[:, -(K - 1):, :]
+
+    xs = xbc_a[..., :Din].reshape(B, -1, H, P).astype(jnp.float32)
+    Bm = xbc_a[..., Din:Din + G * N].reshape(B, -1, G, N).astype(jnp.float32)
+    Cm = xbc_a[..., Din + G * N:].reshape(B, -1, G, N).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"][None, None, :]
+    )
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if ctx.mode == "decode":
+        st = cache["ssm"].astype(jnp.float32)         # (B,H,P,N)
+        rep = H // G
+        B1 = jnp.repeat(Bm[:, 0], rep, axis=1)        # (B,H,N)
+        C1 = jnp.repeat(Cm[:, 0], rep, axis=1)
+        dt1 = dt[:, 0]                                # (B,H)
+        x1 = xs[:, 0]                                 # (B,H,P)
+        decay = jnp.exp(dt1 * A[None, :])             # (B,H)
+        st = st * decay[..., None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dt1, B1, x1
+        )
+        y = jnp.einsum("bhn,bhpn->bhp", C1, st)
+        y = y + x1 * p["D"][None, :, None]
+        y = y.reshape(B, 1, Din)
+        new_cache = {"conv": new_conv, "ssm": st.astype(cache["ssm"].dtype)}
+    else:
+        y, final_state = ssd_chunked(
+            xs, dt, p["A_log"].astype(jnp.float32), Bm, Cm,
+            p["D"].astype(jnp.float32), min(cfg.ssm_chunk, xs.shape[1]),
+        )
+        y = y.reshape(B, S, Din)
+        new_cache = None
+        if ctx.mode == "prefill":
+            new_cache = {
+                "conv": new_conv,
+                "ssm": final_state.astype(dt_c),
+            }
+
+    # Gated RMSNorm + out projection.
+    y = rms_norm(y * jax.nn.silu(zgate.astype(jnp.float32)), p["norm"])
+    y = shard(y.astype(dt_c), "batch", "seq", "conv_dim")
+    return y @ p["out_proj"].astype(dt_c), new_cache
+
+
+def ssm_cache_specs(cfg: ArchConfig, batch: int):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "conv": ParamSpec((batch, cfg.d_conv - 1, conv_dim),
+                          ("batch", None, "conv_dim"), init="zeros",
+                          dtype="float32"),
+        "ssm": ParamSpec(
+            (batch, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            ("batch", "ssm_heads", None, None), init="zeros",
+            dtype=cfg.compute_dtype,
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Layer assembly per family
+# ---------------------------------------------------------------------------
+
+
+def layer_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    E = cfg.d_model
+    ln = lambda: ParamSpec((E,), ("embed",), init="ones", dtype="float32")
+    if cfg.family in ("dense", "encdec"):
+        return {
+            "ln1": ln(), "attn": attention_specs(cfg),
+            "ln2": ln(), "mlp": mlp_specs(cfg),
+        }
+    if cfg.family == "mla":
+        return {
+            "ln1": ln(), "attn": mla_specs(cfg),
+            "ln2": ln(), "mlp": mlp_specs(cfg),
+        }
+    if cfg.family == "moe":
+        return {
+            "ln1": ln(), "attn": attention_specs(cfg),
+            "ln2": ln(), "moe": moe_specs(cfg),
+        }
+    if cfg.family == "ssm":
+        return {"ln1": ln(), "ssm": ssm_specs(cfg)}
+    if cfg.family == "hybrid":
+        return {
+            "ln1": ln(), "attn": attention_specs(cfg), "ssm": ssm_specs(cfg),
+            "ln2": ln(), "mlp": mlp_specs(cfg),
+        }
+    raise ValueError(cfg.family)
+
+
+def layer_apply(
+    params: Dict[str, Any],
+    x: jax.Array,
+    ctx: LayerCtx,
+    cache: Optional[Dict[str, Any]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+    cfg = ctx.cfg
+    fam = cfg.family
+    if fam in ("dense", "encdec", "mla", "moe"):
+        mixer = mla_mixer if fam == "mla" else attention_mixer
+        h = rms_norm(x, params["ln1"])
+        attn_out, new_cache = mixer(params["attn"], h, ctx, cache)
+        x = x + attn_out
+        h = rms_norm(x, params["ln2"])
+        if fam == "moe":
+            x = x + moe_apply(params["moe"], h, cfg)
+        else:
+            x = x + mlp_apply(params["mlp"], h, cfg)
+        return x, new_cache
+    if fam == "ssm":
+        h = rms_norm(x, params["ln1"])
+        y, new_cache = ssm_mixer(params["ssm"], h, ctx, cache)
+        return x + y, new_cache
+    if fam == "hybrid":
+        h = rms_norm(x, params["ln1"])
+        attn_cache = cache.get("attn") if cache else None
+        ssm_cache = cache.get("ssm") if cache else None
+        a, new_attn = attention_mixer(params["attn"], h, ctx, attn_cache)
+        s, new_ssm = ssm_mixer(params["ssm"], h, ctx, ssm_cache)
+        x = x + 0.5 * (a + s)
+        h = rms_norm(x, params["ln2"])
+        x = x + mlp_apply(params["mlp"], h, cfg)
+        new_cache = None
+        if new_attn is not None or new_ssm is not None:
+            new_cache = {"attn": new_attn, "ssm": new_ssm}
+        return x, new_cache
+    raise ValueError(fam)
+
+
+def layer_cache_specs(cfg: ArchConfig, batch: int, seq: int) -> Dict[str, Any]:
+    fam = cfg.family
+    if fam in ("dense", "encdec", "moe"):
+        return attention_cache_specs(cfg, batch, seq)
+    if fam == "mla":
+        return mla_cache_specs(cfg, batch, seq)
+    if fam == "ssm":
+        return ssm_cache_specs(cfg, batch)
+    if fam == "hybrid":
+        return {
+            "attn": attention_cache_specs(cfg, batch, seq),
+            "ssm": ssm_cache_specs(cfg, batch),
+        }
+    raise ValueError(fam)

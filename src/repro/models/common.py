@@ -1,0 +1,403 @@
+"""Shared model substrate: configs, norms, rope, attention, losses.
+
+Layout conventions (TPU-native):
+
+* activations are ``(batch, seq, d_model)``; attention internals use
+  ``(batch, seq, heads, head_dim)``;
+* logical sharding axes are annotated via :func:`repro.parallel.shard`
+  ("batch", "seq", "heads", ...) — mesh-free model code;
+* softmax/statistics in f32, matmuls in the config's compute dtype.
+
+The attention entry point dispatches between the Pallas flash kernel (TPU),
+a chunked online-softmax jnp implementation (identical math, XLA-fusable —
+the dry-run/CPU path), and cache-based decode attention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.parallel import shard
+
+__all__ = [
+    "ArchConfig",
+    "SHAPES",
+    "rms_norm",
+    "rope",
+    "apply_rope",
+    "chunked_attention",
+    "decode_attention",
+    "cross_entropy_loss",
+    "dtype_of",
+]
+
+
+# ---------------------------------------------------------------------------
+# Architecture config (one instance per assigned architecture)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                     # dense | mla | moe | ssm | hybrid | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0               # 0 -> d_model // n_heads
+    # attention
+    window: Optional[int] = None    # sliding-window attention
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    # MLA (MiniCPM3 / DeepSeek-style latent attention)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    rope_head_dim: int = 0
+    nope_head_dim: int = 0
+    v_head_dim: int = 0
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    dense_residual: bool = False    # arctic: dense FFN in parallel with MoE
+    capacity_factor: float = 1.25
+    # SSM (Mamba2 SSD)
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    d_conv: int = 4
+    ssm_expand: int = 2
+    ssm_chunk: int = 128
+    # encoder-decoder (whisper)
+    enc_layers: int = 0
+    enc_seq: int = 0                # precomputed frame embeddings (stub)
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+    mlp_type: str = "swiglu"        # swiglu | gelu (whisper)
+    # notes for DESIGN.md §Arch-applicability
+    notes: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a 256 multiple (Megatron-style) so embedding and
+        logits shard cleanly over a 16-way model axis; padded columns are
+        masked to -1e30 in the head."""
+
+        return ((self.vocab + 255) // 256) * 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.ssm_heads or (self.d_inner // self.ssm_head_dim)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can this arch decode at 500k context with bounded per-step state?"""
+
+        return self.family in ("ssm", "hybrid") or self.window is not None
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + layers)."""
+
+        from repro.models.registry import abstract_params
+
+        params = abstract_params(self)
+        return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params))
+
+
+# The assignment's four input-shape cells (shared by all LM archs).
+SHAPES: Dict[str, Dict[str, int]] = {
+    "train_4k": {"seq": 4096, "batch": 256, "kind": "train"},
+    "prefill_32k": {"seq": 32768, "batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq": 32768, "batch": 128, "kind": "decode"},
+    "long_500k": {"seq": 524288, "batch": 1, "kind": "decode"},
+}
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope(positions: jax.Array, dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """Rotary embedding tables: returns (sin, cos) of shape [..., dim/2]."""
+
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    )
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: [B, S, H, D]; sin/cos: [B, S, D/2] (or broadcastable)."""
+
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    sin = sin[:, :, None, :]
+    cos = cos[:, :, None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (train/prefill): chunked online-softmax (flash semantics in jnp)
+# ---------------------------------------------------------------------------
+
+
+def _chunk_mask(rows, cols, Skv, causal, window):
+    mask = jnp.broadcast_to(cols[None, :] < Skv, (rows.shape[0],
+                                                  cols.shape[0]))
+    if causal:
+        mask &= cols[None, :] <= rows[:, None]
+    if window is not None:
+        mask &= cols[None, :] > rows[:, None] - window
+    return mask
+
+
+def _chunked_fwd(q, k, v, causal, window, chunk, scale):
+    """Online-softmax forward; returns (out_f32, m, l) in the grouped
+    (B, KH, G, Sq, *) layout."""
+
+    B, Sq, H, D = q.shape
+    _, Skv, KH, _ = k.shape
+    group = H // KH
+    q_off = Skv - Sq
+
+    qf = (q.astype(jnp.float32) * scale).transpose(0, 2, 1, 3)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    pad_kv = (-Skv) % chunk  # non-multiple Skv (whisper's 1500 frames)
+    if pad_kv:
+        kf = jnp.pad(kf, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+    nk = (Skv + pad_kv) // chunk
+    kf = kf.reshape(B, KH, nk, chunk, D)
+    vf = vf.reshape(B, KH, nk, chunk, D)
+    qg = qf.reshape(B, KH, group, Sq, D)
+    rows = jnp.arange(Sq) + q_off
+
+    def body(carry, inputs):
+        # vmem_region: on TPU this body is the Pallas flash kernel — s/p
+        # never leave VMEM.  The scope tag lets the HLO census separate
+        # this traffic from real HBM traffic (see launch.hlo_analysis).
+        with jax.named_scope("flash_vmem_region"):
+            m_prev, l_prev, acc = carry
+            kc, vc, ci = inputs
+            cols = ci * chunk + jnp.arange(chunk)
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", qg, kc)
+            mask = _chunk_mask(rows, cols, Skv, causal, window)
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_cur = jnp.max(s, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m_prev, m_cur)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.where(mask[None, None, None], jnp.exp(s - m_safe), 0.0)
+            corr = jnp.where(jnp.isfinite(m_prev),
+                             jnp.exp(m_prev - m_safe), 0.0)
+            l_new = corr * l_prev + jnp.sum(p, -1, keepdims=True)
+            acc = acc * corr + jnp.einsum("bkgqc,bkcd->bkgqd", p, vc)
+            return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, KH, group, Sq, 1), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KH, group, Sq, 1), jnp.float32)
+    a0 = jnp.zeros((B, KH, group, Sq, D), jnp.float32)
+    (m, l, acc), _ = lax.scan(
+        body, (m0, l0, a0),
+        (kf.transpose(2, 0, 1, 3, 4), vf.transpose(2, 0, 1, 3, 4),
+         jnp.arange(nk)),
+    )
+    out = acc / jnp.where(l > 0, l, 1.0)
+    return out, jnp.where(jnp.isfinite(m), m, 0.0), l, (kf, vf, qg, rows)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _chunked_attention(q, k, v, causal, window, chunk, scale):
+    out, _, _, _ = _chunked_fwd(q, k, v, causal, window, chunk, scale)
+    B, Sq, H, D = q.shape
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def _chunked_attention_fwd(q, k, v, causal, window, chunk, scale):
+    out, m, l, _ = _chunked_fwd(q, k, v, causal, window, chunk, scale)
+    B, Sq, H, D = q.shape
+    o = out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3).astype(q.dtype)
+    return o, (q, k, v, out, m, l)
+
+
+def _chunked_attention_bwd(causal, window, chunk, scale, res, do):
+    """Flash-attention two-pass backward: recompute p per (q, kv-chunk)
+    block from the saved (m, l) stats — O(Sq * chunk) live memory instead of
+    the O(Sq * Skv) a scan-AD would save.  Same math as the Pallas dq/dkv
+    kernels (see kernels/flash_attention)."""
+
+    q, k, v, out, m, l = res
+    B, Sq, H, D = q.shape
+    _, Skv, KH, _ = k.shape
+    group = H // KH
+    q_off = Skv - Sq
+
+    _, _, _, (kf, vf, qg, rows) = _chunked_fwd(
+        q, k, v, causal, window, chunk, scale
+    )  # XLA CSEs the cheap relayouts; the scan result itself is unused
+    dof = do.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(
+        B, KH, group, Sq, D
+    )
+    l_safe = jnp.where(l > 0, l, 1.0)
+    delta = jnp.sum(dof * out, axis=-1, keepdims=True)   # (B,KH,G,Sq,1)
+
+    nk = kf.shape[2]
+
+    def body(carry, inputs):
+        # vmem_region: the Pallas dq/dkv kernels on TPU (see fwd note)
+        with jax.named_scope("flash_vmem_region"):
+            dq_acc = carry
+            kc, vc, ci = inputs
+            cols = ci * chunk + jnp.arange(chunk)
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", qg, kc)
+            mask = _chunk_mask(rows, cols, Skv, causal, window)
+            p = jnp.where(mask[None, None, None],
+                          jnp.exp(s - m), 0.0) / l_safe  # (B,KH,G,Sq,c)
+            dp = jnp.einsum("bkgqd,bkcd->bkgqc", dof, vc)
+            ds = p * (dp - delta)                        # (B,KH,G,Sq,c)
+            dq_acc = dq_acc + jnp.einsum("bkgqc,bkcd->bkgqd", ds, kc)
+            dv_c = jnp.einsum("bkgqc,bkgqd->bkcd", p, dof)
+            dk_c = jnp.einsum("bkgqc,bkgqd->bkcd", ds, qg)
+            return dq_acc, (dk_c, dv_c)
+
+    dq0 = jnp.zeros_like(qg)
+    dq_acc, (dk_chunks, dv_chunks) = lax.scan(
+        body, dq0,
+        (kf.transpose(2, 0, 1, 3, 4), vf.transpose(2, 0, 1, 3, 4),
+         jnp.arange(nk)),
+    )
+    # s = (q*scale)·k, so ds/dq needs the extra scale while ds/dk is exactly
+    # ds^T @ qg (qg already carries the scale).
+    dq = (dq_acc * scale).reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+    dk = dk_chunks.transpose(1, 2, 0, 3, 4).reshape(B, KH, -1, D)[:, :, :Skv]
+    dk = dk.transpose(0, 2, 1, 3)
+    dv = dv_chunks.transpose(1, 2, 0, 3, 4).reshape(B, KH, -1, D)[:, :, :Skv]
+    dv = dv.transpose(0, 2, 1, 3)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_chunked_attention.defvjp(_chunked_attention_fwd, _chunked_attention_bwd)
+
+
+def chunked_attention(
+    q: jax.Array,   # (B, Sq, H, D)
+    k: jax.Array,   # (B, Skv, KH, D)
+    v: jax.Array,   # (B, Skv, KH, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: int = 512,
+    sm_scale: Optional[float] = None,
+) -> jax.Array:
+    """Blockwise attention with O(Sq * chunk) live memory, forward AND
+    backward (custom flash vjp).  Identical math to the Pallas kernel (same
+    ref oracle); on TPU the layer calls the kernel instead."""
+
+    _, Skv, _, _ = k.shape
+    chunk = min(chunk, Skv)
+    scale = sm_scale if sm_scale is not None else 1.0 / (q.shape[-1] ** 0.5)
+    return _chunked_attention(q, k, v, causal, window, chunk, scale)
+
+
+def decode_attention(
+    q: jax.Array,        # (B, 1, H, D)
+    k_cache: jax.Array,  # (B, S, KH, D)  — seq possibly sharded over `model`
+    v_cache: jax.Array,  # (B, S, KH, D)
+    valid: jax.Array,    # (B, S) bool — which cache slots are live
+    *,
+    sm_scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-token attention over a (possibly sequence-sharded) KV cache.
+
+    Reductions over the sharded S dimension lower to partial reductions +
+    small all-reduces under GSPMD — sequence-parallel flash-decode without
+    explicit collectives in model code.
+    """
+
+    B, _, H, D = q.shape
+    _, S, KH, _ = k_cache.shape
+    group = H // KH
+    scale = sm_scale if sm_scale is not None else 1.0 / (D ** 0.5)
+
+    qg = (q.astype(jnp.float32) * scale).reshape(B, KH, group, D)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, kf)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", p / jnp.maximum(l, 1e-30), vf)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy_loss(
+    logits: jax.Array,   # (B, S, V) — V possibly sharded over `model`
+    labels: jax.Array,   # (B, S) int32
+    mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Next-token cross entropy, fused label pick (no one-hot materialized:
+    the ``where(iota == label)`` select fuses into the vocab reduction, which
+    under a vocab-sharded layout lowers to partial reduce + all-reduce)."""
+
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    vocab_ids = lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    picked = jnp.sum(
+        jnp.where(vocab_ids == labels[..., None], logits, 0.0), axis=-1
+    )
+    nll = lse - picked
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,567 @@
+"""LM assembly: embeddings + scan-over-layers + heads; train/prefill/decode.
+
+Design points (all planner-relevant):
+
+* **scan over layers** — layer params are stacked on a leading "stack" axis
+  and the depth loop is a single ``lax.scan``: compile time and HLO size are
+  depth-independent (mandatory for 62-layer configs lowered on 512 host
+  devices).
+* **remat** — the per-layer body is wrapped in ``jax.checkpoint`` with a
+  planner-selected policy (``full`` recompute, ``dots`` keep matmul outputs,
+  or ``none``).
+* **decode** — the cache is a pytree stacked on the same leading axis; one
+  decode step scans ``(layer_params, layer_cache) -> new_cache``.
+* whisper (``encdec``) runs the encoder stack (bidirectional) and wires its
+  output into per-decoder-layer cross-attention; at serve time the cross KV
+  is computed once at prefill and carried in the cache.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models import blocks
+from repro.models.blocks import LayerCtx, ParamSpec
+from repro.models.common import (
+    ArchConfig,
+    cross_entropy_loss,
+    chunked_attention,
+    decode_attention,
+    dtype_of,
+    rms_norm,
+    rope,
+)
+from repro.parallel import shard
+
+__all__ = [
+    "model_specs",
+    "init_params",
+    "abstract_params",
+    "param_axes",
+    "forward",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "cache_specs",
+    "init_cache",
+    "abstract_cache",
+    "cache_axes",
+]
+
+
+# ---------------------------------------------------------------------------
+# Param specs / init / abstract
+# ---------------------------------------------------------------------------
+
+
+def _embed_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    E, V = cfg.d_model, cfg.padded_vocab
+    specs = {
+        "tok": ParamSpec((V, E), ("vocab", "embed")),
+        "out_norm": ParamSpec((E,), ("embed",), init="ones", dtype="float32"),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = ParamSpec((E, V), ("embed", "vocab"))
+    return specs
+
+
+def _whisper_extra_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    # Encoder stack + per-decoder-layer cross attention.
+    return {
+        "enc_norm": ParamSpec((cfg.d_model,), ("embed",), init="ones",
+                              dtype="float32"),
+        "lnx": ParamSpec((cfg.d_model,), ("embed",), init="ones",
+                         dtype="float32"),
+    }
+
+
+def model_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {
+        "embed": _embed_specs(cfg),
+        "layers": blocks.layer_specs(cfg),      # stacked x n_layers
+    }
+    if cfg.family == "encdec":
+        specs["enc_layers"] = blocks.layer_specs(
+            ArchConfig(**{**cfg.__dict__, "family": "dense", "window": None})
+        )
+        specs["enc_norm"] = ParamSpec((cfg.d_model,), ("embed",),
+                                      init="ones", dtype="float32")
+        specs["layers"]["lnx"] = ParamSpec(
+            (cfg.d_model,), ("embed",), init="ones", dtype="float32")
+        specs["layers"]["xattn"] = blocks.attention_specs(cfg)
+    return specs
+
+
+_STACKED_KEYS = ("layers", "enc_layers")
+
+
+def _n_stack(cfg: ArchConfig, key: str) -> int:
+    return cfg.enc_layers if key == "enc_layers" else cfg.n_layers
+
+
+def _init_leaf(key, spec: ParamSpec, cfg: ArchConfig, stacked: int = 0):
+    dt = dtype_of(spec.dtype or cfg.param_dtype)
+    shape = ((stacked,) + spec.shape) if stacked else spec.shape
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(shape, dt)
+    scale = 0.02
+    if spec.init == "small_normal":
+        scale = 0.02 / max(1.0, (2.0 * cfg.n_layers) ** 0.5)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dt)
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Dict[str, Any]:
+    specs = model_specs(cfg)
+    leaves, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    it = iter(range(len(leaves)))
+    params: Dict[str, Any] = {}
+    for k, sub in specs.items():
+        stacked = _n_stack(cfg, k) if k in _STACKED_KEYS else 0
+        params[k] = jax.tree_util.tree_map(
+            lambda s: _init_leaf(keys[next(it)], s, cfg, stacked), sub,
+            is_leaf=lambda x: isinstance(x, ParamSpec),
+        )
+    return params
+
+
+def abstract_params(cfg: ArchConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the full model — dry-run only, no allocation."""
+
+    specs = model_specs(cfg)
+
+    def mk(spec: ParamSpec, stacked: int = 0):
+        dt = dtype_of(spec.dtype or cfg.param_dtype)
+        shape = ((stacked,) + spec.shape) if stacked else spec.shape
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    out: Dict[str, Any] = {}
+    for k, v in specs.items():
+        if k in _STACKED_KEYS:
+            n = _n_stack(cfg, k)
+            out[k] = jax.tree_util.tree_map(
+                lambda s: mk(s, n), v,
+                is_leaf=lambda x: isinstance(x, ParamSpec),
+            )
+        else:
+            out[k] = jax.tree_util.tree_map(
+                mk, v, is_leaf=lambda x: isinstance(x, ParamSpec)
+            )
+    return out
+
+
+def param_axes(cfg: ArchConfig) -> Dict[str, Any]:
+    """Logical-axes tree parallel to the params tree ("stack" prepended for
+    layer-stacked leaves)."""
+
+    specs = model_specs(cfg)
+    out: Dict[str, Any] = {}
+    for k, v in specs.items():
+        pre = ("stack",) if k in _STACKED_KEYS else ()
+        out[k] = jax.tree_util.tree_map(
+            lambda s: pre + tuple(s.axes), v,
+            is_leaf=lambda x: isinstance(x, ParamSpec),
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _rope_tables(cfg: ArchConfig, positions: jax.Array):
+    if cfg.family == "ssm":
+        return None, None
+    dim = cfg.rope_head_dim if cfg.family == "mla" else cfg.hd
+    return rope(positions, dim, cfg.rope_theta)
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots
+        )
+    return jax.checkpoint(fn)  # full recompute
+
+
+def _scan_layers(body, x, stacked, policy: str):
+    """Depth loop with planner-selected remat granularity.
+
+    ``group:G`` = sqrt-style checkpointing: only every G-th layer boundary
+    activation is saved for the backward pass (carry ~ L/G + G instead of
+    L), trading one extra in-group forward.  This is what keeps the
+    microbatch count — and with it the per-microbatch gradient-reduction
+    collectives — low for deep models (see §Perf mixtral hillclimb).
+    """
+
+    if policy.startswith("group:"):
+        G = int(policy.split(":")[1])
+        leaves = jax.tree_util.tree_leaves(stacked)
+        L = leaves[0].shape[0]
+        if L % G == 0 and G > 1:
+            grouped = jax.tree_util.tree_map(
+                lambda a: a.reshape((L // G, G) + a.shape[1:]), stacked
+            )
+
+            def group_body(h, gparams):
+                h2, _ = lax.scan(body, h, gparams)
+                return h2, None
+
+            x, _ = lax.scan(jax.checkpoint(group_body), x, grouped)
+            return x
+        policy = "full"
+    x, _ = lax.scan(_remat(body, policy), x, stacked)
+    return x
+
+
+def _embed_tokens(params, tokens, cfg):
+    dt = dtype_of(cfg.compute_dtype)
+    emb = params["embed"]["tok"]
+    x = jnp.take(emb, tokens, axis=0).astype(dt)
+    return shard(x, "batch", "seq", None)
+
+
+def _lm_head(params, x, cfg):
+    dt = dtype_of(cfg.compute_dtype)
+    x = rms_norm(x, params["embed"]["out_norm"])
+    head = (
+        params["embed"]["tok"].T if cfg.tie_embeddings
+        else params["embed"]["head"]
+    )
+    logits = x.astype(dt) @ head.astype(dt)
+    if cfg.padded_vocab != cfg.vocab:
+        # mask padding columns so lse/argmax never see them (fuses into the
+        # matmul consumer; no materialized iota under XLA)
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(col < cfg.vocab, logits, jnp.asarray(-1e30, dt))
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def _encoder(params, enc_input, cfg, remat_policy):
+    """Whisper encoder: bidirectional dense stack over frame embeddings."""
+
+    B, S, E = enc_input.shape
+    dt = dtype_of(cfg.compute_dtype)
+    x = shard(enc_input.astype(dt), "batch", "seq", None)
+    sin, cos = _rope_tables(cfg, jnp.arange(S)[None, :])
+    enc_cfg = ArchConfig(**{**cfg.__dict__, "family": "dense", "window": None})
+    ctx = LayerCtx(cfg=enc_cfg, mode="train", sin=sin, cos=cos, causal=False)
+
+    def body(h, layer_params):
+        h2, _ = blocks.layer_apply(layer_params, h, ctx)
+        return h2, None
+
+    x, _ = lax.scan(_remat(body, remat_policy), x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"])
+
+
+def _cross_attention(p, x, enc_kv, cfg):
+    """Decoder cross-attention: q from decoder, cached K/V from encoder."""
+
+    dt = dtype_of(cfg.compute_dtype)
+    B, S, _ = x.shape
+    H, KH, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x.astype(dt) @ p["wq"].astype(dt)).reshape(B, S, H, D)
+    k, v = enc_kv
+    out = chunked_attention(q, k, v, causal=False, window=None)
+    return out.reshape(B, S, H * D).astype(dt) @ p["wo"].astype(dt)
+
+
+def _cross_kv(p, enc_out, cfg):
+    dt = dtype_of(cfg.compute_dtype)
+    B, S, _ = enc_out.shape
+    KH, D = cfg.n_kv_heads, cfg.hd
+    k = (enc_out.astype(dt) @ p["wk"].astype(dt)).reshape(B, S, KH, D)
+    v = (enc_out.astype(dt) @ p["wv"].astype(dt)).reshape(B, S, KH, D)
+    return k, v
+
+
+def forward(
+    params: Dict[str, Any],
+    tokens: jax.Array,
+    cfg: ArchConfig,
+    *,
+    enc_input: Optional[jax.Array] = None,
+    remat_policy: str = "full",
+) -> jax.Array:
+    """Teacher-forced forward -> logits (B, S, V)."""
+
+    B, S = tokens.shape
+    x = _embed_tokens(params, tokens, cfg)
+    sin, cos = _rope_tables(cfg, jnp.arange(S)[None, :])
+    ctx = LayerCtx(cfg=cfg, mode="train", sin=sin, cos=cos)
+
+    enc_out = None
+    if cfg.family == "encdec":
+        assert enc_input is not None, "whisper needs encoder frames"
+        enc_out = _encoder(params, enc_input, cfg, remat_policy)
+
+        def body(h, layer_params):
+            h2, _ = blocks.layer_apply(
+                {k: layer_params[k] for k in ("ln1", "attn", "ln2", "mlp")},
+                h, ctx,
+            )
+            kx, vx = _cross_kv(layer_params["xattn"], enc_out, cfg)
+            h3 = h2 + _cross_attention(
+                layer_params["xattn"],
+                rms_norm(h2, layer_params["lnx"]), (kx, vx), cfg,
+            )
+            return h3, None
+    else:
+        def body(h, layer_params):
+            h2, _ = blocks.layer_apply(layer_params, h, ctx)
+            return h2, None
+
+    x = _scan_layers(body, x, params["layers"], remat_policy)
+    return _lm_head(params, x, cfg)
+
+
+def hidden_forward(
+    params, tokens, cfg: ArchConfig, *,
+    enc_input: Optional[jax.Array] = None, remat_policy: str = "full",
+) -> jax.Array:
+    """Forward up to (but excluding) the LM head: final hidden states."""
+
+    B, S = tokens.shape
+    x = _embed_tokens(params, tokens, cfg)
+    sin, cos = _rope_tables(cfg, jnp.arange(S)[None, :])
+    ctx = LayerCtx(cfg=cfg, mode="train", sin=sin, cos=cos)
+    if cfg.family == "encdec":
+        enc_out = _encoder(params, enc_input, cfg, remat_policy)
+
+        def body(h, layer_params):
+            h2, _ = blocks.layer_apply(
+                {k: layer_params[k] for k in ("ln1", "attn", "ln2", "mlp")},
+                h, ctx,
+            )
+            kx, vx = _cross_kv(layer_params["xattn"], enc_out, cfg)
+            h3 = h2 + _cross_attention(
+                layer_params["xattn"],
+                rms_norm(h2, layer_params["lnx"]), (kx, vx), cfg,
+            )
+            return h3, None
+    else:
+        def body(h, layer_params):
+            h2, _ = blocks.layer_apply(layer_params, h, ctx)
+            return h2, None
+
+    return _scan_layers(body, x, params["layers"], remat_policy)
+
+
+def chunked_xent(params, hidden, labels, cfg: ArchConfig,
+                 chunk: int = 512) -> jax.Array:
+    """Cross entropy with sequence-chunked logits: the (B, S, V) logits slab
+    never materializes — each chunk's logits are computed, reduced to
+    (lse, picked), and recomputed in the backward (checkpointed body).
+    Shrinks train-step live memory by S/chunk on vocab-heavy archs."""
+
+    dt = dtype_of(cfg.compute_dtype)
+    B, S, E = hidden.shape
+    head = (
+        params["embed"]["tok"].T if cfg.tie_embeddings
+        else params["embed"]["head"]
+    ).astype(dt)
+    out_norm = params["embed"]["out_norm"]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (S + pad) // chunk
+    hs = hidden.reshape(B, nc, chunk, E).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        xc, lc = inp
+        logits = (rms_norm(xc, out_norm).astype(dt) @ head).astype(
+            jnp.float32)
+        col = lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        logits = jnp.where(col < cfg.vocab, logits, -1e30)
+        logits = shard(logits, "batch", None, "vocab")
+        m = jnp.max(logits, axis=-1)
+        lse = jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1)) + m
+        picked = jnp.sum(
+            jnp.where(col == lc[..., None], logits, 0.0), axis=-1
+        )
+        valid = lc >= 0
+        nll = jnp.where(valid, lse - picked, 0.0)
+        loss_sum, count = carry
+        return (loss_sum + jnp.sum(nll),
+                count + jnp.sum(valid.astype(jnp.float32))), None
+
+    (loss_sum, count), _ = lax.scan(
+        body, (jnp.float32(0), jnp.float32(0)), (hs, ls)
+    )
+    return loss_sum / jnp.maximum(count, 1.0)
+
+
+def loss_fn(
+    params, batch: Dict[str, jax.Array], cfg: ArchConfig,
+    remat_policy: str = "full",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    hidden = hidden_forward(
+        params, batch["tokens"], cfg,
+        enc_input=batch.get("enc_input"), remat_policy=remat_policy,
+    )
+    labels = batch["tokens"][:, 1:]
+    if "mask" in batch:
+        labels = jnp.where(batch["mask"][:, 1:] > 0, labels, -1)
+    loss = chunked_xent(params, hidden[:, :-1], labels, cfg)
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ArchConfig, batch: int, seq: int) -> Dict[str, Any]:
+    specs = {"layers": blocks.layer_cache_specs(cfg, batch, seq)}
+    if cfg.family == "encdec":
+        kv = (batch, cfg.enc_seq, cfg.n_kv_heads, cfg.hd)
+        specs["cross"] = {
+            "k": ParamSpec(kv, ("batch", None, None, None), init="zeros",
+                           dtype=cfg.compute_dtype),
+            "v": ParamSpec(kv, ("batch", None, None, None), init="zeros",
+                           dtype=cfg.compute_dtype),
+        }
+    return specs
+
+
+def _cache_leaf(spec: ParamSpec, stacked: int, abstract: bool):
+    dt = dtype_of(spec.dtype or "float32")
+    shape = (stacked,) + spec.shape
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dt)
+    return jnp.zeros(shape, dt)
+
+
+def init_cache(cfg, batch, seq, abstract=False):
+    specs = cache_specs(cfg, batch, seq)
+    out = {}
+    for k, v in specs.items():
+        out[k] = jax.tree_util.tree_map(
+            lambda s: _cache_leaf(s, cfg.n_layers, abstract), v,
+            is_leaf=lambda x: isinstance(x, ParamSpec),
+        )
+    return out
+
+
+def abstract_cache(cfg, batch, seq):
+    return init_cache(cfg, batch, seq, abstract=True)
+
+
+def cache_axes(cfg, batch, seq):
+    specs = cache_specs(cfg, batch, seq)
+    return {
+        k: jax.tree_util.tree_map(
+            lambda s: ("stack",) + tuple(s.axes), v,
+            is_leaf=lambda x: isinstance(x, ParamSpec),
+        )
+        for k, v in specs.items()
+    }
+
+
+def prefill(
+    params, tokens: jax.Array, cfg: ArchConfig, cache_len: int,
+    *, enc_input: Optional[jax.Array] = None, remat_policy: str = "none",
+):
+    """Run the prompt, return (last-token logits, filled cache, pos)."""
+
+    B, S = tokens.shape
+    x = _embed_tokens(params, tokens, cfg)
+    sin, cos = _rope_tables(cfg, jnp.arange(S)[None, :])
+    ctx = LayerCtx(cfg=cfg, mode="prefill", sin=sin, cos=cos,
+                   cache_len=cache_len)
+
+    cross = None
+    if cfg.family == "encdec":
+        enc_out = _encoder(params, enc_input, cfg, remat_policy)
+
+        def body(h, layer_params):
+            core = {k: layer_params[k] for k in ("ln1", "attn", "ln2", "mlp")}
+            h2, c = blocks.layer_apply(core, h, ctx)
+            kx, vx = _cross_kv(layer_params["xattn"], enc_out, cfg)
+            h3 = h2 + _cross_attention(
+                layer_params["xattn"],
+                rms_norm(h2, layer_params["lnx"]), (kx, vx), cfg,
+            )
+            return h3, (c, {"k": kx, "v": vx})
+
+        x, (cache_layers, cross) = lax.scan(
+            _remat(body, remat_policy), x, params["layers"]
+        )
+    else:
+        def body(h, layer_params):
+            h2, c = blocks.layer_apply(layer_params, h, ctx)
+            return h2, c
+
+        x, cache_layers = lax.scan(
+            _remat(body, remat_policy), x, params["layers"]
+        )
+
+    logits = _lm_head(params, x[:, -1:, :], cfg)
+    cache = {"layers": cache_layers}
+    if cross is not None:
+        cache["cross"] = cross
+    return logits, cache, jnp.int32(S)
+
+
+def decode_step(
+    params, cache: Dict[str, Any], token: jax.Array, pos: jax.Array,
+    cfg: ArchConfig,
+):
+    """One decode step: token (B, 1) + cache -> (logits, new cache).
+
+    ``pos`` is the absolute position of ``token`` (scalar int32).
+    """
+
+    B = token.shape[0]
+    x = _embed_tokens(params, token, cfg)
+    sin, cos = _rope_tables(cfg, jnp.full((1, 1), pos, jnp.int32))
+    if sin is not None:
+        sin = jnp.broadcast_to(sin, (B,) + sin.shape[1:])
+        cos = jnp.broadcast_to(cos, (B,) + cos.shape[1:])
+    ctx = LayerCtx(cfg=cfg, mode="decode", sin=sin, cos=cos, pos=pos)
+
+    if cfg.family == "encdec":
+        def body(h, xs):
+            layer_params, layer_cache, cross_kv = xs
+            core = {k: layer_params[k] for k in ("ln1", "attn", "ln2", "mlp")}
+            h2, c = blocks.layer_apply(core, h, ctx, layer_cache)
+            h3 = h2 + _cross_attention(
+                layer_params["xattn"],
+                rms_norm(h2, layer_params["lnx"]),
+                (cross_kv["k"], cross_kv["v"]), cfg,
+            )
+            return h3, c
+
+        x, new_layers = lax.scan(
+            body, x, (params["layers"], cache["layers"], cache["cross"])
+        )
+        new_cache = {"layers": new_layers, "cross": cache["cross"]}
+    else:
+        def body(h, xs):
+            layer_params, layer_cache = xs
+            h2, c = blocks.layer_apply(layer_params, h, ctx, layer_cache)
+            return h2, c
+
+        x, new_layers = lax.scan(body, x, (params["layers"], cache["layers"]))
+        new_cache = {"layers": new_layers}
+
+    logits = _lm_head(params, x, cfg)
+    return logits, new_cache

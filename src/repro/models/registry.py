@@ -1,0 +1,149 @@
+"""Model registry: config lookup, abstract params, input specs, smoke configs.
+
+``--arch <id>`` resolution for launchers/benchmarks goes through here.  The
+registry also builds the dry-run's ShapeDtypeStruct inputs for every
+(architecture x shape) cell, including the modality-stub inputs for
+``[audio]``/``[vlm]`` entries (precomputed frame/patch embeddings per the
+assignment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.common import SHAPES, ArchConfig, dtype_of
+
+__all__ = [
+    "ARCH_IDS",
+    "get_config",
+    "reduced_config",
+    "abstract_params",
+    "input_specs",
+    "cell_is_applicable",
+    "build_model",
+]
+
+ARCH_IDS = (
+    "minitron_8b",
+    "phi4_mini_3_8b",
+    "minicpm3_4b",
+    "stablelm_12b",
+    "whisper_medium",
+    "chameleon_34b",
+    "mixtral_8x22b",
+    "arctic_480b",
+    "mamba2_130m",
+    "hymba_1_5b",
+)
+
+_ALIASES = {i.replace("_", "-"): i for i in ARCH_IDS}
+
+
+def get_config(name: str) -> ArchConfig:
+    key = _ALIASES.get(name, name).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{key}")
+    return mod.CONFIG
+
+
+def reduced_config(cfg: ArchConfig) -> ArchConfig:
+    """Family-preserving tiny config for CPU smoke tests."""
+
+    changes: Dict[str, Any] = dict(
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) or 2,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab=128,
+        head_dim=16,
+    )
+    if cfg.family == "mla":
+        changes.update(q_lora_rank=32, kv_lora_rank=16, rope_head_dim=8,
+                       nope_head_dim=8, v_head_dim=16)
+    if cfg.n_experts:
+        # capacity_factor = n_experts -> capacity == T*k: drop-free routing,
+        # so prefill/decode outputs match teacher forcing exactly in tests.
+        changes.update(n_experts=4, top_k=2, moe_d_ff=64, capacity_factor=4.0)
+    if cfg.ssm_state:
+        changes.update(ssm_state=16, ssm_head_dim=16, ssm_heads=0,
+                       ssm_chunk=8)
+    if cfg.window is not None:
+        changes.update(window=16)
+    if cfg.family == "encdec":
+        changes.update(enc_layers=2, enc_seq=24)
+    changes["param_dtype"] = "float32"
+    changes["compute_dtype"] = "float32"
+    return dataclasses.replace(cfg, **changes)
+
+
+def abstract_params(cfg: ArchConfig):
+    return lm.abstract_params(cfg)
+
+
+def cell_is_applicable(cfg: ArchConfig, shape_name: str) -> Tuple[bool, str]:
+    """The assignment's skip rules (recorded in DESIGN.md / EXPERIMENTS.md)."""
+
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, (
+            f"{cfg.name}: long_500k skipped — pure full attention "
+            "(O(S) KV state per step; no sub-quadratic path)"
+        )
+    return True, ""
+
+
+def input_specs(
+    cfg: ArchConfig, shape_name: str, *, global_batch: Optional[int] = None
+) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell.
+
+    * train:   {tokens (B,S), [enc_input]}
+    * prefill: {tokens (B,S), [enc_input]}
+    * decode:  {token (B,1), pos (), cache pytree}
+    """
+
+    shp = SHAPES[shape_name]
+    B = global_batch or shp["batch"]
+    S = shp["seq"]
+    kind = shp["kind"]
+    i32 = jnp.int32
+
+    if kind in ("train", "prefill"):
+        specs: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+        }
+        if cfg.family == "encdec":
+            specs["enc_input"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_seq, cfg.d_model), dtype_of(cfg.compute_dtype)
+            )
+        return specs
+
+    # decode: one new token against a cache of S past positions.
+    specs = {
+        "token": jax.ShapeDtypeStruct((B, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+        "cache": lm.abstract_cache(cfg, B, S),
+    }
+    return specs
+
+
+def build_model(cfg: ArchConfig):
+    """Bundle of the pure model functions for this config."""
+
+    return {
+        "init_params": lambda key: lm.init_params(cfg, key),
+        "abstract_params": lambda: lm.abstract_params(cfg),
+        "param_axes": lambda: lm.param_axes(cfg),
+        "forward": lambda p, t, **kw: lm.forward(p, t, cfg, **kw),
+        "loss_fn": lambda p, b, **kw: lm.loss_fn(p, b, cfg, **kw),
+        "prefill": lambda p, t, L, **kw: lm.prefill(p, t, cfg, L, **kw),
+        "decode_step": lambda p, c, t, pos: lm.decode_step(p, c, t, pos, cfg),
+        "cache_axes": lambda b, s: lm.cache_axes(cfg, b, s),
+        "abstract_cache": lambda b, s: lm.abstract_cache(cfg, b, s),
+        "init_cache": lambda b, s: lm.init_cache(cfg, b, s),
+    }

@@ -1,0 +1,18 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    clip_by_global_norm,
+    sgd,
+    warmup_cosine,
+)
+from repro.optim.compression import ErrorFeedbackState, ef_int8_allreduce
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "sgd",
+    "clip_by_global_norm",
+    "warmup_cosine",
+    "ErrorFeedbackState",
+    "ef_int8_allreduce",
+]

@@ -1,0 +1,137 @@
+"""Optimizers: the IMRU ``update`` UDF family for LM training.
+
+Pure pytree (init, update) pairs — no external dependency.  The planner's
+ZeRO choice only changes the *sharding* of the state this module creates
+(see ``launch.train``); the math is identical, which is exactly the paper's
+logical/physical separation.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "sgd", "adamw", "clip_by_global_norm",
+           "warmup_cosine"]
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def _tree_map2(f, a, b):
+    return jax.tree_util.tree_map(f, a, b)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                      for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads
+    ), gn
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, (step + 1.0) / max(warmup, 1))
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (floor + (1 - floor) * 0.5 *
+                         (1.0 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def sgd(lr: float | Callable = 1e-2, momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        if momentum == 0.0:
+            new_params = _tree_map2(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr_t * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads,
+            )
+            return new_params, ()
+        new_m = _tree_map2(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state, grads
+        )
+        new_params = _tree_map2(
+            lambda p, m: (p.astype(jnp.float32) - lr_t * m).astype(p.dtype),
+            params, new_m,
+        )
+        return new_params, new_m
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    m: Any
+    v: Any
+
+
+def adamw(
+    lr: float | Callable = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    state_dtype=jnp.float32,
+) -> Optimizer:
+    """AdamW with f32 state (dtype planner-overridable for memory-bound
+    configs — arctic-480b uses bf16 first moment)."""
+
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return AdamState(
+            m=jax.tree_util.tree_map(zeros, params),
+            v=jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            ),
+        )
+
+    def update(grads, state, params, step):
+        step_f = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** step_f
+        c2 = 1.0 - b2 ** step_f
+
+        new_m = _tree_map2(
+            lambda m, g: (b1 * m.astype(jnp.float32)
+                          + (1 - b1) * g.astype(jnp.float32)).astype(m.dtype),
+            state.m, grads,
+        )
+        new_v = _tree_map2(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.v, grads,
+        )
+
+        def upd(p, m, v):
+            mh = m.astype(jnp.float32) / c1
+            vh = v / c2
+            step_ = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * step_).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, new_m, new_v)
+        return new_params, AdamState(new_m, new_v)
+
+    return Optimizer(init, update)

@@ -1,0 +1,17 @@
+from repro.parallel.sharding import (
+    ShardingRules,
+    activation_sharding_context,
+    ambient_axis_size,
+    logical_to_spec,
+    shard,
+    spec_for_param,
+)
+
+__all__ = [
+    "ShardingRules",
+    "activation_sharding_context",
+    "ambient_axis_size",
+    "logical_to_spec",
+    "shard",
+    "spec_for_param",
+]

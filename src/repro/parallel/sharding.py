@@ -1,0 +1,185 @@
+"""Logical-axis sharding rules (the planner's sharding vocabulary).
+
+Model code annotates parameters and activations with *logical* axis names
+("batch", "embed", "heads", "experts", ...).  A :class:`ShardingRules`
+instance — chosen by the physical planner per (arch x shape x mesh) — maps
+logical names to mesh axes.  This is the paper's logical/physical separation
+applied to tensor layout: the model definition never mentions mesh axes, so
+re-planning (elastic remesh, hillclimbing) never touches model code.
+
+Key rules and what they correspond to:
+
+* ``tensor`` — Megatron-style tensor parallelism axis (heads/ffn/vocab/
+  experts sharded over ``model``).
+* ``fsdp`` — ZeRO-3: parameter + optimizer-state sharding over the ``data``
+  axis; XLA inserts the per-layer all-gathers inside the layer scan.
+* ``batch`` — pure data parallelism over (``pod``, ``data``).
+* ``kv_seq`` — decode-time KV-cache *sequence* sharding over ``model``
+  (sequence-parallel attention: softmax statistics combine via the two small
+  all-reduces XLA emits for reductions over a sharded dimension).  This is
+  the TPU-native answer to GQA head counts not dividing the model axis.
+
+``shard(x, *logical)`` applies ``with_sharding_constraint`` using an ambient
+(ContextVar) rules+mesh pair so model code stays mesh-free; it is a no-op
+outside a context (single-device smoke tests).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass, field, replace
+from typing import Mapping, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ShardingRules",
+    "logical_to_spec",
+    "spec_for_param",
+    "shard",
+    "activation_sharding_context",
+]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Map logical axis name -> mesh axis (or tuple of axes, or None)."""
+
+    rules: Tuple[Tuple[str, object], ...] = (
+        ("batch", ("pod", "data")),
+        ("seq", None),
+        ("embed", None),
+        ("heads", "model"),
+        ("kv_heads", None),
+        ("qkv", "model"),
+        ("ffn", "model"),
+        ("vocab", "model"),
+        ("experts", "model"),
+        ("expert_ffn", None),
+        ("kv_seq", "model"),
+        ("kv_lora", None),
+        # SSM baseline: replicated over `model` — head counts (24, 50) do
+        # not divide the 16-way axis and sharding the fused conv_dim breaks
+        # at the (H, P) head reshape (GSPMD inserts collective-permute
+        # reshard storms; measured in §Perf).  The state-dim-sharding
+        # hillclimb revisits this.
+        ("ssm_heads", None),
+        ("ssm_state", None),
+        ("conv_dim", None),
+        ("fsdp", None),          # resolved by param spec when fsdp=True
+        ("stack", None),         # scan-over-layers leading axis
+    )
+    fsdp: bool = False           # ZeRO-3 parameter sharding over `data`
+    fsdp_axis: str = "data"
+    expert_parallel: bool = True
+
+    def get(self, name: str):
+        for n, v in self.rules:
+            if n == name:
+                return v
+        raise KeyError(f"unknown logical axis {name!r}")
+
+    def with_rule(self, name: str, value) -> "ShardingRules":
+        new = tuple(
+            (n, value if n == name else v) for n, v in self.rules
+        )
+        if name not in [n for n, _ in self.rules]:
+            new = new + ((name, value),)
+        return replace(self, rules=new)
+
+
+def logical_to_spec(rules: ShardingRules, logical: Sequence[Optional[str]],
+                    *, param: bool = False,
+                    shape: Optional[Sequence[int]] = None,
+                    mesh: Optional[Mesh] = None) -> P:
+    """Resolve logical axes to a PartitionSpec.
+
+    * a mesh axis is used at most once (first logical axis wins);
+    * with ``shape``+``mesh``, axes that do not divide the dimension are
+      dropped (replicated) — e.g. 24 query heads on a 16-way ``model`` axis
+      fall back to replicated attention (recorded by the planner; the
+      head-dim-sharding hillclimb addresses it);
+    * under ``fsdp``, *parameter* ``embed`` dims shard over the data axis
+      (ZeRO-3); activation ``embed`` stays replicated.
+    """
+
+    used: set = set()
+    out = []
+    for i, name in enumerate(logical):
+        if name is None:
+            out.append(None)
+            continue
+        if name == "fsdp":
+            v = rules.fsdp_axis if (rules.fsdp and param) else None
+        elif param and rules.fsdp and name == "embed":
+            v = rules.fsdp_axis
+        elif name == "experts" and not rules.expert_parallel:
+            v = None
+        else:
+            v = rules.get(name)
+        if v is None:
+            out.append(None)
+            continue
+        axes = (v,) if isinstance(v, str) else tuple(v)
+        axes = tuple(a for a in axes if a not in used)
+        if shape is not None and mesh is not None:
+            # Greedy divisibility filter over the axis product.
+            kept, dim = [], shape[i]
+            for a in axes:
+                size = mesh.shape.get(a, 1)
+                if size > 1 and dim % size == 0:
+                    kept.append(a)
+                    dim //= size
+            axes = tuple(kept)
+        if not axes:
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(axes[0] if len(axes) == 1 else axes)
+    return P(*out)
+
+
+def spec_for_param(rules: ShardingRules, logical: Sequence[Optional[str]],
+                   shape: Optional[Sequence[int]] = None,
+                   mesh: Optional[Mesh] = None) -> P:
+    return logical_to_spec(rules, logical, param=True, shape=shape, mesh=mesh)
+
+
+# -- ambient activation-sharding context ------------------------------------
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_sharding", default=None
+)
+
+
+@contextlib.contextmanager
+def activation_sharding_context(mesh: Optional[Mesh], rules: ShardingRules):
+    token = _CTX.set((mesh, rules) if mesh is not None else None)
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def ambient_axis_size(name: str) -> int:
+    """Size of a mesh axis in the ambient context (1 when no context)."""
+
+    ctx = _CTX.get()
+    if ctx is None:
+        return 1
+    mesh, _ = ctx
+    return int(mesh.shape.get(name, 1))
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain an activation's sharding by logical axis names (no-op when
+    no ambient context is installed — e.g. CPU unit tests)."""
+
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = logical_to_spec(rules, logical, shape=x.shape, mesh=mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,129 @@
+"""Planner tests: IMRU/Pregel physical plans (paper Figs. 4-5 rewrites) and
+the LM planner's arch x shape x mesh decisions."""
+
+import numpy as np
+import pytest
+
+from repro.core.hardware import MeshSpec, TPU_V5E
+from repro.core.lm_planner import plan_lm
+from repro.core.planner import (
+    IMRUStats,
+    PregelStats,
+    ReduceSchedule,
+    plan_imru,
+    plan_pregel,
+)
+from repro.models.registry import get_config
+
+SINGLE = MeshSpec((("data", 16), ("model", 16)))
+MULTI = MeshSpec((("pod", 2), ("data", 16), ("model", 16)))
+
+
+# ---------------------------------------------------------------------------
+# IMRU / Pregel planners (paper-native)
+# ---------------------------------------------------------------------------
+
+
+def _bgd_stats(stat_mb=16):
+    return IMRUStats(
+        n_records=16_557_921, record_bytes=400,
+        model_bytes=stat_mb * 2**20, stat_bytes=stat_mb * 2**20,
+        flops_per_record=1e4,
+    )
+
+
+def test_imru_plan_applies_paper_rules():
+    plan = plan_imru(_bgd_stats(), SINGLE)
+    assert plan.cache_training_data
+    assert any("early-aggregation" in n for n in plan.notes)
+    assert any("aggregation-tree" in n for n in plan.notes)
+
+
+def test_imru_plan_is_deterministic():
+    a = plan_imru(_bgd_stats(), MULTI)
+    b = plan_imru(_bgd_stats(), MULTI)
+    assert a == b
+
+
+def test_imru_reduce_schedule_costs_ordering():
+    """The paper's model-volume property: for a big aggregate on a multi-pod
+    mesh, hierarchical (ICI-first) beats flat (DCN-ring-limited)."""
+
+    big = 512 * 2**20
+    flat = ReduceSchedule("flat").cost(big, MULTI, TPU_V5E)
+    hier = ReduceSchedule("hierarchical").cost(big, MULTI, TPU_V5E)
+    assert hier.seconds < flat.seconds
+
+
+def test_imru_kary_tree_wins_for_small_payload_many_pods():
+    mesh = MeshSpec((("pod", 64), ("data", 4), ("model", 16)))
+    small = 64 * 2**10
+    hier = ReduceSchedule("hierarchical").cost(small, mesh, TPU_V5E)
+    kary = ReduceSchedule("kary_tree", kary=4).cost(small, mesh, TPU_V5E)
+    assert kary.seconds < hier.seconds
+
+
+def test_pregel_plan_dense_vs_sparse_crossover():
+    """Dense psum wins for dense graphs; sparse exchange for very sparse
+    ones (the Fig. 9 connector tradeoff)."""
+
+    dense_graph = PregelStats(n_vertices=1_000_000, n_edges=50_000_000,
+                              vertex_bytes=8, msg_bytes=8)
+    sparse_graph = PregelStats(n_vertices=1_000_000_000, n_edges=50_000_000,
+                               vertex_bytes=8, msg_bytes=8)
+    p1 = plan_pregel(dense_graph, SINGLE)
+    p2 = plan_pregel(sparse_graph, SINGLE)
+    assert p1.connector == "dense_psum"
+    assert p2.connector in ("merging", "hash_sort")
+
+
+# ---------------------------------------------------------------------------
+# LM planner
+# ---------------------------------------------------------------------------
+
+
+def test_lm_plan_zero3_for_big_models():
+    for arch, expect_fsdp in [("minitron_8b", False), ("chameleon_34b", True),
+                              ("arctic_480b", True), ("mamba2_130m", False)]:
+        plan = plan_lm(get_config(arch), "train_4k", SINGLE)
+        assert plan.rules.fsdp == expect_fsdp, arch
+
+
+def test_lm_plan_arctic_dtype_policy():
+    plan = plan_lm(get_config("arctic_480b"), "train_4k", SINGLE)
+    assert plan.cfg.param_dtype == "bfloat16"
+    assert plan.m_dtype == "bfloat16"
+
+
+def test_lm_plan_expert_placement():
+    arctic = plan_lm(get_config("arctic_480b"), "train_4k", SINGLE)
+    mixtral = plan_lm(get_config("mixtral_8x22b"), "train_4k", SINGLE)
+    assert arctic.rules.expert_parallel          # 128 % 16 == 0
+    assert not mixtral.rules.expert_parallel     # 8 % 16 != 0
+
+
+def test_lm_plan_attention_replication_rule():
+    phi4 = plan_lm(get_config("phi4_mini_3_8b"), "train_4k", SINGLE)
+    minitron = plan_lm(get_config("minitron_8b"), "train_4k", SINGLE)
+    assert any("attention-replicated" in n for n in phi4.notes)
+    assert phi4.rules.get("qkv") is None
+    assert not any("attention-replicated" in n for n in minitron.notes)
+    assert minitron.rules.get("qkv") == "model"
+
+
+def test_lm_plan_microbatching_scales_with_depth():
+    plan = plan_lm(get_config("minitron_8b"), "train_4k", SINGLE)
+    assert plan.microbatches > 1
+    assert any("microbatch" in n for n in plan.notes)
+
+
+def test_lm_plan_decode_has_no_remat_or_microbatch():
+    plan = plan_lm(get_config("minitron_8b"), "decode_32k", SINGLE)
+    assert plan.remat == "none" and plan.microbatches == 1
+    assert any("storage-selection" in n for n in plan.notes)
+
+
+def test_lm_plan_deterministic():
+    a = plan_lm(get_config("mixtral_8x22b"), "train_4k", MULTI)
+    b = plan_lm(get_config("mixtral_8x22b"), "train_4k", MULTI)
+    assert a == b

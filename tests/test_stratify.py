@@ -1,0 +1,229 @@
+"""Tests for Datalog stratification + XY-stratification (paper Appendix B)."""
+
+import pytest
+
+from repro.core.datalog import (
+    Aggregate,
+    AggExpr,
+    Atom,
+    Comparison,
+    Const,
+    Negation,
+    Program,
+    Rule,
+    TempSucc,
+    TempVar,
+    TempZero,
+    Var,
+)
+from repro.core import stratify
+from repro.core.listings import imru_program, pregel_program
+
+
+def _sum_agg():
+    return Aggregate("reduce", zero=lambda: 0.0, combine=lambda a, b: a + b)
+
+
+def _combine_agg():
+    return Aggregate("combine", zero=lambda: 0.0, combine=lambda a, b: a + b)
+
+
+def make_imru():
+    return imru_program(aggregates={"reduce": _sum_agg()})
+
+
+def make_pregel():
+    return pregel_program(aggregates={"combine": _combine_agg()})
+
+
+# ---------------------------------------------------------------------------
+# Ordinary stratification
+# ---------------------------------------------------------------------------
+
+
+def test_nonrecursive_program_stratifies():
+    p = Program(
+        rules=(
+            Rule(Atom("b", (Var("X"),)), (Atom("a", (Var("X"),)),), label="r1"),
+            Rule(
+                Atom("c", (Var("X"),)),
+                (Atom("b", (Var("X"),)), Negation(Atom("a", (Var("X"),)))),
+                label="r2",
+            ),
+        ),
+        edb={"a": 1},
+    )
+    strata = stratify.stratify(p)
+    assert strata["c"] > strata["a"]
+
+
+def test_negative_cycle_rejected():
+    p = Program(
+        rules=(
+            Rule(Atom("p", (Var("X"),)), (Negation(Atom("q", (Var("X"),))), Atom("e", (Var("X"),))), label="r1"),
+            Rule(Atom("q", (Var("X"),)), (Negation(Atom("p", (Var("X"),))), Atom("e", (Var("X"),))), label="r2"),
+        ),
+        edb={"e": 1},
+    )
+    with pytest.raises(stratify.StratificationError):
+        stratify.stratify(p)
+
+
+def test_transitive_closure_is_recursive():
+    X, Y, Z = Var("X"), Var("Y"), Var("Z")
+    p = Program(
+        rules=(
+            Rule(Atom("tc", (X, Y)), (Atom("edge", (X, Y)),), label="base"),
+            Rule(
+                Atom("tc", (X, Z)),
+                (Atom("tc", (X, Y)), Atom("edge", (Y, Z))),
+                label="step",
+            ),
+        ),
+        edb={"edge": 2},
+    )
+    assert "tc" in stratify.recursive_predicates(p)
+    # Positive recursion stratifies fine.
+    stratify.stratify(p)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1: the two listings are XY-stratified
+# ---------------------------------------------------------------------------
+
+
+def test_imru_is_xy_stratified():
+    classes = stratify.xy_validate(make_imru())
+    assert classes == {"G1": "base", "G2": "x", "G3": "y"}
+
+
+def test_pregel_is_xy_stratified():
+    classes = stratify.xy_validate(make_pregel())
+    assert classes["L1"] == "base"
+    assert classes["L2"] == "base"
+    assert classes["L3"] == "x"
+    assert classes["L4"] == "frontier"
+    assert classes["L5"] == "frontier"
+    assert classes["L6"] == "x"
+    assert classes["L7"] == "y"
+    assert classes["L8"] == "y"
+
+
+def test_imru_residual_two_strata():
+    """Theorem 2: the new_/old_ residual of Listing 2 is stratified with
+    new_collect in the highest stratum."""
+
+    residual = stratify.xy_transform(make_imru())
+    strata = stratify.stratify(residual)
+    assert strata["new_collect"] == max(
+        strata["new_collect"], strata["new_model"]
+    )
+    assert strata["new_collect"] > strata["new_model"]
+
+
+def test_pregel_residual_stratified():
+    """Theorem 3: the residual of Listing 1 stratifies (two strata)."""
+
+    residual = stratify.xy_transform(make_pregel())
+    strata = stratify.stratify(residual)
+    assert strata["new_collect"] > strata["new_send"]
+    assert strata["new_maxVertexJ"] > strata["new_vertex"]
+    assert strata["new_superstep"] >= strata["new_collect"]
+    assert max(strata.values()) - min(strata.values()) >= 1
+
+
+def test_imru_schedule_order():
+    sched = stratify.iteration_schedule(make_imru())
+    assert [r.label for r in sched.init_rules] == ["G1"]
+    assert [r.label for r in sched.body_rules] == ["G2", "G3"]
+    assert "model" in sched.carried
+
+
+def test_pregel_schedule_order():
+    """Section 3.3: 'each iteration fires rules in the order L3, ..., L8'."""
+
+    sched = stratify.iteration_schedule(make_pregel())
+    assert [r.label for r in sched.init_rules] == ["L1", "L2"]
+    assert [r.label for r in sched.body_rules] == [
+        "L3", "L4", "L5", "L6", "L7", "L8",
+    ]
+    assert set(sched.carried) >= {"vertex", "send"}
+
+
+# ---------------------------------------------------------------------------
+# Negative cases: programs violating Definition 2 are rejected
+# ---------------------------------------------------------------------------
+
+
+def test_missing_temporal_argument_rejected():
+    J, Jp1 = TempVar("J"), TempSucc("J")
+    X = Var("X")
+    p = Program(
+        rules=(
+            Rule(Atom("p", (TempZero(), X), temporal=True), (Atom("e", (X,)),), label="init"),
+            # q is in the recursive cycle but has no temporal argument.
+            Rule(Atom("q", (X,)), (Atom("p", (J, X), temporal=True),), label="bad"),
+            Rule(
+                Atom("p", (Jp1, X), temporal=True),
+                (Atom("q", (X,)), Atom("p", (J, X), temporal=True)),
+                label="step",
+            ),
+        ),
+        edb={"e": 1},
+    )
+    with pytest.raises(stratify.XYError):
+        stratify.xy_validate(p)
+
+
+def test_y_rule_without_current_goal_rejected():
+    Jp1 = TempSucc("J")
+    X = Var("X")
+    p = Program(
+        rules=(
+            Rule(Atom("p", (TempZero(), X), temporal=True), (Atom("e", (X,)),), label="init"),
+            # Y-rule whose only recursive goal is at J+1: no positive goal at J.
+            Rule(
+                Atom("p", (Jp1, X), temporal=True),
+                (Atom("p", (Jp1, X), temporal=True),),
+                label="bad",
+            ),
+        ),
+        edb={"e": 1},
+    )
+    with pytest.raises(stratify.XYError):
+        stratify.xy_validate(p)
+
+
+def test_x_rule_reading_future_rejected():
+    J, Jp1 = TempVar("J"), TempSucc("J")
+    X = Var("X")
+    p = Program(
+        rules=(
+            Rule(Atom("p", (TempZero(), X), temporal=True), (Atom("e", (X,)),), label="init"),
+            Rule(
+                Atom("q", (J, X), temporal=True),
+                (Atom("p", (Jp1, X), temporal=True),),
+                label="bad-x",
+            ),
+            Rule(
+                Atom("p", (Jp1, X), temporal=True),
+                (Atom("q", (J, X), temporal=True), Atom("p", (J, X), temporal=True)),
+                label="step",
+            ),
+        ),
+        edb={"e": 1},
+    )
+    with pytest.raises(stratify.XYError):
+        stratify.xy_validate(p)
+
+
+def test_program_validate_checks_arity_and_udfs():
+    X = Var("X")
+    p = Program(
+        rules=(
+            Rule(Atom("p", (X,)), (Atom("e", (X, X)),), label="r"),
+        ),
+        edb={"e": 1},  # declared arity 1, used with arity 2
+    )
+    with pytest.raises(ValueError):
+        p.validate()

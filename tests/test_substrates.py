@@ -1,0 +1,214 @@
+"""Substrate tests: optimizers, checkpoint store, data pipeline, FT,
+compression — including the hypothesis property tests on system invariants."""
+
+import os
+import time
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointStore, latest_step, restore_pytree, \
+    save_pytree
+from repro.core.physical import compress_int8_ef, decompress_int8
+from repro.data import DataConfig, SyntheticLMStream, batch_for_step
+from repro.ft import ElasticPlanner
+from repro.ft.elastic import stale_aggregate
+from repro.optim import adamw, clip_by_global_norm, sgd, warmup_cosine
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: sgd(lr=0.1), lambda: sgd(lr=0.1, momentum=0.9),
+    lambda: adamw(lr=0.05, weight_decay=0.0),
+])
+def test_optimizer_minimizes_quadratic(make_opt):
+    opt = make_opt()
+    target = jnp.asarray(RNG.normal(size=(8,)), jnp.float32)
+    params = {"w": jnp.zeros(8, jnp.float32)}
+    state = opt.init(params)
+    for step in range(200):
+        grads = {"w": params["w"] - target}
+        params, state = opt.update(grads, state, params, jnp.int32(step))
+    np.testing.assert_allclose(np.asarray(params["w"]),
+                               np.asarray(target), atol=1e-2)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0), "b": jnp.full((3,), -10.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    total = sum(float(jnp.sum(jnp.square(l)))
+                for l in jax.tree_util.tree_leaves(clipped))
+    assert abs(total - 1.0) < 1e-5
+    assert float(gn) > 1.0
+
+
+def test_warmup_cosine_shape():
+    lr = warmup_cosine(1e-3, warmup=10, total=100)
+    vals = [float(lr(jnp.int32(s))) for s in range(100)]
+    assert vals[0] < vals[9] <= 1e-3 + 1e-9
+    assert vals[99] < vals[50] < vals[11]
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint store
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {
+        "params": {"w": jnp.asarray(RNG.normal(size=(4, 3)), jnp.float32),
+                   "b": jnp.asarray(RNG.normal(size=(3,)), jnp.bfloat16)},
+        "step": jnp.int32(7),
+    }
+
+
+def test_checkpoint_roundtrip_identity(tmp_path):
+    tree = _tree()
+    save_pytree(str(tmp_path), 7, tree, extra={"data_step": 7})
+    restored, step, extra = restore_pytree(str(tmp_path), like=tree)
+    assert step == 7 and extra == {"data_step": 7}
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep=2)
+    tree = _tree()
+    for s in (1, 2, 3, 4):
+        store.save(s, tree)
+    store.wait()
+    assert latest_step(str(tmp_path)) == 4
+    kept = sorted(n for n in os.listdir(tmp_path) if n.startswith("step_"))
+    assert kept == ["step_00000003", "step_00000004"]
+
+
+def test_checkpoint_crash_safety(tmp_path):
+    """A torn write never corrupts LATEST (commit protocol)."""
+
+    tree = _tree()
+    save_pytree(str(tmp_path), 1, tree)
+    # simulate a torn temp dir from a crash
+    os.makedirs(tmp_path / ".tmp_ckpt_dead", exist_ok=True)
+    with open(tmp_path / ".tmp_ckpt_dead" / "leaf_0.npy", "w") as f:
+        f.write("garbage")
+    restored, step, _ = restore_pytree(str(tmp_path), like=tree)
+    assert step == 1
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_is_pure_function_of_step():
+    dc = DataConfig(vocab=97, seq_len=16, global_batch=4, seed=3)
+    a = batch_for_step(dc, 12)["tokens"]
+    b = batch_for_step(dc, 12)["tokens"]
+    c = batch_for_step(dc, 13)["tokens"]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    assert int(jnp.max(a)) < 97
+
+
+def test_stream_resume_equals_uninterrupted():
+    dc = DataConfig(vocab=50, seq_len=8, global_batch=2)
+    full = [next(iter_) for iter_ in [SyntheticLMStream(dc)] for _ in range(6)]
+    s1 = SyntheticLMStream(dc)
+    first = [next(s1) for _ in range(3)]
+    ckpt = s1.state_dict()
+    s2 = SyntheticLMStream(dc)
+    s2.load_state_dict(ckpt)
+    rest = [next(s2) for _ in range(3)]
+    for a, b in zip(first + rest, full):
+        np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                      np.asarray(b["tokens"]))
+
+
+# ---------------------------------------------------------------------------
+# Compression + bounded staleness (hypothesis properties)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), steps=st.integers(2, 10))
+def test_error_feedback_total_is_preserved(seed, steps):
+    """sum of dequantized transmissions + final residual == sum of inputs
+    (error feedback never loses mass)."""
+
+    rng = np.random.default_rng(seed)
+    residual = jnp.zeros(32, jnp.float32)
+    total_in = np.zeros(32, np.float64)
+    total_tx = np.zeros(32, np.float64)
+    for _ in range(steps):
+        g = jnp.asarray(rng.normal(size=32) * rng.uniform(0.1, 10),
+                        jnp.float32)
+        q, scale, residual = compress_int8_ef(g, residual)
+        total_in += np.asarray(g, np.float64)
+        total_tx += np.asarray(decompress_int8(q, scale), np.float64)
+    np.testing.assert_allclose(
+        total_tx + np.asarray(residual, np.float64), total_in,
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 8))
+def test_stale_aggregate_all_on_time_is_exact_sum(seed, n):
+    rng = np.random.default_rng(seed)
+    partials = jnp.asarray(rng.normal(size=(n, 5)), jnp.float32)
+    out, late = stale_aggregate(
+        partials, jnp.ones(n, bool), jnp.zeros(5, jnp.float32)
+    )
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(partials).sum(0), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(late), 0.0, atol=0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_stale_aggregate_never_drops_mass(seed):
+    """Over two steps, delayed contributions arrive exactly once."""
+
+    rng = np.random.default_rng(seed)
+    p1 = jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)
+    arrived = jnp.asarray(rng.integers(0, 2, 4).astype(bool))
+    out1, late = stale_aggregate(p1, arrived, jnp.zeros(3, jnp.float32))
+    p2 = jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)
+    out2, late2 = stale_aggregate(p2, jnp.ones(4, bool), late)
+    np.testing.assert_allclose(
+        np.asarray(out1 + out2),
+        np.asarray(p1.sum(0) + p2.sum(0)), rtol=1e-4, atol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Elastic replanning
+# ---------------------------------------------------------------------------
+
+
+def test_elastic_replan_keeps_model_axis():
+    ep = ElasticPlanner(model_axis=16)
+    mesh, stranded = ep.replan(512, multi_pod=True)
+    assert mesh.size("model") == 16 and mesh.n_devices == 512
+    mesh, stranded = ep.replan(500)       # lost 12 devices
+    assert mesh.size("model") == 16
+    assert mesh.n_devices == 496 and stranded == 4
+    with pytest.raises(RuntimeError):
+        ep.replan(7)
+
+
+def test_elastic_replan_is_deterministic():
+    ep = ElasticPlanner(model_axis=16)
+    assert ep.replan(300) == ep.replan(300)
