@@ -16,6 +16,7 @@ def main() -> int:
         fig7_bgd_scaleup,
         fig8_pagerank_speedup,
         fig9_connector_plans,
+        fig10_semi_naive,
         table1_pagerank_scaleup,
         roofline,
         microbench,
@@ -24,8 +25,8 @@ def main() -> int:
     print("name,us_per_call,derived")
     failures = 0
     for mod in (fig6_bgd_speedup, fig7_bgd_scaleup, fig8_pagerank_speedup,
-                table1_pagerank_scaleup, fig9_connector_plans, microbench,
-                roofline):
+                table1_pagerank_scaleup, fig9_connector_plans,
+                fig10_semi_naive, microbench, roofline):
         try:
             mod.main()
         except Exception:  # noqa: BLE001 - keep the suite running

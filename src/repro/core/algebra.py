@@ -56,6 +56,7 @@ __all__ = [
     "ScanState",
     "ScanView",
     "Frontier",
+    "Delta",
     "Apply",
     "Join",
     "Cross",
@@ -69,6 +70,7 @@ __all__ = [
     "RuleDataflow",
     "LogicalPlan",
     "translate",
+    "semi_naive_rewrite",
     "TranslationError",
 ]
 
@@ -169,6 +171,30 @@ class Frontier(LogicalOp):
 
     def _describe(self):
         return f"Frontier[{self.relation}]({', '.join(self.columns)})"
+
+
+@dataclass(frozen=True)
+class Delta(LogicalOp):
+    """Semi-naive read of a recursive predicate: only the facts derived in
+    the *previous* iteration (Δpred@J), not the full materialization.
+
+    The classic delta-relation rewrite of recursive query evaluation:
+    when every aggregate consuming this read is idempotent (max/min — stale
+    redelivery is absorbed) or rebuilt from scratch each iteration (Pregel's
+    per-superstep ``collect``), restricting the scan to the changed frontier
+    preserves the fixpoint while shrinking per-iteration work to O(Δ).
+    Physically this becomes the frontier-compacted edge scan + sparse
+    exchange of :mod:`repro.core.physical`.
+    """
+
+    relation: str
+    columns: Tuple[str, ...]
+
+    def schema(self):
+        return self.columns
+
+    def _describe(self):
+        return f"Delta[{self.relation}]({', '.join(self.columns)})"
 
 
 @dataclass(frozen=True)
@@ -631,6 +657,81 @@ def _translate_rule(
 
     next_state = isinstance(head_t, TempSucc)
     return RuleDataflow(rule.label or "?", head.pred, tree, next_state=next_state)
+
+
+# ---------------------------------------------------------------------------
+# Semi-naive rewrite (delta-frontier evaluation)
+# ---------------------------------------------------------------------------
+
+
+def _rewrite_ops(op: LogicalOp, fn) -> LogicalOp:
+    """Bottom-up rewrite over the operator tree (frozen dataclasses)."""
+
+    import dataclasses as _dc
+
+    changes = {}
+    for f in _dc.fields(op):
+        v = getattr(op, f.name)
+        if isinstance(v, LogicalOp):
+            new = _rewrite_ops(v, fn)
+            if new is not v:
+                changes[f.name] = new
+        elif isinstance(v, tuple) and v and all(
+            isinstance(x, LogicalOp) for x in v
+        ):
+            new_t = tuple(_rewrite_ops(x, fn) for x in v)
+            if any(a is not b for a, b in zip(new_t, v)):
+                changes[f.name] = new_t
+    if changes:
+        op = _dc.replace(op, **changes)
+    return fn(op)
+
+
+def semi_naive_rewrite(
+    plan: LogicalPlan, program: Program
+) -> Tuple[LogicalPlan, Tuple[str, ...]]:
+    """Rewrite eligible per-iteration rules to read delta frontiers.
+
+    For every body rule that :func:`~repro.core.stratify.delta_rewritable_rules`
+    proves safe, replace its :class:`ScanState` reads of carried recursive
+    predicates with :class:`Delta` reads (Δpred@J).  Returns the rewritten
+    plan plus planner notes naming each applied rewrite, e.g.
+    ``semi-naive(L3: send -> Δsend)`` — the notes surface in
+    ``PregelPhysicalPlan.explain()`` and are asserted by tests.
+    """
+
+    eligible = stratify.delta_rewritable_rules(program)
+    carried = frozenset(plan.carried)
+    notes: List[str] = []
+    new_body: List[RuleDataflow] = []
+    for df in plan.body:
+        if df.label not in eligible:
+            new_body.append(df)
+            continue
+        swapped: List[str] = []
+
+        def swap(op: LogicalOp) -> LogicalOp:
+            if isinstance(op, ScanState) and op.relation in carried:
+                swapped.append(op.relation)
+                return Delta(op.relation, op.columns)
+            return op
+
+        new_op = _rewrite_ops(df.op, swap)
+        if swapped:
+            notes.append(
+                f"semi-naive({df.label}: "
+                + ", ".join(f"{r} -> Δ{r}" for r in dict.fromkeys(swapped))
+                + ")"
+            )
+            df = RuleDataflow(df.label, df.target, new_op, df.next_state)
+        new_body.append(df)
+    new_plan = LogicalPlan(
+        name=plan.name,
+        init=plan.init,
+        body=tuple(new_body),
+        carried=plan.carried,
+    )
+    return new_plan, tuple(notes)
 
 
 def translate(program: Program) -> LogicalPlan:

@@ -329,6 +329,18 @@ class Aggregate:
     aggregates.  Commutativity + associativity is exactly the property the
     paper's planner exploits for early (sender-side) aggregation, and what the
     property-based tests verify for every registered aggregate.
+
+    ``idempotent`` marks combines where ``combine(x, x) == x`` (max/min):
+    re-delivering an old contribution cannot change the aggregate, so rules
+    folding with it may read the *delta* frontier (only changed facts) instead
+    of the full frontier — the semi-naive rewrite of classic Datalog
+    evaluation.  ``recomputable`` marks combines whose aggregate is rebuilt
+    from scratch every iteration by the executing plan (Pregel's per-superstep
+    inboxes: ``collect``@J is derived solely from ``send``@J, never folded
+    into ``collect``@J-1), which makes delta reads safe even for
+    non-idempotent combines like ``sum``.  Both default False: delta safety
+    is a soundness claim, so front-ends must opt in explicitly — an
+    unannotated aggregate keeps the full (naive) read.
     """
 
     name: str
@@ -336,6 +348,15 @@ class Aggregate:
     combine: Callable[[object, object], object]
     # Optional element->accumulator lift (defaults to identity).
     lift: Optional[Callable] = None
+    idempotent: bool = False
+    recomputable: bool = False
+
+    @property
+    def delta_safe(self) -> bool:
+        """True when rules aggregating with this combine may read the delta
+        frontier (semi-naive evaluation) without changing the fixpoint."""
+
+        return self.idempotent or self.recomputable
 
 
 @dataclass

@@ -52,6 +52,9 @@ class FixpointResult:
     converged: bool
     seconds: float = 0.0
     restarts: int = 0
+    # Per-iteration execution mode labels when an adaptive step selector ran
+    # ("dense" / "sparse@<cap>"); empty otherwise.
+    modes: Tuple[str, ...] = ()
 
 
 def device_fixpoint(
@@ -137,6 +140,9 @@ class HostFixpointDriver:
         save: Optional[Callable[[Any, int], None]] = None,
         restore: Optional[Callable[[], Tuple[Any, int]]] = None,
         on_iteration: Optional[Callable[[int, float], None]] = None,
+        select_step: Optional[
+            Callable[[Any, int], Tuple[Callable[[Any, int], Any], str]]
+        ] = None,
     ) -> None:
         self.step = step
         self.converged = converged
@@ -144,9 +150,20 @@ class HostFixpointDriver:
         self.save = save
         self.restore = restore
         self.on_iteration = on_iteration
+        # Adaptive execution (semi-naive Pregel): ``select_step(state, j)``
+        # inspects the carried state (e.g. measures the active frontier
+        # density) and returns ``(step_fn, mode_label)`` for this iteration —
+        # the plan's dense<->sparse choice recomputed online.  Labels are
+        # recorded in ``mode_history`` for tests and EXPERIMENTS.md.
+        self.select_step = select_step
+        self.mode_history: list[str] = []
         self.iter_times: list[float] = []
         self.straggler_events = 0
         self.restarts = 0
+        # Straggler window start: iterations recorded before the most recent
+        # restart are excluded from the trailing mean (their times belong to
+        # the failed attempt and would pollute the baseline).
+        self._window_start = 0
 
     # -- fault injection hook for tests ------------------------------------
     fail_at: Optional[int] = None  # raise once at iteration index (testing)
@@ -164,7 +181,11 @@ class HostFixpointDriver:
                         and not self._failed_once:
                     self._failed_once = True
                     raise RuntimeError(f"injected failure at iteration {j}")
-                new_state = self.step(state, j)
+                step_fn = self.step
+                if self.select_step is not None:
+                    step_fn, mode = self.select_step(state, j)
+                    self.mode_history.append(mode)
+                new_state = step_fn(state, j)
                 new_state = jax.block_until_ready(new_state)
             except Exception as exc:  # noqa: BLE001 — FT boundary
                 self.restarts += 1
@@ -175,14 +196,21 @@ class HostFixpointDriver:
                     "(restart %d/%d)", j, exc, self.restarts, cfg.max_restarts
                 )
                 state, j = self.restore()
+                # Iteration times recorded before the failure belong to the
+                # aborted attempt; restart the straggler window so the
+                # trailing mean reflects only post-restore iterations.
+                self._window_start = len(self.iter_times)
+                # Drop mode labels recorded for the failed attempt and for
+                # iterations about to be replayed, keeping mode_history[i]
+                # aligned with iteration start_iter + i.
+                del self.mode_history[max(j - start_iter, 0):]
                 continue
 
             dt = time.perf_counter() - t0
             self.iter_times.append(dt)
-            if len(self.iter_times) > 3:
-                trailing = sum(self.iter_times[-11:-1]) / len(
-                    self.iter_times[-11:-1]
-                )
+            window = self.iter_times[self._window_start:]
+            if len(window) > 3:
+                trailing = sum(window[-11:-1]) / len(window[-11:-1])
                 if dt > cfg.straggler_factor * trailing:
                     self.straggler_events += 1
                     logger.warning(
@@ -209,4 +237,5 @@ class HostFixpointDriver:
             converged=done,
             seconds=time.perf_counter() - t_start,
             restarts=self.restarts,
+            modes=tuple(self.mode_history),
         )

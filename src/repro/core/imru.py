@@ -62,6 +62,9 @@ def tree_sum_aggregate() -> Aggregate:
         name="reduce",
         zero=lambda: 0.0,
         combine=lambda a, b: jax.tree_util.tree_map(jnp.add, a, b),
+        # G2's collect@J is rebuilt from model@J every iteration, never
+        # folded into collect@J-1 — delta reads are safe.
+        recomputable=True,
     )
 
 

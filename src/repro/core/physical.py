@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.planner import ReduceSchedule
+from repro.kernels.segment_combine.ops import segment_combine as _segment_combine_kernel
 
 __all__ = [
     "psum_tree",
@@ -53,6 +54,9 @@ __all__ = [
     "dense_psum_exchange",
     "merging_exchange",
     "hash_sort_exchange",
+    "compact_active_edges",
+    "sparse_merging_exchange",
+    "sparse_hash_sort_exchange",
     "COMBINE_OPS",
 ]
 
@@ -71,6 +75,15 @@ COMBINE_OPS = {
 # ---------------------------------------------------------------------------
 # Reduce schedules (the aggregation-tree feature) — run inside shard_map
 # ---------------------------------------------------------------------------
+
+
+def _named_axis_size(axis: str) -> int:
+    """``lax.axis_size`` with a fallback for JAX versions that predate it:
+    ``psum`` of a static 1 over the axis constant-folds to the axis size."""
+
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis)
+    return lax.psum(1, axis)
 
 
 def _axes_present(axis_names: Sequence[str]) -> Tuple[str, ...]:
@@ -97,7 +110,7 @@ def kary_tree_psum(x: jax.Array, axis: str, k: int = 4) -> jax.Array:
     payloads over high-latency (cross-pod) links.
     """
 
-    n = lax.axis_size(axis)
+    n = _named_axis_size(axis)
     if n == 1:
         return x
     idx = lax.axis_index(axis)
@@ -179,7 +192,7 @@ def psum_tree(x: jax.Array, schedule: ReduceSchedule,
 def _axes_size(axes: Tuple[str, ...]) -> int:
     n = 1
     for a in axes:
-        n *= lax.axis_size(a)
+        n *= _named_axis_size(a)
     return n
 
 
@@ -247,27 +260,68 @@ def segment_combine_sorted(
     segment_ids: jax.Array,
     num_segments: int,
     op: str = "sum",
+    *,
+    edge_active: Optional[jax.Array] = None,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Pre-clustered (sorted) group-by combine — the *merging* side of Fig. 9.
 
     Requires ``segment_ids`` sorted ascending; reduces consecutive runs.
-    Implemented with ``jax.ops.segment_*`` with ``indices_are_sorted=True``
-    so XLA can use the cheap one-pass algorithm (the paper's pre-clustered
-    group-by exploiting the order property).  A Pallas TPU kernel with the
-    same contract lives in :mod:`repro.kernels.segment_combine`.
+    On TPU this dispatches to the Pallas kernel in
+    :mod:`repro.kernels.segment_combine` (banded one-hot matmuls with
+    scalar-prefetched band skipping); elsewhere it lowers to
+    ``jax.ops.segment_*`` with ``indices_are_sorted=True`` so XLA can use
+    the cheap one-pass algorithm (the paper's pre-clustered group-by
+    exploiting the order property).
+
+    ``edge_active`` (optional bool[E]) is the semi-naive delta-frontier
+    mask: rows outside the frontier are excluded from the combine, and the
+    kernel path skips fully-inactive edge blocks outright via its
+    scalar-prefetched active-block bitmap.  Empty segments differ by path
+    (kernel: combine identity mapped to 0; XLA max/min: ±inf) — Pregel
+    callers gate them behind the ``got``-a-message mask either way.
     """
 
+    if use_kernel is None:
+        # Auto-dispatch only for f32 payloads: the kernel accumulates in
+        # f32, which would silently narrow f64/int payloads of pre-existing
+        # callers.  Non-f32 callers can still opt in with use_kernel=True.
+        use_kernel = (
+            jax.default_backend() == "tpu" or bool(interpret)
+        ) and values.dtype == jnp.float32
+    if use_kernel:
+        flat = values.reshape(values.shape[0], -1).astype(jnp.float32)
+        out = _segment_combine_kernel(
+            flat, segment_ids.astype(jnp.int32), num_segments, op,
+            edge_active=edge_active, interpret=interpret, use_kernel=True,
+        )
+        return out.reshape((num_segments,) + values.shape[1:]).astype(
+            values.dtype
+        )
+    indices_sorted = True
+    if edge_active is not None:
+        # num_segments is out of range for the scatter underneath
+        # jax.ops.segment_* — excluded rows are dropped, not combined.
+        # The remap interleaves out-of-range ids among the sorted runs, so
+        # the sortedness hint must be dropped (XLA's one-pass sorted
+        # reduction would mis-detect runs).
+        segment_ids = jnp.where(edge_active, segment_ids, num_segments)
+        indices_sorted = False
     if op == "sum":
         return jax.ops.segment_sum(
-            values, segment_ids, num_segments, indices_are_sorted=True
+            values, segment_ids, num_segments,
+            indices_are_sorted=indices_sorted,
         )
     if op == "max":
         return jax.ops.segment_max(
-            values, segment_ids, num_segments, indices_are_sorted=True
+            values, segment_ids, num_segments,
+            indices_are_sorted=indices_sorted,
         )
     if op == "min":
         return jax.ops.segment_min(
-            values, segment_ids, num_segments, indices_are_sorted=True
+            values, segment_ids, num_segments,
+            indices_are_sorted=indices_sorted,
         )
     raise ValueError(f"unsupported combine op {op!r}")
 
@@ -277,12 +331,18 @@ def scatter_combine(
     segment_ids: jax.Array,
     num_segments: int,
     op: str = "sum",
+    *,
+    edge_active: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Unordered scatter-reduce — the *hash* (+sort-free) side of Fig. 9.
 
     No sortedness assumption: every row scatters into its destination slot.
+    Rows where ``edge_active`` is False take an out-of-range destination and
+    are dropped by the scatter.
     """
 
+    if edge_active is not None:
+        segment_ids = jnp.where(edge_active, segment_ids, num_segments)
     fn, init = COMBINE_OPS[op]
     out = jnp.full((num_segments,) + values.shape[1:], init, values.dtype)
     if op == "sum":
@@ -317,12 +377,84 @@ def index_join(state: jax.Array, ids: jax.Array) -> jax.Array:
 # static shapes (TPU-native dense formulation of the sparse exchange).
 
 
+def compact_active_edges(
+    edge_mask: jax.Array, cap: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Sort-free fixed-capacity compaction of the active-edge frontier.
+
+    Static-shape TPU formulation of "gather the indices where the mask is
+    set": a prefix sum over the mask followed by a vectorized binary search
+    that finds, for each of the ``cap`` output slots, the edge where the
+    running count first reaches it — no sort, no scatter, O(E + cap·log E),
+    jit/shard_map-safe.  Returns ``(idx, valid)`` where
+    ``idx`` is int32[cap] (edge index, or E for empty slots) and ``valid``
+    marks occupied slots.  Active edges beyond ``cap`` are dropped: the
+    caller (the adaptive driver) picks ``cap`` from the measured frontier
+    size, so overflow means it re-runs dense, never silently loses messages.
+    """
+
+    E = edge_mask.shape[0]
+    csum = jnp.cumsum(edge_mask.astype(jnp.int32))
+    # Slot s holds the edge where the running count first reaches s+1: a
+    # vectorized binary search over the monotone prefix sums — O(cap log E),
+    # no scatter (element-wise scatters serialize badly on some backends).
+    idx = jnp.searchsorted(
+        csum, jnp.arange(1, cap + 1, dtype=csum.dtype), side="left"
+    ).astype(jnp.int32)
+    valid = jnp.arange(cap, dtype=csum.dtype) < csum[-1]
+    idx = jnp.where(valid, idx, E)
+    return idx, valid
+
+
+def sparse_merging_exchange(
+    dst_ids: jax.Array,
+    payload: jax.Array,
+    edge_valid: jax.Array,
+    n_vertices: int,
+    axes: Tuple[str, ...],
+    op: str = "sum",
+    bucket_cap: Optional[int] = None,
+) -> jax.Array:
+    """Frontier-compacted variant of :func:`merging_exchange`.
+
+    Operates on a ``cap``-sized compacted edge slab (see
+    :func:`compact_active_edges`): ``edge_valid`` marks occupied slots;
+    empty slots are excluded from the combine (and from the Pallas kernel's
+    visited blocks).  Exchange + merge cost scales with the *frontier*
+    size, not E.
+    """
+
+    return merging_exchange(
+        dst_ids, payload, n_vertices, axes, op, bucket_cap,
+        edge_mask=edge_valid,
+    )
+
+
+def sparse_hash_sort_exchange(
+    dst_ids: jax.Array,
+    payload: jax.Array,
+    edge_valid: jax.Array,
+    n_vertices: int,
+    axes: Tuple[str, ...],
+    op: str = "sum",
+    bucket_cap: Optional[int] = None,
+) -> jax.Array:
+    """Frontier-compacted variant of :func:`hash_sort_exchange` (same slab
+    contract as :func:`sparse_merging_exchange`)."""
+
+    return hash_sort_exchange(
+        dst_ids, payload, n_vertices, axes, op, bucket_cap,
+        edge_mask=edge_valid,
+    )
+
+
 def dense_psum_exchange(
     dst_ids: jax.Array,
     payload: jax.Array,
     n_vertices: int,
     axes: Tuple[str, ...],
     op: str = "sum",
+    edge_mask: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Dense partial-vector exchange: each shard scatter-combines its
     outbound messages into a dense length-N vector, then a single
@@ -332,9 +464,15 @@ def dense_psum_exchange(
     the paper's observation that shuffling only the (dense) rank
     contributions beats re-shuffling the graph.  Best when the graph is
     dense enough that most destinations receive a message anyway.
+
+    ``edge_mask`` (the frontier-masked path): inactive edges are dropped by
+    the scatter, so a semi-naive plan can run the dense connector without
+    changing the fixpoint.
     """
 
-    dense = scatter_combine(payload, dst_ids, n_vertices, op)
+    dense = scatter_combine(
+        payload, dst_ids, n_vertices, op, edge_active=edge_mask
+    )
     axes = _axes_present(axes)
     if not axes:
         return dense
@@ -356,7 +494,7 @@ def dense_psum_exchange(
 def _linear_shard_index(axes: Tuple[str, ...]) -> jax.Array:
     idx = jnp.int32(0)
     for a in axes:
-        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+        idx = idx * _named_axis_size(a) + lax.axis_index(a)
     return idx
 
 
@@ -367,6 +505,7 @@ def _bucket_by_owner(
     n_shards: int,
     bucket_cap: int,
     presorted: bool,
+    edge_active=None,
 ):
     """Pack messages into fixed-capacity per-owner buckets for all_to_all.
 
@@ -374,10 +513,18 @@ def _bucket_by_owner(
     Overflow beyond ``bucket_cap`` is dropped — capacity is a planner-chosen
     static bound (tests use cap >= E_local so nothing drops), mirroring the
     fixed-size frame buffers of the Hyracks connectors.
+
+    Rows excluded by ``edge_active`` take the out-of-range owner
+    ``n_shards``: they sort after every real row, never compete with real
+    messages for bucket slots, and their scatter writes fall out of bounds
+    and are dropped — so a ``bucket_cap`` sized to the active frontier
+    stays safe.
     """
 
     n_local_v = n_vertices // n_shards
     owner = jnp.clip(dst_ids // n_local_v, 0, n_shards - 1)
+    if edge_active is not None:
+        owner = jnp.where(edge_active, owner, n_shards)
     order = jnp.argsort(owner * (n_vertices + 1) + (dst_ids if presorted else 0))
     owner_s = owner[order]
     ids_s = dst_ids[order]
@@ -404,23 +551,29 @@ def _bucket_by_owner(
 
 
 def _sparse_exchange(
-    dst_ids, payload, n_vertices, axes, op, bucket_cap, presorted
+    dst_ids, payload, n_vertices, axes, op, bucket_cap, presorted,
+    edge_active=None,
 ):
     axes = _axes_present(axes)
     if not axes:
-        combined = (
-            segment_combine_sorted if presorted else scatter_combine
-        )
-        ids = dst_ids
         if presorted:
-            order = jnp.argsort(ids)
-            ids, payload = ids[order], payload[order]
-        return combined(payload, ids, n_vertices, op)
+            order = jnp.argsort(dst_ids)
+            act = None if edge_active is None else edge_active[order]
+            return segment_combine_sorted(
+                payload[order], dst_ids[order], n_vertices, op,
+                edge_active=act,
+            )
+        return scatter_combine(
+            payload, dst_ids, n_vertices, op, edge_active=edge_active
+        )
 
+    # Sharded path: excluded rows are dropped at bucket packing (they take
+    # an out-of-range owner and never travel — see _bucket_by_owner).
     n_shards = _axes_size(axes)
     n_local_v = n_vertices // n_shards
     ids_b, vals_b = _bucket_by_owner(
-        dst_ids, payload, n_vertices, n_shards, bucket_cap, presorted
+        dst_ids, payload, n_vertices, n_shards, bucket_cap, presorted,
+        edge_active=edge_active,
     )
     # all_to_all over (possibly multiple) axes: transpose shard-major blocks.
     if len(axes) == 1:
@@ -454,19 +607,32 @@ def _sparse_exchange(
 
 
 def merging_exchange(dst_ids, payload, n_vertices, axes,
-                     op="sum", bucket_cap=None):
+                     op="sum", bucket_cap=None, edge_mask=None):
     """The hash-partitioning *merging* connector (Fig. 4): sender-side
-    sort-by-destination + all_to_all + receiver-side ordered merge/combine."""
+    sort-by-destination + all_to_all + receiver-side ordered merge/combine.
+
+    ``edge_mask`` (the frontier-masked path) excludes inactive edges from
+    the combine.  Single-shard, the mask reaches the receiver combine — on
+    TPU that is the Pallas ``segment_combine`` kernel, whose active-block
+    bitmap skips fully-inactive edge blocks.  Sharded, masked rows are
+    dropped earlier still, at sender-side bucket packing, so they never
+    travel the all_to_all."""
 
     cap = bucket_cap or dst_ids.shape[0]
-    return _sparse_exchange(dst_ids, payload, n_vertices, axes, op, cap, True)
+    return _sparse_exchange(
+        dst_ids, payload, n_vertices, axes, op, cap, True,
+        edge_active=edge_mask,
+    )
 
 
 def hash_sort_exchange(dst_ids, payload, n_vertices, axes,
-                       op="sum", bucket_cap=None):
+                       op="sum", bucket_cap=None, edge_mask=None):
     """The hash connector + explicit receiver-side grouping (Fig. 9 variant):
     all_to_all in arrival order, receiver scatter-combines (no order
     property)."""
 
     cap = bucket_cap or dst_ids.shape[0]
-    return _sparse_exchange(dst_ids, payload, n_vertices, axes, op, cap, False)
+    return _sparse_exchange(
+        dst_ids, payload, n_vertices, axes, op, cap, False,
+        edge_active=edge_mask,
+    )

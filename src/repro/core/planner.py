@@ -55,6 +55,7 @@ __all__ = [
     "PregelPhysicalPlan",
     "plan_imru",
     "plan_pregel",
+    "pregel_superstep_costs",
     "enumerate_reduce_schedules",
 ]
 
@@ -82,11 +83,18 @@ class IMRUStats:
 
 @dataclass(frozen=True)
 class PregelStats:
+    """``frontier_density`` is the expected fraction of edges whose source
+    vertex is still active (|Δ frontier| / E).  Semi-naive plans cost their
+    superstep estimate at this density (see :func:`plan_pregel`); the
+    adaptive driver re-measures the true density every superstep and
+    re-evaluates the dense↔sparse choice online."""
+
     n_vertices: int
     n_edges: int
     vertex_bytes: int
     msg_bytes: int
     flops_per_edge: float = 2.0
+    frontier_density: float = 1.0
 
 
 # ---------------------------------------------------------------------------
@@ -308,8 +316,29 @@ class PregelPhysicalPlan:
     sender_combine: bool                 # early grouping (Fig. 4 O15)
     join: str                            # 'index' (gather) | 'sort_merge'
     cache_graph: bool                    # loop-invariant caching
+    semi_naive: bool = False             # delta-frontier evaluation enabled
+    density_threshold: float = 0.0       # frontier density below which the
+                                         # sparse (delta) path wins
     notes: Tuple[str, ...] = ()
     est_superstep_seconds: float = 0.0
+
+    def mode_for_density(self, density: float) -> str:
+        """The Fig.-9 connector choice recomputed online: given the measured
+        frontier density of the upcoming superstep, execute the dense plan or
+        the frontier-compacted sparse plan.  Called by the adaptive fixpoint
+        driver every superstep."""
+
+        # threshold 0.0 is the "sparse never wins" sentinel from
+        # plan_pregel's ladder — it must not match density 0.0 (the final
+        # superstep of a converged run) and trigger a pointless sparse
+        # compile.
+        if (
+            self.semi_naive
+            and self.density_threshold > 0.0
+            and density <= self.density_threshold
+        ):
+            return "sparse"
+        return "dense"
 
     def explain(self) -> str:
         lines = [
@@ -317,10 +346,61 @@ class PregelPhysicalPlan:
             f"  vertices sharded over {self.vertex_axes}",
             f"  connector: {self.connector}; sender-side combine: {self.sender_combine}",
             f"  vertex join: {self.join}; graph cached: {self.cache_graph}",
+            f"  semi-naive: {self.semi_naive}"
+            + (f" (sparse below density {self.density_threshold:.3f})"
+               if self.semi_naive else ""),
             f"  estimated superstep: {self.est_superstep_seconds * 1e3:.3f} ms",
             "  applied rules: " + ", ".join(self.notes),
         ]
         return "\n".join(lines)
+
+
+def pregel_superstep_costs(
+    stats: PregelStats,
+    mesh: MeshSpec,
+    hw: HardwareSpec,
+    density: float,
+) -> Tuple[float, float]:
+    """Roofline (dense_seconds, sparse_seconds) for one superstep at the
+    given frontier density — the planner's frontier-density cost terms.
+
+    * Dense: every edge is gathered, evaluated, and combined regardless of
+      how small the frontier is; the exchange moves the full message volume.
+    * Sparse (delta): one O(E) streaming pass compacts the active-edge
+      frontier (cumsum + scatter, memory-bound, touches only ids + mask),
+      then gather/UDF/combine/exchange all scale with density·E.
+
+    This model is only ever used for *relative* dense-vs-sparse decisions
+    (the threshold ladder and the expected-density ratio in
+    :func:`plan_pregel`); absolute superstep estimates come from
+    :func:`plan_pregel`'s connector-specific terms, which model the chosen
+    exchange rather than a generic one.
+    """
+
+    chips = mesh.n_devices
+    dp = mesh.data_parallel_size
+    e, n = stats.n_edges, stats.n_vertices
+    active_e = max(density, 0.0) * e
+
+    def edge_pipeline(n_e: float) -> float:
+        compute = n_e * stats.flops_per_edge / (chips * hw.peak_flops_bf16)
+        memory = (
+            n_e * (8 + 2 * stats.msg_bytes) + n * stats.vertex_bytes
+        ) / (chips * hw.hbm_bw)
+        return max(compute, memory)
+
+    comm_dense = ring_reduce_scatter(
+        n * stats.msg_bytes / max(dp, 1), dp, hw.ici_bw, hw.ici_latency
+    ).seconds
+    comm_sparse = all_to_all(
+        active_e * stats.msg_bytes / max(dp, 1), dp, hw.ici_bw, hw.ici_latency
+    ).seconds if dp > 1 else 0.0
+
+    dense = edge_pipeline(float(e)) + (comm_dense if dp > 1 else 0.0)
+    # Compaction pass: stream the edge mask + write the index slab.
+    compact = e * 5 / (chips * hw.hbm_bw)
+    sparse = compact + edge_pipeline(active_e) + comm_sparse
+    return dense, sparse
 
 
 def plan_pregel(
@@ -329,8 +409,10 @@ def plan_pregel(
     hw: HardwareSpec = TPU_V5E,
     *,
     force_connector: Optional[str] = None,
+    semi_naive: bool = False,
+    extra_notes: Tuple[str, ...] = (),
 ) -> PregelPhysicalPlan:
-    notes: List[str] = []
+    notes: List[str] = list(extra_notes)
 
     # Rule: storage selection — dense id-indexed sharded state array: the
     # logical max-over-temporal (L4/L5) becomes a direct frontier read and
@@ -394,6 +476,38 @@ def plan_pregel(
     }[connector]
     est = max(compute, memory) + comm
 
+    # Rule: semi-naive (delta-frontier) evaluation — find the frontier
+    # density below which the frontier-compacted sparse superstep beats the
+    # dense one (the Fig. 9 connector choice parameterized by density).  The
+    # adaptive driver compares the measured per-superstep density against
+    # this threshold online.
+    density_threshold = 0.0
+    if semi_naive:
+        rho = 1.0
+        while rho > 1.0 / (4 * max(stats.n_edges, 1)):
+            d_cost, s_cost = pregel_superstep_costs(stats, mesh, hw, rho)
+            if s_cost < d_cost:
+                break
+            rho /= 2.0
+        else:
+            rho = 0.0
+        density_threshold = rho
+        notes.append(
+            f"semi-naive(adaptive dense<->sparse @ density "
+            f"{density_threshold:.3g})"
+        )
+        # The caller's expected steady-state frontier density refines the
+        # superstep estimate: a workload expected to live below the
+        # threshold is costed on the sparse path.  The estimate keeps the
+        # selected connector's comm terms — the roofline model only supplies
+        # the sparse:dense ratio at the expected density, so estimates stay
+        # comparable across (possibly forced) connectors.
+        exp_rho = stats.frontier_density
+        if exp_rho < 1.0 and exp_rho <= density_threshold:
+            d_cost, s_cost = pregel_superstep_costs(stats, mesh, hw, exp_rho)
+            est *= s_cost / d_cost
+            notes.append(f"expected-density({exp_rho:.3g})")
+
     return PregelPhysicalPlan(
         mesh=mesh,
         vertex_axes=tuple(n for n in ("pod", "data") if mesh.size(n) > 1),
@@ -401,6 +515,8 @@ def plan_pregel(
         sender_combine=sender_combine,
         join=join,
         cache_graph=True,
+        semi_naive=semi_naive,
+        density_threshold=density_threshold,
         notes=tuple(notes),
         est_superstep_seconds=est,
     )

@@ -30,7 +30,7 @@ Supersteps run to the Appendix-B.2 fixpoint: no active vertices.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,11 +50,14 @@ from repro.core.hardware import MeshSpec, TPU_V5E, HardwareSpec
 from repro.core.listings import pregel_program
 from repro.core.physical import (
     COMBINE_OPS,
+    compact_active_edges,
     dense_psum_exchange,
     hash_sort_exchange,
     merging_exchange,
     scatter_combine,
     segment_combine_sorted,
+    sparse_hash_sort_exchange,
+    sparse_merging_exchange,
 )
 from repro.core.planner import PregelPhysicalPlan, PregelStats, plan_pregel
 
@@ -97,7 +100,14 @@ class VertexProgram:
         return pregel_program(
             udfs={"init_vertex": self.init_vertex, "update": self.apply},
             aggregates={
-                "combine": Aggregate(self.combine, zero=lambda: zero, combine=fn)
+                # max/min are idempotent; every Pregel inbox is recomputed
+                # from scratch each superstep (collect@J derives solely from
+                # send@J) — both properties license the semi-naive rewrite.
+                "combine": Aggregate(
+                    self.combine, zero=lambda: zero, combine=fn,
+                    idempotent=self.combine in ("max", "min"),
+                    recomputable=True,
+                )
             },
         )
 
@@ -111,6 +121,23 @@ class PregelExecutable:
     superstep: Callable[[Any, Any], Any]   # ((state, active), j) -> (state, active)
     graph: Graph
     mesh: Optional[Mesh]
+    semi_naive: bool = False
+    # Sparse (delta-frontier) execution is implemented for the single-shard
+    # edge layout; sharded meshes run the frontier-masked dense path.
+    supports_sparse: bool = True
+    sparse_cap_floor: int = 64
+    _sparse_steps: Dict[int, Callable] = field(default_factory=dict, repr=False)
+    _edge_count_fn: Optional[Callable] = field(default=None, repr=False)
+    _jit_superstep: Optional[Callable] = field(default=None, repr=False)
+
+    @property
+    def jitted_superstep(self) -> Callable:
+        """The dense superstep under ``jax.jit`` (cached) — host-driver and
+        adaptive runs must not fall back to op-by-op eager dispatch."""
+
+        if self._jit_superstep is None:
+            self._jit_superstep = jax.jit(self.superstep)
+        return self._jit_superstep
 
     def init(self) -> Tuple[Any, jax.Array]:
         ids = jnp.arange(self.graph.n_vertices, dtype=jnp.int32)
@@ -123,24 +150,167 @@ class PregelExecutable:
         _, active = new
         return jnp.logical_not(jnp.any(active))
 
-    def run(self, max_iters: int, on_device: bool = True) -> FixpointResult:
+    # -- semi-naive (delta-frontier) execution ------------------------------
+
+    def active_edge_count(self, active: jax.Array) -> int:
+        """|Δ frontier| in edges: how many edges originate at active
+        vertices this superstep (one tiny jitted reduction, read on host)."""
+
+        if self._edge_count_fn is None:
+            src = self.graph.src
+            self._edge_count_fn = jax.jit(
+                lambda a: jnp.sum(jnp.take(a, src).astype(jnp.int32))
+            )
+        return int(self._edge_count_fn(active))
+
+    def _make_sparse_step(self, cap: int) -> Callable:
+        """Frontier-compacted superstep: all edge-proportional work (gather,
+        message UDF, combine, exchange) runs over a ``cap``-sized compacted
+        slab of the active edges instead of all E edges."""
+
+        g, prog, op = self.graph, self.prog, self.prog.combine
+        E = g.n_edges
+        sparse_ex = {
+            "merging": sparse_merging_exchange,
+            "hash_sort": sparse_hash_sort_exchange,
+        }.get(self.plan.connector)
+
+        def step(carry, j):
+            state, active = carry
+            mask_e = jnp.take(active, g.src, axis=0)
+            idx, valid = compact_active_edges(mask_e, cap)
+            idx_c = jnp.minimum(idx, E - 1)
+            src_c = jnp.take(g.src, idx_c)
+            dst_c = jnp.take(g.dst, idx_c)
+            edata_c = (
+                None if g.edge_data is None else jax.tree_util.tree_map(
+                    lambda e: jnp.take(e, idx_c, axis=0), g.edge_data
+                )
+            )
+            src_state = jax.tree_util.tree_map(
+                lambda s: jnp.take(s, src_c, axis=0), state
+            )
+            payload = prog.message(j, src_state, edata_c)
+            ones = jnp.where(valid, 1.0, 0.0)
+            if sparse_ex is None:
+                inbox = dense_psum_exchange(
+                    dst_c, payload, g.n_vertices, (), op, edge_mask=valid
+                )
+                got = dense_psum_exchange(
+                    dst_c, ones, g.n_vertices, (), "sum", edge_mask=valid
+                ) > 0
+            else:
+                inbox = sparse_ex(dst_c, payload, valid, g.n_vertices, (), op)
+                got = sparse_ex(
+                    dst_c, ones, valid, g.n_vertices, (), "sum"
+                ) > 0
+            new_state, new_active = prog.apply(j, state, inbox, got)
+            merged = jax.tree_util.tree_map(
+                lambda old, new: jnp.where(
+                    got.reshape((-1,) + (1,) * (new.ndim - 1)), new, old
+                ),
+                state, new_state,
+            )
+            return merged, jnp.logical_and(new_active, got)
+
+        return step
+
+    def sparse_superstep(self, cap: int) -> Callable:
+        """Jitted frontier-compacted superstep for a given static capacity
+        (cached per capacity — the adaptive driver walks a power-of-two
+        ladder, so only O(log E) variants ever compile)."""
+
+        fn = self._sparse_steps.get(cap)
+        if fn is None:
+            fn = jax.jit(self._make_sparse_step(cap))
+            self._sparse_steps[cap] = fn
+        return fn
+
+    def sparse_cap_for(self, count: int) -> int:
+        """Compaction capacity for a measured active-edge count: the next
+        power of two, bounded below by ``sparse_cap_floor`` so tiny
+        frontiers share one compiled variant.  The single source of the cap
+        ladder — benchmarks reuse it so they time exactly what the adaptive
+        driver runs."""
+
+        return max(self.sparse_cap_floor, 1 << max(count - 1, 0).bit_length())
+
+    def adaptive_select_step(
+        self, carry, j: int
+    ) -> Tuple[Callable, str]:
+        """Per-superstep dense<->sparse choice (the Fig. 9 connector choice
+        recomputed online): measure the frontier density, consult the plan's
+        cost-model threshold, and pick the executing superstep.  Dense early
+        (everything active), sparse in the long convergence tail."""
+
+        _, active = carry
+        count = self.active_edge_count(active)
+        density = count / max(self.graph.n_edges, 1)
+        if (
+            self.supports_sparse
+            and self.plan.mode_for_density(density) == "sparse"
+        ):
+            cap = self.sparse_cap_for(count)
+            if cap < self.graph.n_edges:
+                fn = self.sparse_superstep(cap)
+                return (lambda s, jj: fn(s, jnp.int32(jj))), f"sparse@{cap}"
+        dense = self.jitted_superstep
+        return (lambda s, jj: dense(s, jnp.int32(jj))), "dense"
+
+    # -- fixpoint entry points ---------------------------------------------
+
+    def run(
+        self,
+        max_iters: int,
+        on_device: Optional[bool] = None,
+        adaptive: Optional[bool] = None,
+    ) -> FixpointResult:
+        """Run to the Appendix-B.2 fixpoint.
+
+        Semi-naive plans default to the host driver with per-superstep
+        adaptive dense/sparse selection (shape-changing compaction cannot
+        live inside one ``lax.while_loop``); dense plans default on-device.
+        An explicit ``on_device=True`` is honored — it disables adaptive
+        selection (the two are mutually exclusive; requesting both raises).
+        """
+
+        if on_device and adaptive:
+            raise ValueError(
+                "on_device=True and adaptive=True are incompatible: "
+                "adaptive dense/sparse selection needs the host driver"
+            )
+        if adaptive is None:
+            adaptive = (
+                self.semi_naive and self.supports_sparse and not on_device
+            )
+        if on_device is None:
+            on_device = not adaptive
         init = self.init()
-        if on_device:
+        if on_device and not adaptive:
             return device_fixpoint(
                 self.superstep, self.converged, init, max_iters
             )
         driver = HostFixpointDriver(
-            step=lambda s, j: self.superstep(s, jnp.int32(j)),
+            step=lambda s, j: self.jitted_superstep(s, jnp.int32(j)),
             converged=self.converged,
             config=DriverConfig(max_iters=max_iters),
+            select_step=self.adaptive_select_step if adaptive else None,
         )
         return driver.run(init)
 
-    def driver(self, config: DriverConfig, **hooks) -> HostFixpointDriver:
+    def driver(
+        self,
+        config: DriverConfig,
+        adaptive: Optional[bool] = None,
+        **hooks,
+    ) -> HostFixpointDriver:
+        if adaptive is None:
+            adaptive = self.semi_naive and self.supports_sparse
         return HostFixpointDriver(
-            step=lambda s, j: self.superstep(s, jnp.int32(j)),
+            step=lambda s, j: self.jitted_superstep(s, jnp.int32(j)),
             converged=self.converged,
             config=config,
+            select_step=self.adaptive_select_step if adaptive else None,
             **hooks,
         )
 
@@ -161,14 +331,25 @@ def compile_pregel(
     hw: HardwareSpec = TPU_V5E,
     force_connector: Optional[str] = None,
     payload_bytes: int = 4,
+    semi_naive: bool = False,
 ) -> PregelExecutable:
-    """Compile a vertex program through the declarative stack (Fig. 1)."""
+    """Compile a vertex program through the declarative stack (Fig. 1).
+
+    ``semi_naive=True`` enables delta-frontier evaluation: the logical plan's
+    eligible recursive reads become ``Delta`` scans (semi-naive rewrite), the
+    physical plan gains a frontier-density threshold from the cost model, and
+    the executable carries frontier-compacted sparse supersteps that the
+    adaptive driver swaps in when the measured density drops below it.
+    """
 
     # (1)-(3): Datalog -> XY schedule -> Figure-3 logical plan.
     program = prog.program()
     schedule = stratify.iteration_schedule(program)
     assert tuple(r.label for r in schedule.init_rules) == ("L1", "L2")
     logical = algebra.translate(program)
+    sn_notes: Tuple[str, ...] = ()
+    if semi_naive:
+        logical, sn_notes = algebra.semi_naive_rewrite(logical, program)
 
     # (4): physical plan from graph statistics.
     if mesh_spec is None:
@@ -184,7 +365,10 @@ def compile_pregel(
         vertex_bytes=payload_bytes,
         msg_bytes=payload_bytes,
     )
-    plan = plan_pregel(stats, mesh_spec, hw, force_connector=force_connector)
+    plan = plan_pregel(
+        stats, mesh_spec, hw, force_connector=force_connector,
+        semi_naive=semi_naive, extra_notes=sn_notes,
+    )
     connector = _EXCHANGES[plan.connector]
     op = prog.combine
 
@@ -334,4 +518,6 @@ def compile_pregel(
         superstep=superstep,
         graph=graph,
         mesh=mesh,
+        semi_naive=semi_naive,
+        supports_sparse=not (mesh is not None and batch_axes),
     )

@@ -52,6 +52,7 @@ __all__ = [
     "xy_transform",
     "IterationSchedule",
     "iteration_schedule",
+    "delta_rewritable_rules",
 ]
 
 
@@ -412,6 +413,84 @@ def xy_transform(program: Program) -> Program:
         aggregates=program.aggregates,
         name=program.name + "::xy",
     )
+
+
+# ---------------------------------------------------------------------------
+# Semi-naive (delta-frontier) rule classification
+# ---------------------------------------------------------------------------
+
+
+def delta_rewritable_rules(program: Program) -> FrozenSet[str]:
+    """Labels of per-iteration rules whose recursive body reads may be
+    restricted to the *delta* frontier (semi-naive evaluation).
+
+    A rule qualifies when all of the following hold:
+
+    * it is an X- or Y-rule (per-iteration stratum — init rules run once and
+      frontier views must stay full reads of the materialized state);
+    * it reads *exactly one* recursive predicate at the current state ``J``
+      (there is a frontier to restrict, and restricting it is sound:
+      :func:`~repro.core.algebra.semi_naive_rewrite` swaps every carried
+      recursive read in the rule to its delta, which for a rule joining two
+      or more recursive reads would drop the changed×unchanged derivation
+      pairs — that needs the classic delta-union expansion
+      ``Δa ⋈ b ∪ a ⋈ Δb``, which is not implemented, so such rules keep
+      their full reads);
+    * it folds its derivations through a head aggregate, and every such
+      aggregate is *delta-safe*: idempotent (``combine(x, x) == x``, so
+      re-deliveries from stale frontiers are absorbed — max/min) or
+      recomputed from scratch every iteration (Pregel's per-superstep
+      ``collect``) — see :class:`~repro.core.datalog.Aggregate.delta_safe`.
+
+    Rules that project recursive reads without aggregation must keep the full
+    read: dropping unchanged facts there would shrink the derived relation
+    itself, not just skip redundant re-derivations.
+
+    The result is matched against :class:`~repro.core.algebra.RuleDataflow`
+    labels by :func:`~repro.core.algebra.semi_naive_rewrite`, so the
+    classification fails closed on anything label-matching cannot address
+    precisely: unlabeled rules are never eligible, a label shared by several
+    rules is eligible only if *every* bearer qualifies, and an aggregate name
+    missing from ``program.aggregates`` disqualifies its rule.
+    """
+
+    recursive = recursive_predicates(program)
+    frontier = frontier_predicates(program)
+    qualifying: set[str] = set()
+    disqualified: set[str] = set()
+    for rule in program.rules:
+        label = rule.label
+        if not label:
+            continue
+
+        def _qualifies() -> bool:
+            cls = classify_rule(rule, recursive, frontier)
+            if cls not in ("x", "y"):
+                return False
+            aggs = rule.head_aggregates()
+            if not aggs:
+                return False
+            if not all(
+                a.agg in program.aggregates
+                and program.aggregates[a.agg].delta_safe
+                for a in aggs
+            ):
+                return False
+            carried_reads = sum(
+                1
+                for lit in rule.body
+                if isinstance(lit, Atom)
+                and lit.pred in recursive
+                and lit.pred not in frontier
+                and isinstance(lit.temporal_arg, TempVar)
+            )
+            return carried_reads == 1
+
+        if _qualifies():
+            qualifying.add(label)
+        else:
+            disqualified.add(label)
+    return frozenset(qualifying - disqualified)
 
 
 # ---------------------------------------------------------------------------

@@ -16,12 +16,22 @@ SMEM, and each (tile, block) cell is skipped with ``pl.when`` unless the id
 range intersects the tile — giving O(E·F) effective work for sorted inputs
 instead of O(E·F·n_tiles).
 
+Semi-naive (delta-frontier) evaluation adds a second skip predicate on the
+same machinery: an optional per-edge ``edge_active`` mask is folded into a
+scalar-prefetched **active-block bitmap** (one int32 per edge block), and
+``pl.when`` skips any block whose edges are all outside the frontier — so a
+superstep in the convergence tail touches only the blocks that still carry
+live messages.  Partially-active blocks stay correct because inactive edges
+have their segment id masked to -1 before blocking, which never matches a
+tile column.
+
 Padding rows carry ``segment_id = -1`` and never match a tile column.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +46,7 @@ DEFAULT_TILE_N = 128
 _IDENT = {"sum": 0.0, "max": -1e30, "min": 1e30}
 
 
-def _kernel(lo_ref, hi_ref, ids_ref, val_ref, out_ref, acc,
+def _kernel(lo_ref, hi_ref, act_ref, ids_ref, val_ref, out_ref, acc,
             *, op, tile_n, block_e):
     ti = pl.program_id(0)
     ei = pl.program_id(1)
@@ -51,8 +61,13 @@ def _kernel(lo_ref, hi_ref, ids_ref, val_ref, out_ref, acc,
     blk_lo = lo_ref[ei]
     blk_hi = hi_ref[ei]
     intersects = jnp.logical_and(blk_lo < tile_hi, blk_hi > tile_lo)
+    # Delta-frontier skip: a block whose edges are all inactive (or all
+    # padding) contributes nothing to any tile.  The [lo, hi) band of a
+    # masked-out block is degenerate and would fail `intersects` too; the
+    # bitmap makes the frontier skip a single scalar test per block.
+    visit = jnp.logical_and(intersects, act_ref[ei] > 0)
 
-    @pl.when(intersects)
+    @pl.when(visit)
     def _compute():
         ids = ids_ref[0]                                  # (block_e,)
         vals = val_ref[0].astype(jnp.float32)             # (block_e, F)
@@ -94,11 +109,16 @@ def segment_combine_pallas(
     n_segments: int,
     op: str = "sum",
     *,
+    edge_active: Optional[jax.Array] = None,
     block_e: int = DEFAULT_BLOCK_E,
     tile_n: int = DEFAULT_TILE_N,
     interpret: bool = False,
 ) -> jax.Array:
     E, F = values.shape
+    if edge_active is not None:
+        # Inactive edges never match a tile column; fully-inactive blocks are
+        # skipped outright via the active-block bitmap below.
+        segment_ids = jnp.where(edge_active, segment_ids, -1)
     block_e = min(block_e, E)
     pad_e = (-E) % block_e
     if pad_e:
@@ -120,18 +140,21 @@ def segment_combine_pallas(
     blk_hi = (
         jnp.max(jnp.where(valid, ids_blocks, -1), axis=1) + 1
     ).astype(jnp.int32)
+    blk_act = jnp.any(valid, axis=1).astype(jnp.int32)
 
     kernel = functools.partial(
         _kernel, op=op, tile_n=tile_n, block_e=block_e
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(nt, ne),
         in_specs=[
-            pl.BlockSpec((1, block_e), lambda ti, ei, lo, hi: (ei, 0)),
-            pl.BlockSpec((1, block_e, F), lambda ti, ei, lo, hi: (ei, 0, 0)),
+            pl.BlockSpec((1, block_e), lambda ti, ei, lo, hi, act: (ei, 0)),
+            pl.BlockSpec(
+                (1, block_e, F), lambda ti, ei, lo, hi, act: (ei, 0, 0)
+            ),
         ],
-        out_specs=pl.BlockSpec((tile_n, F), lambda ti, ei, lo, hi: (ti, 0)),
+        out_specs=pl.BlockSpec((tile_n, F), lambda ti, ei, lo, hi, act: (ti, 0)),
         scratch_shapes=[pltpu.VMEM((tile_n, F), jnp.float32)],
     )
     out = pl.pallas_call(
@@ -139,5 +162,5 @@ def segment_combine_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_out, F), values.dtype),
         interpret=interpret,
-    )(blk_lo, blk_hi, ids_blocks, values.reshape(ne, block_e, F))
+    )(blk_lo, blk_hi, blk_act, ids_blocks, values.reshape(ne, block_e, F))
     return out[:n_segments]

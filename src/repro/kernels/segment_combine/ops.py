@@ -23,14 +23,21 @@ def segment_combine(
     n_segments: int,
     op: str = "sum",
     *,
+    edge_active: Optional[jax.Array] = None,
     interpret: Optional[bool] = None,
     use_kernel: Optional[bool] = None,
 ) -> jax.Array:
+    """``edge_active`` (optional bool[E]) is the delta-frontier mask: rows
+    outside the frontier are excluded from the combine, and the Pallas path
+    skips fully-inactive edge blocks via a scalar-prefetched bitmap."""
+
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu" or bool(interpret)
     if not use_kernel:
-        return segment_combine_reference(values, segment_ids, n_segments, op)
+        return segment_combine_reference(
+            values, segment_ids, n_segments, op, edge_active=edge_active
+        )
     return segment_combine_pallas(
-        values, segment_ids, n_segments, op,
+        values, segment_ids, n_segments, op, edge_active=edge_active,
         interpret=bool(interpret) and jax.default_backend() != "tpu",
     )

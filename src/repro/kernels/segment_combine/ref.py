@@ -7,6 +7,8 @@ Contract: ``values`` f32[E, F], ``segment_ids`` int32[E] sorted ascending in
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
@@ -18,7 +20,11 @@ def segment_combine_reference(
     segment_ids: jax.Array,
     n_segments: int,
     op: str = "sum",
+    *,
+    edge_active: Optional[jax.Array] = None,
 ) -> jax.Array:
+    if edge_active is not None:
+        segment_ids = jnp.where(edge_active, segment_ids, -1)
     valid = segment_ids >= 0
     ids = jnp.where(valid, segment_ids, n_segments)  # spill row
     if op == "sum":

@@ -1,0 +1,112 @@
+"""Tiny fallback for ``hypothesis`` so the suite collects everywhere.
+
+When ``hypothesis`` is installed the test modules import the real thing; when
+it is absent (minimal CI images, the CPU container) they fall back to this
+shim, which replays each ``@given`` test over a small deterministic sample of
+the strategy space instead of skipping the property tests outright.  Only the
+strategy surface the suite actually uses is implemented (``st.integers``,
+``st.sampled_from``); anything else should be added here when a test needs
+it, or the test should ``pytest.importorskip("hypothesis")``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies", "HealthCheck"]
+
+# Deterministic example count for the fallback replay (the real hypothesis
+# default is 100 shrinking examples; a handful is enough for smoke coverage).
+_FALLBACK_EXAMPLES = 5
+
+
+@dataclass(frozen=True)
+class _Strategy:
+    """A sampleable value source: ``sample(rng)`` draws one example."""
+
+    sample: Callable[[np.random.Generator], Any]
+    edge_cases: tuple = ()
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            sample=lambda rng: int(rng.integers(min_value, max_value + 1)),
+            edge_cases=(min_value, max_value),
+        )
+
+    @staticmethod
+    def sampled_from(options: Sequence[Any]) -> _Strategy:
+        options = list(options)
+        return _Strategy(
+            sample=lambda rng: options[int(rng.integers(len(options)))],
+            edge_cases=(options[0], options[-1]),
+        )
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(
+            sample=lambda rng: bool(rng.integers(2)),
+            edge_cases=(False, True),
+        )
+
+
+strategies = _Strategies()
+
+
+class HealthCheck:
+    """Placeholder namespace mirroring ``hypothesis.HealthCheck``."""
+
+    too_slow = data_too_large = filter_too_much = None
+    all = staticmethod(lambda: ())
+
+
+def settings(*_args, **_kwargs):
+    """No-op decorator: the shim has no deadlines or example budgets."""
+
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    """Replay the test over deterministic draws from each strategy.
+
+    The first example combines every strategy's first edge case (min values),
+    the second combines the last (max values), and the rest are seeded random
+    draws — a fixed, reproducible sample standing in for hypothesis search.
+    """
+
+    names = list(strategy_kwargs)
+    strats = [strategy_kwargs[n] for n in names]
+
+    def deco(fn):
+        # No functools.wraps: copying __wrapped__ would make pytest resolve
+        # the original signature and demand fixtures for the strategy params.
+        def wrapper(*args, **kwargs):
+            examples = []
+            for pick in (0, -1):
+                examples.append(
+                    {
+                        n: s.edge_cases[pick]
+                        for n, s in zip(names, strats)
+                        if s.edge_cases
+                    }
+                )
+            rng = np.random.default_rng(0)
+            for _ in range(_FALLBACK_EXAMPLES):
+                examples.append({n: s.sample(rng) for n, s in zip(names, strats)})
+            for ex in examples:
+                fn(*args, **{**kwargs, **ex})
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

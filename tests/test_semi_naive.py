@@ -1,0 +1,486 @@
+"""Semi-naive (delta-frontier) evaluation: correctness and adaptivity.
+
+Property being defended: for any vertex program, the delta-mode fixpoint is
+identical (``allclose``) to the dense-mode fixpoint across connector
+choices — semi-naive evaluation is an *execution* strategy, never a
+semantics change — and the adaptive driver actually switches dense→sparse
+when the frontier collapses.
+"""
+
+import time
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal images: deterministic fallback shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import algebra, stratify
+from repro.core.datalog import Aggregate
+from repro.core.fixpoint import DriverConfig, HostFixpointDriver
+from repro.core.hardware import MeshSpec
+from repro.core.physical import (
+    compact_active_edges,
+    dense_psum_exchange,
+    scatter_combine,
+    segment_combine_sorted,
+    sparse_hash_sort_exchange,
+    sparse_merging_exchange,
+)
+from repro.core.planner import PregelStats, plan_pregel, pregel_superstep_costs
+from repro.core.pregel import Graph, VertexProgram, compile_pregel
+
+RNG = np.random.default_rng(0)
+
+CONNECTORS = ["dense_psum", "merging", "hash_sort"]
+
+
+# ---------------------------------------------------------------------------
+# Logical layer: the Delta rewrite
+# ---------------------------------------------------------------------------
+
+
+def _pagerank_prog(N, outdeg):
+    od = jnp.asarray(outdeg)
+    return VertexProgram(
+        init_vertex=lambda ids, vd: jnp.stack(
+            [jnp.full((N,), 1.0 / N), od], axis=1),
+        message=lambda j, s, ed: s[:, 0] / jnp.maximum(s[:, 1], 1.0),
+        apply=lambda j, s, inbox, got: (
+            jnp.stack([0.15 / N + 0.85 * inbox, s[:, 1]], axis=1),
+            jnp.ones(s.shape[0], jnp.bool_)),
+        combine="sum",
+    )
+
+
+def _sssp_prog():
+    inf = jnp.float32(1e9)
+    return VertexProgram(
+        init_vertex=lambda ids, vd: jnp.where(ids == 0, 0.0, inf),
+        message=lambda j, s, ed: s + 1.0,
+        apply=lambda j, s, inbox, got: (
+            jnp.minimum(s, inbox), jnp.minimum(s, inbox) < s),
+        combine="min",
+    )
+
+
+def _random_graph(N, seed=1):
+    rng = np.random.default_rng(seed)
+    src, dst = [], []
+    for v in range(N):
+        for _ in range(rng.integers(1, 5)):
+            src.append(v)
+            dst.append(int(rng.integers(0, N)))
+    for v in range(N):
+        src.append(int(rng.integers(0, N)))
+        dst.append(v)
+    return np.array(src, np.int32), np.array(dst, np.int32)
+
+
+def test_delta_rewrite_targets_l3_only():
+    prog = _sssp_prog().program()
+    assert stratify.delta_rewritable_rules(prog) == frozenset({"L3"})
+    plan = algebra.translate(prog)
+    new_plan, notes = algebra.semi_naive_rewrite(plan, prog)
+    assert notes == ("semi-naive(L3: send -> Δsend)",)
+    (l3,) = [df for df in new_plan.body if df.label == "L3"]
+    assert ("Delta",) in _flatten(l3.op.structure())
+    # all other rules untouched
+    for old, new in zip(plan.body, new_plan.body):
+        if old.label != "L3":
+            assert old.op.structure() == new.op.structure()
+
+
+def _flatten(structure):
+    out = [structure]
+    for child in structure[1:]:
+        if isinstance(child, tuple):
+            out.extend(_flatten(child))
+    return out
+
+
+def test_non_delta_safe_aggregate_blocks_rewrite():
+    prog = _sssp_prog().program()
+    # A combine that is neither idempotent nor recomputed each iteration
+    # (e.g. a running fold across supersteps) must keep the full read.
+    aggs = dict(prog.aggregates)
+    aggs["combine"] = Aggregate(
+        "sum", zero=lambda: 0.0, combine=jnp.add,
+        idempotent=False, recomputable=False,
+    )
+    from repro.core.datalog import Program
+    prog2 = Program(rules=prog.rules, edb=prog.edb, udfs=prog.udfs,
+                    aggregates=aggs, name=prog.name)
+    assert "L3" not in stratify.delta_rewritable_rules(prog2)
+    _, notes = algebra.semi_naive_rewrite(algebra.translate(prog2), prog2)
+    assert notes == ()
+
+
+def test_delta_classification_fails_closed():
+    import dataclasses
+
+    from repro.core.datalog import Program
+
+    prog = _sssp_prog().program()
+
+    # Unlabeled rules cannot be addressed by the label-matched rewrite and
+    # must never become eligible (nor leak synthetic labels like "rule3").
+    rules = tuple(
+        dataclasses.replace(r, label="") if r.label == "L3" else r
+        for r in prog.rules
+    )
+    unlabeled = Program(rules=rules, edb=prog.edb, udfs=prog.udfs,
+                        aggregates=prog.aggregates, name=prog.name)
+    assert stratify.delta_rewritable_rules(unlabeled) == frozenset()
+
+    # A label shared with a non-qualifying rule is excluded: rewriting by
+    # that label would also swap the unsafe bearer's reads.
+    rules = tuple(
+        dataclasses.replace(r, label="L3") if r.label == "L1" else r
+        for r in prog.rules
+    )
+    shared = Program(rules=rules, edb=prog.edb, udfs=prog.udfs,
+                     aggregates=prog.aggregates, name=prog.name)
+    assert "L3" not in stratify.delta_rewritable_rules(shared)
+
+    # An aggregate name missing from the registry carries no safety
+    # evidence — the rule must be treated as unsafe, not vacuously safe.
+    aggs = {k: v for k, v in prog.aggregates.items() if k != "combine"}
+    unregistered = Program(rules=prog.rules, edb=prog.edb, udfs=prog.udfs,
+                           aggregates=aggs, name=prog.name)
+    assert "L3" not in stratify.delta_rewritable_rules(unregistered)
+
+
+def test_two_recursive_reads_not_rewritable():
+    # semi_naive_rewrite swaps EVERY carried recursive read in an eligible
+    # rule; for a rule joining two recursive reads that would drop the
+    # changed x unchanged derivation pairs (the delta-union expansion is not
+    # implemented), so such rules must keep their full reads.
+    import dataclasses
+
+    from repro.core.datalog import Atom, Program, TempVar
+
+    prog = _sssp_prog().program()
+    recursive = stratify.recursive_predicates(prog)
+    frontier = stratify.frontier_predicates(prog)
+    rules = []
+    for r in prog.rules:
+        if r.label == "L3":
+            extra = next(
+                lit for lit in r.body
+                if isinstance(lit, Atom)
+                and lit.pred in recursive
+                and lit.pred not in frontier
+                and isinstance(lit.temporal_arg, TempVar)
+            )
+            r = dataclasses.replace(r, body=r.body + (extra,))
+        rules.append(r)
+    prog2 = Program(rules=tuple(rules), edb=prog.edb, udfs=prog.udfs,
+                    aggregates=prog.aggregates, name=prog.name)
+    assert "L3" not in stratify.delta_rewritable_rules(prog2)
+
+
+# ---------------------------------------------------------------------------
+# Physical layer: compaction + sparse exchanges vs dense oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    e=st.integers(8, 300),
+    n=st.integers(4, 64),
+    cap_pow=st.integers(3, 9),
+    density_pct=st.integers(0, 100),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_compaction_preserves_active_set(e, n, cap_pow, density_pct, seed):
+    rng = np.random.default_rng(seed)
+    cap = 1 << cap_pow
+    mask = rng.random(e) < density_pct / 100.0
+    idx, valid = jax.jit(compact_active_edges, static_argnums=1)(
+        jnp.asarray(mask), cap
+    )
+    want = np.nonzero(mask)[0][:cap]
+    np.testing.assert_array_equal(np.asarray(idx[valid]), want)
+    assert int(valid.sum()) == min(int(mask.sum()), cap)
+
+
+@pytest.mark.parametrize("op", ["sum", "max", "min"])
+@pytest.mark.parametrize(
+    "sparse_ex", [sparse_merging_exchange, sparse_hash_sort_exchange]
+)
+def test_sparse_exchange_matches_masked_dense(op, sparse_ex):
+    E, N, cap = 256, 32, 128
+    rng = np.random.default_rng(3)
+    mask = jnp.asarray(rng.random(E) < 0.3)
+    dst = jnp.asarray(rng.integers(0, N, E).astype(np.int32))
+    pay = jnp.asarray(rng.normal(size=E).astype(np.float32))
+    idx, valid = compact_active_edges(mask, cap)
+    idx_c = jnp.minimum(idx, E - 1)
+    got = sparse_ex(jnp.take(dst, idx_c), jnp.take(pay, idx_c), valid,
+                    N, (), op)
+    _, ident = {"sum": (None, 0.0), "max": (None, -jnp.inf),
+                "min": (None, jnp.inf)}[op]
+    oracle = scatter_combine(jnp.where(mask, pay, ident), dst, N, op)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("presorted", [True, False])
+def test_bucket_packing_masked_rows_never_evict_real_messages(presorted):
+    # Sharded frontier-masked exchange: inactive rows must not compete with
+    # real messages for bucket slots, so a bucket_cap sized to the active
+    # frontier (much smaller than E) stays lossless.
+    from repro.core.physical import _bucket_by_owner
+
+    E, N, shards, cap = 64, 16, 4, 8
+    rng = np.random.default_rng(7)
+    dst = jnp.asarray(rng.integers(0, N, E).astype(np.int32))
+    pay = jnp.asarray(np.arange(E, dtype=np.float32) + 1.0)  # unique values
+    act = jnp.asarray(rng.random(E) < 0.2)
+    ids_b, vals_b = _bucket_by_owner(
+        dst, pay, N, shards, cap, presorted, edge_active=act
+    )
+    flat_ids = np.asarray(ids_b).reshape(-1)
+    flat_vals = np.asarray(vals_b).reshape(-1)
+    got = set(flat_vals[flat_ids >= 0].tolist())
+    want = set(np.asarray(pay)[np.asarray(act)].tolist())
+    assert got == want
+
+
+def test_dense_exchange_frontier_mask_matches_oracle():
+    E, N = 200, 25
+    rng = np.random.default_rng(4)
+    mask = jnp.asarray(rng.random(E) < 0.5)
+    dst = jnp.asarray(rng.integers(0, N, E).astype(np.int32))
+    pay = jnp.asarray(rng.normal(size=E).astype(np.float32))
+    got = dense_psum_exchange(dst, pay, N, (), "sum", edge_mask=mask)
+    oracle = scatter_combine(jnp.where(mask, pay, 0.0), dst, N, "sum")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Kernel layer: active-block bitmap
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op", ["sum", "max", "min"])
+def test_segment_combine_kernel_active_bitmap(op):
+    from repro.kernels.segment_combine.ops import segment_combine
+    from repro.kernels.segment_combine.ref import segment_combine_reference
+
+    E, F, N = 600, 4, 40
+    rng = np.random.default_rng(5)
+    ids = jnp.asarray(np.sort(rng.integers(0, N, E)).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=(E, F)).astype(np.float32))
+    # clustered activity: whole id ranges (hence edge blocks) go quiet
+    act = jnp.asarray((rng.random(E) < 0.15) & (np.arange(E) > E // 2))
+    ref = segment_combine_reference(vals, ids, N, op, edge_active=act)
+    ker = segment_combine(vals, ids, N, op, edge_active=act, interpret=True)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("op", ["sum", "max", "min"])
+def test_segment_combine_sorted_dispatches_to_kernel(op):
+    # The production combine (the merging connector's receiver) must reach
+    # the Pallas kernel — including the edge_active frontier mask — and
+    # agree with the XLA fallback on every non-empty segment.  (Empty
+    # segments intentionally differ for max/min: kernel 0 vs XLA +-inf;
+    # Pregel gates them behind the ``got`` mask.)
+    E, N = 600, 40
+    rng = np.random.default_rng(6)
+    ids = jnp.asarray(np.sort(rng.integers(0, N, E)).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=E).astype(np.float32))  # 1-D payload
+    act = jnp.asarray(rng.random(E) < 0.2)
+    xla = segment_combine_sorted(vals, ids, N, op, edge_active=act,
+                                 use_kernel=False)
+    ker = segment_combine_sorted(vals, ids, N, op, edge_active=act,
+                                 interpret=True)
+    assert ker.shape == xla.shape == (N,)
+    nonempty = np.isin(np.arange(N), np.asarray(ids)[np.asarray(act)])
+    np.testing.assert_allclose(np.asarray(ker)[nonempty],
+                               np.asarray(xla)[nonempty],
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Planner: frontier-density cost terms
+# ---------------------------------------------------------------------------
+
+
+def test_planner_density_threshold_and_modes():
+    stats = PregelStats(n_vertices=4096, n_edges=65536,
+                        vertex_bytes=4, msg_bytes=4)
+    mesh = MeshSpec((("data", 1),))
+    plan = plan_pregel(stats, mesh, semi_naive=True)
+    assert plan.semi_naive
+    assert 0.0 < plan.density_threshold <= 1.0
+    assert plan.mode_for_density(1.0) == "dense"
+    assert plan.mode_for_density(plan.density_threshold / 2) == "sparse"
+    assert any("semi-naive" in n for n in plan.notes)
+    # sparse cost is monotone decreasing in density; dense cost is flat
+    from repro.core.hardware import TPU_V5E
+    costs = [pregel_superstep_costs(stats, mesh, TPU_V5E, r)
+             for r in (1.0, 0.5, 0.1, 0.01)]
+    denses, sparses = zip(*costs)
+    assert all(abs(d - denses[0]) < 1e-12 for d in denses)
+    assert all(a > b for a, b in zip(sparses, sparses[1:]))
+
+
+def test_planner_expected_density_refines_estimate():
+    mesh = MeshSpec((("data", 1),))
+    base = PregelStats(n_vertices=4096, n_edges=65536,
+                       vertex_bytes=4, msg_bytes=4)
+    tail = PregelStats(n_vertices=4096, n_edges=65536,
+                       vertex_bytes=4, msg_bytes=4, frontier_density=0.01)
+    p_base = plan_pregel(base, mesh, semi_naive=True)
+    p_tail = plan_pregel(tail, mesh, semi_naive=True)
+    # The dense<->sparse crossover is a property of the workload shape, not
+    # of where in its lifetime we expect to sit; only the estimate moves.
+    assert p_tail.density_threshold == p_base.density_threshold
+    assert p_tail.est_superstep_seconds < p_base.est_superstep_seconds
+    assert any("expected-density" in n for n in p_tail.notes)
+
+
+def test_plan_without_semi_naive_never_goes_sparse():
+    stats = PregelStats(n_vertices=64, n_edges=256, vertex_bytes=4,
+                        msg_bytes=4)
+    plan = plan_pregel(stats, MeshSpec((("data", 1),)))
+    assert not plan.semi_naive
+    assert plan.mode_for_density(0.0001) == "dense"
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: delta fixpoint == dense fixpoint, across connectors
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("connector", CONNECTORS)
+def test_pagerank_delta_matches_dense(connector):
+    N = 64
+    src, dst = _random_graph(N)
+    outdeg = np.bincount(src, minlength=N).astype(np.float32)
+    g = Graph(N, jnp.asarray(src), jnp.asarray(dst), jnp.asarray(outdeg))
+    prog = _pagerank_prog(N, outdeg)
+    dense = compile_pregel(prog, g, force_connector=connector)
+    delta = compile_pregel(prog, g, force_connector=connector,
+                           semi_naive=True)
+    r_dense = dense.run(max_iters=30)
+    r_delta = delta.run(max_iters=30)
+    np.testing.assert_allclose(
+        np.asarray(r_delta.state[0]), np.asarray(r_dense.state[0]),
+        rtol=1e-6, atol=1e-7,
+    )
+
+
+@pytest.mark.parametrize("connector", CONNECTORS)
+def test_sssp_delta_matches_dense(connector):
+    N = 96
+    src, dst = _random_graph(N, seed=7)
+    g = Graph(N, jnp.asarray(src), jnp.asarray(dst),
+              jnp.zeros(N, jnp.float32))
+    prog = _sssp_prog()
+    dense = compile_pregel(prog, g, force_connector=connector)
+    delta = compile_pregel(prog, g, force_connector=connector,
+                           semi_naive=True)
+    r_dense = dense.run(max_iters=200, on_device=False)
+    r_delta = delta.run(max_iters=200)
+    assert r_dense.converged and r_delta.converged
+    assert r_delta.iterations == r_dense.iterations
+    np.testing.assert_allclose(
+        np.asarray(r_delta.state[0]), np.asarray(r_dense.state[0])
+    )
+
+
+def test_adaptive_driver_switches_modes_on_collapsing_frontier():
+    """A long path graph: after superstep 0 the frontier is a single vertex,
+    so the adaptive driver must flip dense -> sparse and stay sparse."""
+
+    N = 256
+    src = np.arange(N - 1, dtype=np.int32)
+    dst = np.arange(1, N, dtype=np.int32)
+    g = Graph(N, jnp.asarray(src), jnp.asarray(dst),
+              jnp.zeros(N, jnp.float32))
+    ex = compile_pregel(_sssp_prog(), g, semi_naive=True)
+    res = ex.run(max_iters=N + 5)
+    assert res.converged
+    assert res.modes, "adaptive run must record per-superstep modes"
+    assert res.modes[0] == "dense"            # everything active at J=0
+    assert all(m.startswith("sparse@") for m in res.modes[1:-1])
+    # ... and the fixpoint still matches the dense run
+    r_dense = compile_pregel(_sssp_prog(), g).run(max_iters=N + 5,
+                                                  on_device=False)
+    np.testing.assert_allclose(
+        np.asarray(res.state[0]), np.asarray(r_dense.state[0])
+    )
+
+
+def test_explicit_on_device_is_honored_for_semi_naive():
+    N = 64
+    src, dst = _random_graph(N, seed=11)
+    g = Graph(N, jnp.asarray(src), jnp.asarray(dst),
+              jnp.zeros(N, jnp.float32))
+    ex = compile_pregel(_sssp_prog(), g, semi_naive=True)
+    res = ex.run(max_iters=200, on_device=True)   # forces non-adaptive
+    assert res.converged
+    assert res.modes == ()                        # no adaptive selector ran
+    with pytest.raises(ValueError):
+        ex.run(max_iters=10, on_device=True, adaptive=True)
+
+
+def test_default_aggregate_is_not_delta_safe():
+    # Delta safety is opt-in: an unannotated aggregate must keep full reads.
+    agg = Aggregate("sum", zero=lambda: 0.0, combine=jnp.add)
+    assert not agg.delta_safe
+
+
+def test_dense_workload_never_switches():
+    """PageRank keeps every vertex active; the adaptive driver must stay on
+    the dense plan throughout."""
+
+    N = 32
+    src, dst = _random_graph(N, seed=9)
+    outdeg = np.bincount(src, minlength=N).astype(np.float32)
+    g = Graph(N, jnp.asarray(src), jnp.asarray(dst), jnp.asarray(outdeg))
+    ex = compile_pregel(_pagerank_prog(N, outdeg), g, semi_naive=True)
+    res = ex.run(max_iters=10)
+    assert res.modes and all(m == "dense" for m in res.modes)
+
+
+# ---------------------------------------------------------------------------
+# Driver: straggler window resets across restarts
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_window_excludes_failed_attempt():
+    """Pre-failure iterations are slow; post-restart iterations are fast with
+    one mild outlier.  With the failed attempt polluting the trailing mean,
+    the outlier is masked; with the window reset it must be detected."""
+
+    def step(state, j):
+        if j < 5:
+            time.sleep(0.12)          # slow epoch (failed attempt)
+        elif j == 10:
+            time.sleep(0.05)          # outlier vs ~1ms post-restart baseline
+        else:
+            time.sleep(0.001)
+        return state + 0.0
+
+    driver = HostFixpointDriver(
+        step=step,
+        converged=lambda a, b: False,
+        config=DriverConfig(max_iters=14, straggler_factor=3.0,
+                            max_restarts=1),
+        restore=lambda: (jnp.zeros(2), 5),
+    )
+    driver.fail_at = 5
+    driver.run(jnp.zeros(2))
+    assert driver.restarts == 1
+    assert driver._window_start == 5       # 5 slow iterations excluded
+    assert driver.straggler_events >= 1
