@@ -2,7 +2,12 @@
 
 Prints ``name,us_per_call,derived`` CSV.  ``measured`` rows time real
 executions on this host; ``derived`` rows come from the planner/roofline
-cost models (CPU container: TPU/2012-cluster numbers cannot be measured)."""
+cost models (CPU container: TPU/2012-cluster numbers cannot be measured).
+
+``--smoke`` runs the fast subset (the fig10 semi-naive superstep sweep plus
+the derived-only modules) — the CI-friendly mode that still exercises the
+real compiled dense and sparse superstep paths.
+"""
 
 from __future__ import annotations
 
@@ -10,7 +15,7 @@ import sys
 import traceback
 
 
-def main() -> int:
+def _modules(smoke: bool):
     from benchmarks import (
         fig6_bgd_speedup,
         fig7_bgd_scaleup,
@@ -22,11 +27,20 @@ def main() -> int:
         microbench,
     )
 
+    if smoke:
+        return (fig10_semi_naive, fig9_connector_plans, roofline)
+    return (fig6_bgd_speedup, fig7_bgd_scaleup, fig8_pagerank_speedup,
+            table1_pagerank_scaleup, fig9_connector_plans,
+            fig10_semi_naive, microbench, roofline)
+
+
+def main(argv=None) -> int:
+    args = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in args
+
     print("name,us_per_call,derived")
     failures = 0
-    for mod in (fig6_bgd_speedup, fig7_bgd_scaleup, fig8_pagerank_speedup,
-                table1_pagerank_scaleup, fig9_connector_plans,
-                fig10_semi_naive, microbench, roofline):
+    for mod in _modules(smoke):
         try:
             mod.main()
         except Exception:  # noqa: BLE001 - keep the suite running

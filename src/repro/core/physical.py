@@ -38,7 +38,10 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.planner import ReduceSchedule
-from repro.kernels.segment_combine.ops import segment_combine as _segment_combine_kernel
+from repro.kernels.segment_combine.ops import (
+    kernel_eligible as _kernel_eligible,
+    segment_combine as _segment_combine_kernel,
+)
 
 __all__ = [
     "psum_tree",
@@ -57,6 +60,7 @@ __all__ = [
     "compact_active_edges",
     "sparse_merging_exchange",
     "sparse_hash_sort_exchange",
+    "fused_got_exchange",
     "COMBINE_OPS",
 ]
 
@@ -284,12 +288,9 @@ def segment_combine_sorted(
     """
 
     if use_kernel is None:
-        # Auto-dispatch only for f32 payloads: the kernel accumulates in
-        # f32, which would silently narrow f64/int payloads of pre-existing
-        # callers.  Non-f32 callers can still opt in with use_kernel=True.
-        use_kernel = (
-            jax.default_backend() == "tpu" or bool(interpret)
-        ) and values.dtype == jnp.float32
+        # Shared auto-dispatch predicate (f32-only: the kernel accumulates
+        # in f32, which would silently narrow f64/int payloads).
+        use_kernel = _kernel_eligible(values, interpret)
     if use_kernel:
         flat = values.reshape(values.shape[0], -1).astype(jnp.float32)
         out = _segment_combine_kernel(
@@ -404,6 +405,42 @@ def compact_active_edges(
     valid = jnp.arange(cap, dtype=csum.dtype) < csum[-1]
     idx = jnp.where(valid, idx, E)
     return idx, valid
+
+
+def fused_got_exchange(
+    exchange: Callable[[jax.Array], jax.Array],
+    payload: jax.Array,
+    edge_valid: jax.Array,
+    op: str,
+) -> Tuple[jax.Array, jax.Array]:
+    """One exchange for ``(inbox, got)`` instead of two.
+
+    The Pregel executor needs both the combined inbox and the
+    got-a-message mask (the L7 non-null check).  Running the connector twice
+    doubles the collective count per superstep; instead we append a *flag*
+    column that carries 1.0 on every occupied slot and travels (and
+    combines) with the payload:
+
+    * ``sum``  — flags accumulate to the message count; ``got = flag > 0``.
+    * ``max``  — combined flag is 1.0 where any message arrived; empty
+      destinations read the identity (-inf on the XLA path, 0 on the Pallas
+      kernel path) — both fail ``flag > 0``.
+    * ``min``  — combined flag is exactly 1.0 where any message arrived;
+      empty destinations read +inf (XLA) or 0 (kernel) — both fail
+      ``flag == 1.0`` (the ``> 0`` test would wrongly pass on +inf).
+
+    ``exchange`` maps the fused ``[E, F+1]`` slab through the connector;
+    the caller closes over destination ids / axes / masks.
+    """
+
+    flat = payload.reshape(payload.shape[0], -1)
+    flag = jnp.where(edge_valid, 1.0, 0.0).astype(flat.dtype)
+    fused = jnp.concatenate([flat, flag[:, None]], axis=1)
+    out = exchange(fused)
+    inbox = out[..., :-1].reshape((out.shape[0],) + payload.shape[1:])
+    f = out[..., -1]
+    got = (f == 1.0) if op == "min" else (f > 0)
+    return inbox, got
 
 
 def sparse_merging_exchange(
@@ -598,9 +635,16 @@ def _sparse_exchange(
     if presorted:
         # Receiver merges pre-sorted runs: sorting nearly-sorted ids is the
         # merge; then a sorted segment reduce (the "merging connector").
+        # Empty bucket slots (id -1) are passed as the receiver-side frontier
+        # mask: on TPU the Pallas combiner's active-block bitmap skips slab
+        # blocks made entirely of padding, so receiver compute also scales
+        # with the frontier, not with n_shards * bucket_cap.
         order = jnp.argsort(local)
         local_s, vals_s = local[order], flat_vals[order]
-        out = segment_combine_sorted(vals_s, local_s, n_local_v + 1, op)
+        occupied = (flat_ids >= 0)[order]
+        out = segment_combine_sorted(
+            vals_s, local_s, n_local_v + 1, op, edge_active=occupied
+        )
     else:
         out = scatter_combine(flat_vals, local, n_local_v + 1, op)
     return out[:n_local_v]

@@ -319,8 +319,23 @@ class PregelPhysicalPlan:
     semi_naive: bool = False             # delta-frontier evaluation enabled
     density_threshold: float = 0.0       # frontier density below which the
                                          # sparse (delta) path wins
+    # Planner-derived floor of the per-shard compaction capacity: tiny
+    # frontiers share one compiled sparse-superstep variant instead of
+    # recompiling down the whole power-of-two ladder.
+    sparse_cap_floor: int = 64
     notes: Tuple[str, ...] = ()
     est_superstep_seconds: float = 0.0
+
+    def sparse_cap_for(self, count: int) -> int:
+        """Per-shard compaction capacity for a measured shard-local
+        active-edge count (on sharded meshes: the *maximum* over shards, so
+        every shard's frontier fits the same static slab and the mesh stays
+        in SPMD lockstep).  Next power of two, bounded below by
+        ``sparse_cap_floor``.  The single source of the cap ladder —
+        benchmarks reuse it so they time exactly what the adaptive driver
+        runs."""
+
+        return max(self.sparse_cap_floor, 1 << max(count - 1, 0).bit_length())
 
     def mode_for_density(self, density: float) -> str:
         """The Fig.-9 connector choice recomputed online: given the measured
@@ -392,9 +407,21 @@ def pregel_superstep_costs(
     comm_dense = ring_reduce_scatter(
         n * stats.msg_bytes / max(dp, 1), dp, hw.ici_bw, hw.ici_latency
     ).seconds
-    comm_sparse = all_to_all(
-        active_e * stats.msg_bytes / max(dp, 1), dp, hw.ici_bw, hw.ici_latency
-    ).seconds if dp > 1 else 0.0
+    if dp > 1:
+        # Frontier-sized interconnect terms for the sharded sparse path:
+        # each shard exchanges dp x cap bucket slots of (payload + fused
+        # got-flag + destination id) bytes, where cap covers the maximally
+        # loaded shard's frontier (balanced estimate: active_e / dp), plus
+        # one tiny per-shard-count all-gather for the collective
+        # dense<->sparse mode agreement.
+        cap = active_e / dp
+        slab_bytes = dp * cap * (stats.msg_bytes + 8)
+        comm_sparse = (
+            all_to_all(slab_bytes, dp, hw.ici_bw, hw.ici_latency).seconds
+            + hw.ici_latency * (dp - 1)
+        )
+    else:
+        comm_sparse = 0.0
 
     dense = edge_pipeline(float(e)) + (comm_dense if dp > 1 else 0.0)
     # Compaction pass: stream the edge mask + write the index slab.
@@ -481,8 +508,20 @@ def plan_pregel(
     # dense one (the Fig. 9 connector choice parameterized by density).  The
     # adaptive driver compares the measured per-superstep density against
     # this threshold online.
+    # Per-shard compaction-capacity floor: a power of two no larger than a
+    # quarter of the shard-local edge slab (so the sparse path can actually
+    # engage on small graphs), capped at 64 so tiny frontiers share one
+    # compiled variant on production-sized graphs.
+    local_e = max(1, stats.n_edges // max(dp, 1))
+    cap_floor = min(64, 1 << max((local_e // 4).bit_length() - 1, 0))
+
     density_threshold = 0.0
     if semi_naive:
+        if dp > 1:
+            notes.append(
+                f"sharded-delta(per-shard compaction, bucket-a2a x{dp}, "
+                f"collective mode-agreement)"
+            )
         rho = 1.0
         while rho > 1.0 / (4 * max(stats.n_edges, 1)):
             d_cost, s_cost = pregel_superstep_costs(stats, mesh, hw, rho)
@@ -517,6 +556,7 @@ def plan_pregel(
         cache_graph=True,
         semi_naive=semi_naive,
         density_threshold=density_threshold,
+        sparse_cap_floor=cap_floor,
         notes=tuple(notes),
         est_superstep_seconds=est,
     )

@@ -52,6 +52,7 @@ from repro.core.physical import (
     COMBINE_OPS,
     compact_active_edges,
     dense_psum_exchange,
+    fused_got_exchange,
     hash_sort_exchange,
     merging_exchange,
     scatter_combine,
@@ -83,6 +84,50 @@ class Graph:
             jnp.ones_like(self.src, dtype=jnp.float32),
             self.src, self.n_vertices, "sum",
         )
+
+
+def _compact_and_gather(prog: "VertexProgram", j, state, active, src, dst,
+                        cap: int, *, pad=None, edge_data=None):
+    """Shared sparse-superstep prologue: mask the edge slab by source
+    activity (and padding, on sharded slabs), compact the frontier into
+    ``cap`` slots, gather the compacted endpoints/state/edge-data, and run
+    the message UDF.  Returns ``(dst_c, payload, valid)`` for the exchange.
+    Empty slots carry a clamped in-range index (their payload is computed
+    from real state but excluded everywhere via ``valid``)."""
+
+    mask = jnp.take(active, src, axis=0)
+    if pad is not None:
+        mask = jnp.logical_and(mask, jnp.logical_not(pad))
+    idx, valid = compact_active_edges(mask, cap)
+    idx_c = jnp.minimum(idx, src.shape[0] - 1)
+    src_c = jnp.take(src, idx_c)
+    dst_c = jnp.take(dst, idx_c)
+    edata_c = (
+        None if edge_data is None else jax.tree_util.tree_map(
+            lambda e: jnp.take(e, idx_c, axis=0), edge_data
+        )
+    )
+    src_state = jax.tree_util.tree_map(
+        lambda s: jnp.take(s, src_c, axis=0), state
+    )
+    payload = prog.message(j, src_state, edata_c)
+    return dst_c, payload, valid
+
+
+def _apply_and_merge(prog: "VertexProgram", j, state, inbox, got):
+    """Shared superstep epilogue (O8..O10 + L7): run the apply UDF, keep the
+    old state wherever no message arrived, and halt those vertices.  Every
+    superstep variant — dense/sparse, single-shard/sharded — must share this
+    exact merge semantics or the execution strategies diverge."""
+
+    new_state, new_active = prog.apply(j, state, inbox, got)
+    merged = jax.tree_util.tree_map(
+        lambda old, new: jnp.where(
+            got.reshape((-1,) + (1,) * (new.ndim - 1)), new, old
+        ),
+        state, new_state,
+    )
+    return merged, jnp.logical_and(new_active, got)
 
 
 @dataclass
@@ -122,13 +167,31 @@ class PregelExecutable:
     graph: Graph
     mesh: Optional[Mesh]
     semi_naive: bool = False
-    # Sparse (delta-frontier) execution is implemented for the single-shard
-    # edge layout; sharded meshes run the frontier-masked dense path.
+    # Sparse (delta-frontier) execution runs on every edge layout: the
+    # single-shard slab, and sharded meshes via per-shard compaction under
+    # ``shard_map`` (``sparse_step_factory``).
     supports_sparse: bool = True
-    sparse_cap_floor: int = 64
+    # Sharded meshes: builds the jitted frontier-compacted superstep for a
+    # given static per-shard capacity (set by ``compile_pregel``; None on
+    # the single-shard layout, which uses ``_make_sparse_step``).
+    sparse_step_factory: Optional[Callable[[int], Callable]] = field(
+        default=None, repr=False
+    )
+    # Sharded meshes: ``active -> int32[n_shards]`` shard-local active-edge
+    # counts (one tiny shard_map reduction, read on host).
+    shard_count_fn: Optional[Callable] = field(default=None, repr=False)
+    # Per-shard edge-slab size (== n_edges on the single-shard layout): a
+    # compaction capacity at or above this cannot win, so the adaptive
+    # driver falls back to the lossless frontier-masked dense path.
+    local_edge_cap: int = 0
     _sparse_steps: Dict[int, Callable] = field(default_factory=dict, repr=False)
     _edge_count_fn: Optional[Callable] = field(default=None, repr=False)
     _jit_superstep: Optional[Callable] = field(default=None, repr=False)
+    _halt_step: Optional[Callable] = field(default=None, repr=False)
+
+    @property
+    def sparse_cap_floor(self) -> int:
+        return self.plan.sparse_cap_floor
 
     @property
     def jitted_superstep(self) -> Callable:
@@ -163,77 +226,85 @@ class PregelExecutable:
             )
         return int(self._edge_count_fn(active))
 
+    def shard_edge_counts(self, active: jax.Array) -> np.ndarray:
+        """Shard-local active-edge counts, int array of length n_shards.
+
+        On sharded meshes this is one collective read per superstep: every
+        shard reduces its own edge slab and the host driver aggregates the
+        counts into a single dense<->sparse decision (sum -> density for the
+        mode, max -> per-shard compaction capacity), so all shards execute
+        the same superstep variant in SPMD lockstep."""
+
+        if self.shard_count_fn is None:
+            return np.asarray([self.active_edge_count(active)])
+        return np.asarray(self.shard_count_fn(active))
+
     def _make_sparse_step(self, cap: int) -> Callable:
         """Frontier-compacted superstep: all edge-proportional work (gather,
         message UDF, combine, exchange) runs over a ``cap``-sized compacted
         slab of the active edges instead of all E edges."""
 
         g, prog, op = self.graph, self.prog, self.prog.combine
-        E = g.n_edges
-        sparse_ex = {
-            "merging": sparse_merging_exchange,
-            "hash_sort": sparse_hash_sort_exchange,
-        }.get(self.plan.connector)
+        sparse_ex = _SPARSE_EXCHANGES.get(self.plan.connector)
 
         def step(carry, j):
             state, active = carry
-            mask_e = jnp.take(active, g.src, axis=0)
-            idx, valid = compact_active_edges(mask_e, cap)
-            idx_c = jnp.minimum(idx, E - 1)
-            src_c = jnp.take(g.src, idx_c)
-            dst_c = jnp.take(g.dst, idx_c)
-            edata_c = (
-                None if g.edge_data is None else jax.tree_util.tree_map(
-                    lambda e: jnp.take(e, idx_c, axis=0), g.edge_data
-                )
+            dst_c, payload, valid = _compact_and_gather(
+                prog, j, state, active, g.src, g.dst, cap,
+                edge_data=g.edge_data,
             )
-            src_state = jax.tree_util.tree_map(
-                lambda s: jnp.take(s, src_c, axis=0), state
-            )
-            payload = prog.message(j, src_state, edata_c)
-            ones = jnp.where(valid, 1.0, 0.0)
             if sparse_ex is None:
-                inbox = dense_psum_exchange(
-                    dst_c, payload, g.n_vertices, (), op, edge_mask=valid
+                ex = lambda fused: dense_psum_exchange(
+                    dst_c, fused, g.n_vertices, (), op, edge_mask=valid
                 )
-                got = dense_psum_exchange(
-                    dst_c, ones, g.n_vertices, (), "sum", edge_mask=valid
-                ) > 0
             else:
-                inbox = sparse_ex(dst_c, payload, valid, g.n_vertices, (), op)
-                got = sparse_ex(
-                    dst_c, ones, valid, g.n_vertices, (), "sum"
-                ) > 0
-            new_state, new_active = prog.apply(j, state, inbox, got)
-            merged = jax.tree_util.tree_map(
-                lambda old, new: jnp.where(
-                    got.reshape((-1,) + (1,) * (new.ndim - 1)), new, old
-                ),
-                state, new_state,
-            )
-            return merged, jnp.logical_and(new_active, got)
+                ex = lambda fused: sparse_ex(
+                    dst_c, fused, valid, g.n_vertices, (), op
+                )
+            inbox, got = fused_got_exchange(ex, payload, valid, op)
+            return _apply_and_merge(prog, j, state, inbox, got)
 
         return step
 
     def sparse_superstep(self, cap: int) -> Callable:
         """Jitted frontier-compacted superstep for a given static capacity
         (cached per capacity — the adaptive driver walks a power-of-two
-        ladder, so only O(log E) variants ever compile)."""
+        ladder, so only O(log E) variants ever compile).  On sharded meshes
+        the variant comes from ``sparse_step_factory`` (per-shard compaction
+        under ``shard_map``)."""
 
         fn = self._sparse_steps.get(cap)
         if fn is None:
-            fn = jax.jit(self._make_sparse_step(cap))
+            if self.sparse_step_factory is not None:
+                fn = self.sparse_step_factory(cap)
+            else:
+                fn = jax.jit(self._make_sparse_step(cap))
             self._sparse_steps[cap] = fn
         return fn
 
     def sparse_cap_for(self, count: int) -> int:
-        """Compaction capacity for a measured active-edge count: the next
-        power of two, bounded below by ``sparse_cap_floor`` so tiny
-        frontiers share one compiled variant.  The single source of the cap
-        ladder — benchmarks reuse it so they time exactly what the adaptive
-        driver runs."""
+        """Compaction capacity for a measured (max shard-local) active-edge
+        count — delegates to the plan, the planner-derived single source of
+        the cap ladder, so benchmarks time exactly what the adaptive driver
+        runs."""
 
-        return max(self.sparse_cap_floor, 1 << max(count - 1, 0).bit_length())
+        return self.plan.sparse_cap_for(count)
+
+    def halt_superstep(self) -> Callable:
+        """Algebraically-simplified superstep for an all-empty edge
+        frontier: no edge can carry a message, so ``got`` is False
+        everywhere and the full superstep reduces to keeping the state and
+        clearing the active flags — O(N) bool work instead of a
+        cap-floor-sized compact/exchange no-op.  Running it (rather than
+        skipping the iteration) keeps ONE termination mechanism — the
+        driver's ``converged`` test — and leaves exactly the state/active
+        pair the dense path would produce."""
+
+        if self._halt_step is None:
+            self._halt_step = jax.jit(
+                lambda carry, j: (carry[0], jnp.zeros_like(carry[1]))
+            )
+        return self._halt_step
 
     def adaptive_select_step(
         self, carry, j: int
@@ -241,17 +312,31 @@ class PregelExecutable:
         """Per-superstep dense<->sparse choice (the Fig. 9 connector choice
         recomputed online): measure the frontier density, consult the plan's
         cost-model threshold, and pick the executing superstep.  Dense early
-        (everything active), sparse in the long convergence tail."""
+        (everything active), sparse in the long convergence tail.
+
+        On sharded meshes the shard-local counts are aggregated into ONE
+        decision (sum -> density, max -> capacity) so every shard runs the
+        same compiled variant — SPMD lockstep.  An all-empty frontier means
+        no rule can fire: the selector swaps in :meth:`halt_superstep`
+        (clear the active flags, O(N)) instead of a cap-floor-sized no-op
+        compact/exchange superstep, and the fixpoint converges this
+        iteration.  A frontier too large for the per-shard slab (capacity
+        overflow) falls back to the lossless frontier-masked dense path —
+        compaction never silently drops messages."""
 
         _, active = carry
-        count = self.active_edge_count(active)
-        density = count / max(self.graph.n_edges, 1)
+        counts = self.shard_edge_counts(active)
+        total = int(counts.sum())
+        if total == 0:
+            halt = self.halt_superstep()
+            return (lambda s, jj: halt(s, jnp.int32(jj))), "halt(empty-frontier)"
+        density = total / max(self.graph.n_edges, 1)
         if (
             self.supports_sparse
             and self.plan.mode_for_density(density) == "sparse"
         ):
-            cap = self.sparse_cap_for(count)
-            if cap < self.graph.n_edges:
+            cap = self.sparse_cap_for(int(counts.max()))
+            if cap < self.local_edge_cap:
                 fn = self.sparse_superstep(cap)
                 return (lambda s, jj: fn(s, jnp.int32(jj))), f"sparse@{cap}"
         dense = self.jitted_superstep
@@ -319,6 +404,13 @@ _EXCHANGES = {
     "dense_psum": dense_psum_exchange,
     "merging": merging_exchange,
     "hash_sort": hash_sort_exchange,
+}
+
+# Frontier-compacted connector variants (dense_psum has no sparse variant:
+# its masked path keeps the N-sized psum but runs edge work on the slab).
+_SPARSE_EXCHANGES = {
+    "merging": sparse_merging_exchange,
+    "hash_sort": sparse_hash_sort_exchange,
 }
 
 
@@ -407,14 +499,7 @@ def compile_pregel(
         ) > 0
         # O8 apply + O9/O10 masked in-place state update (non-null check L7):
         # vertices with no inbound messages keep their state and stay halted.
-        new_state, new_active = prog.apply(j, state_shard, inbox, got_msg)
-        merged = jax.tree_util.tree_map(
-            lambda old, new: jnp.where(
-                got_msg.reshape((-1,) + (1,) * (new.ndim - 1)), new, old
-            ),
-            state_shard, new_state,
-        )
-        return merged, jnp.logical_and(new_active, got_msg)
+        return _apply_and_merge(prog, j, state_shard, inbox, got_msg)
 
     if mesh is not None and batch_axes:
         from jax.experimental.shard_map import shard_map
@@ -428,9 +513,9 @@ def compile_pregel(
         owner = np.asarray(graph.src) // n_local
         order = np.argsort(owner, kind="stable")
         counts = np.bincount(owner, minlength=n_shards)
-        cap = int(counts.max())
-        src_p = np.full((n_shards, cap), 0, np.int32)
-        dst_p = np.full((n_shards, cap), -1, np.int32)  # -1 = padding
+        slab_cap = int(counts.max())
+        src_p = np.full((n_shards, slab_cap), 0, np.int32)
+        dst_p = np.full((n_shards, slab_cap), -1, np.int32)  # -1 = padding
         src_sorted = np.asarray(graph.src)[order]
         dst_sorted = np.asarray(graph.dst)[order]
         offs = np.zeros(n_shards + 1, np.int64)
@@ -453,7 +538,16 @@ def compile_pregel(
         vdata = jax.device_put(
             graph.vertex_data, NamedSharding(mesh, spec1)
         )
-        edata = graph.edge_data
+        if graph.edge_data is not None:
+            # The sharded layouts (dense and sparse) do not partition
+            # edge_data into the per-shard slabs yet; the message UDF would
+            # silently trace with edge_data=None while the same program runs
+            # correctly single-shard — fail loudly instead.
+            raise NotImplementedError(
+                "edge_data is not supported on sharded meshes yet; "
+                "fold per-edge attributes into vertex_data or run "
+                "single-shard"
+            )
 
         def sharded(state, active, src_l, dst_l, pad_l, vdata_l, j):
             # Mask padded edges: treat their source as inactive.
@@ -480,14 +574,7 @@ def compile_pregel(
                 jnp.where(act, 1.0, 0.0),
                 graph.n_vertices, batch_axes, "sum",
             ) > 0
-            new_state, new_active = prog.apply(j, state, inbox, got)
-            merged = jax.tree_util.tree_map(
-                lambda old, new: jnp.where(
-                    got.reshape((-1,) + (1,) * (new.ndim - 1)), new, old
-                ),
-                state, new_state,
-            )
-            return merged, jnp.logical_and(new_active, got)
+            return _apply_and_merge(prog, j, state, inbox, got)
 
         state_specs = P(batch_axes)
         fn = shard_map(
@@ -501,6 +588,68 @@ def compile_pregel(
         def superstep(carry, j):
             state, active = carry
             return fn(state, active, src_arr, dst_arr, pad_arr, vdata, j)
+
+        # -- sharded semi-naive (delta-frontier) machinery ------------------
+
+        def _local_count(active, src_l, pad_l):
+            mask = jnp.logical_and(
+                jnp.take(active, src_l, axis=0), jnp.logical_not(pad_l)
+            )
+            return jnp.sum(mask.astype(jnp.int32)).reshape(1)
+
+        count_fn = jax.jit(shard_map(
+            _local_count, mesh=mesh,
+            in_specs=(state_specs, spec1, spec1),
+            out_specs=P(batch_axes),
+            check_rep=False,
+        ))
+
+        def shard_count_fn(active):
+            return count_fn(active, src_arr, pad_arr)
+
+        sparse_ex = _SPARSE_EXCHANGES.get(plan.connector)
+
+        def sparse_step_factory(compact_cap: int) -> Callable:
+            """Frontier-compacted sharded superstep: every shard compacts
+            its local edge slab into the same static ``compact_cap`` slots
+            (the host driver derives the capacity from the max shard-local
+            count, keeping the mesh in SPMD lockstep), then all
+            edge-proportional work — gather, message UDF, combine, and the
+            cross-shard exchange payloads — scales with the frontier
+            instead of the slab."""
+
+            def step_shard(state, active, src_l, dst_l, pad_l, j):
+                dst_c, payload, valid = _compact_and_gather(
+                    prog, j, state, active, src_l, dst_l, compact_cap,
+                    pad=pad_l,
+                )
+                if sparse_ex is None:
+                    # No sparse connector variant: the frontier-masked dense
+                    # exchange still moves N-sized partials, but all
+                    # edge-side work runs on the compacted slab.
+                    ex = lambda fused: dense_psum_exchange(
+                        dst_c, fused, graph.n_vertices, batch_axes, op,
+                        edge_mask=valid,
+                    )
+                else:
+                    ex = lambda fused: sparse_ex(
+                        dst_c, fused, valid, graph.n_vertices, batch_axes, op
+                    )
+                inbox, got = fused_got_exchange(ex, payload, valid, op)
+                return _apply_and_merge(prog, j, state, inbox, got)
+
+            wrapped = shard_map(
+                step_shard, mesh=mesh,
+                in_specs=(state_specs, state_specs, spec1, spec1, spec1, P()),
+                out_specs=(state_specs, state_specs),
+                check_rep=False,
+            )
+
+            def step(carry, j):
+                state, active = carry
+                return wrapped(state, active, src_arr, dst_arr, pad_arr, j)
+
+            return jax.jit(step)
     else:
         def superstep(carry, j):
             state, active = carry
@@ -509,6 +658,10 @@ def compile_pregel(
                 state, active, src_l, dst_l, graph.edge_data,
                 graph.vertex_data, 0, j,
             )
+
+        sparse_step_factory = None
+        shard_count_fn = None
+        slab_cap = graph.n_edges
 
     return PregelExecutable(
         prog=prog,
@@ -519,5 +672,8 @@ def compile_pregel(
         graph=graph,
         mesh=mesh,
         semi_naive=semi_naive,
-        supports_sparse=not (mesh is not None and batch_axes),
+        supports_sparse=True,
+        sparse_step_factory=sparse_step_factory,
+        shard_count_fn=shard_count_fn,
+        local_edge_cap=slab_cap,
     )

@@ -10,11 +10,24 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.segment_combine.kernel import segment_combine_pallas
 from repro.kernels.segment_combine.ref import segment_combine_reference
 
-__all__ = ["segment_combine"]
+__all__ = ["segment_combine", "kernel_eligible"]
+
+
+def kernel_eligible(values: jax.Array, interpret: Optional[bool]) -> bool:
+    """Auto-dispatch predicate shared by every segment-combine entry point
+    (this wrapper and ``physical.segment_combine_sorted``): the Pallas
+    kernel runs on TPU (or in interpret mode) and only for f32 payloads —
+    it accumulates in f32, which would silently narrow f64/int payloads.
+    Non-f32 callers can still opt in explicitly with ``use_kernel=True``."""
+
+    return (
+        jax.default_backend() == "tpu" or bool(interpret)
+    ) and values.dtype == jnp.float32
 
 
 def segment_combine(
@@ -29,10 +42,15 @@ def segment_combine(
 ) -> jax.Array:
     """``edge_active`` (optional bool[E]) is the delta-frontier mask: rows
     outside the frontier are excluded from the combine, and the Pallas path
-    skips fully-inactive edge blocks via a scalar-prefetched bitmap."""
+    skips fully-inactive edge blocks via a scalar-prefetched bitmap.  The
+    sharded sparse connectors reuse the same mask for their receiver slabs
+    (empty all-to-all bucket slots), so receiver-side combine work also
+    scales with the frontier.  Auto-dispatch (``use_kernel=None``) follows
+    :func:`kernel_eligible`.
+    """
 
     if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu" or bool(interpret)
+        use_kernel = kernel_eligible(values, interpret)
     if not use_kernel:
         return segment_combine_reference(
             values, segment_ids, n_segments, op, edge_active=edge_active

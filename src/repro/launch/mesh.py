@@ -13,8 +13,8 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_compat_mesh", "make_production_mesh", "mesh_spec_of",
-           "SINGLE_POD_AXES", "MULTI_POD_AXES"]
+__all__ = ["make_compat_mesh", "make_data_mesh", "make_production_mesh",
+           "mesh_spec_of", "SINGLE_POD_AXES", "MULTI_POD_AXES"]
 
 SINGLE_POD_AXES = (("data", 16), ("model", 16))
 MULTI_POD_AXES = (("pod", 2), ("data", 16), ("model", 16))
@@ -31,6 +31,17 @@ def make_compat_mesh(shape, axes):
     return jax.make_mesh(
         shape, axes, axis_types=(axis_type.Auto,) * len(axes)
     )
+
+
+def make_data_mesh(n_data: int = 0):
+    """Pure data-parallel mesh over the local devices — the layout of the
+    sharded Pregel tests and the fig10 sharded semi-naive benchmark.
+    ``n_data=0`` uses every visible device (e.g. 8 under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)."""
+
+    if n_data <= 0:
+        n_data = len(jax.devices())
+    return make_compat_mesh((n_data,), ("data",))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -1,0 +1,42 @@
+"""Shared launcher for the multi-device subprocess test programs.
+
+The SPMD suites need 8 fake devices (``XLA_FLAGS`` set before jax imports)
+while the main pytest process must keep seeing 1 — per the dry-run
+contract — so each suite runs a standalone program in a subprocess and
+parses its ``RESULTS_JSON:`` line.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+
+def run_spmd_program(filename: str) -> dict:
+    """Run ``tests/<filename>`` in a subprocess and return its results dict.
+
+    Retries once on collective-rendezvous aborts: XLA CPU kills a collective
+    if a participant thread is starved for 40 s (8 virtual devices share one
+    physical core on CI), so transient machine load can abort a first run.
+    """
+
+    tests_dir = os.path.dirname(os.path.abspath(__file__))
+    prog = os.path.join(tests_dir, filename)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(tests_dir), "src")
+    for attempt in (1, 2):
+        proc = subprocess.run(
+            [sys.executable, prog], capture_output=True, text=True, env=env,
+            timeout=1800,
+        )
+        if proc.returncode == 0:
+            break
+        if attempt == 2 or "rendezvous" not in proc.stderr.lower():
+            assert proc.returncode == 0, proc.stderr[-4000:]
+    lines = [l for l in proc.stdout.splitlines()
+             if l.startswith("RESULTS_JSON:")]
+    assert lines, f"no RESULTS_JSON line in {filename} output:\n" \
+                  f"{proc.stdout[-2000:]}"
+    return json.loads(lines[-1][len("RESULTS_JSON:"):])

@@ -1,0 +1,178 @@
+"""Sharded semi-naive differential-conformance program, run as a subprocess
+by test_spmd_semi_naive.py (the XLA device-count flag must be set before jax
+imports, and the main test process must keep seeing 1 device).
+
+Property defended: on an 8-virtual-device SPMD mesh, the sharded
+delta-frontier (sparse) execution is ``allclose``-identical to the
+single-shard dense fixpoint for PageRank (sum), SSSP (min) and connected
+components (max) across all three Fig.-9 connectors — per-shard compaction,
+the frontier-sized bucket exchanges, the fused got-flag column, and the
+collective dense<->sparse mode agreement are execution strategies, never a
+semantics change.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import dataclasses
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+CONNECTORS = ("dense_psum", "merging", "hash_sort")
+N = 64
+
+
+def _random_graph(seed=1):
+    rng = np.random.default_rng(seed)
+    src, dst = [], []
+    for v in range(N):
+        for _ in range(rng.integers(1, 5)):
+            src.append(v)
+            dst.append(int(rng.integers(0, N)))
+    for v in range(N):
+        src.append(int(rng.integers(0, N)))
+        dst.append(v)
+    return np.array(src, np.int32), np.array(dst, np.int32)
+
+
+def _programs():
+    from repro.core.pregel import VertexProgram
+
+    inf = jnp.float32(1e9)
+    return {
+        # PageRank: sum combine, frontier never collapses (dense throughout).
+        "pagerank": (VertexProgram(
+            init_vertex=lambda ids, vd: jnp.stack(
+                [jnp.full((N,), 1.0 / N), vd], axis=1),
+            message=lambda j, s, ed: s[:, 0] / jnp.maximum(s[:, 1], 1.0),
+            apply=lambda j, s, inbox, got: (
+                jnp.stack([0.15 / N + 0.85 * inbox, s[:, 1]], axis=1),
+                jnp.ones(s.shape[0], jnp.bool_)),
+            combine="sum",
+        ), 15, lambda st: st[:, 0]),
+        # SSSP: min combine, collapsing frontier (sparse tail).
+        "sssp": (VertexProgram(
+            init_vertex=lambda ids, vd: jnp.where(ids == 0, 0.0, inf),
+            message=lambda j, s, ed: s + 1.0,
+            apply=lambda j, s, inbox, got: (
+                jnp.minimum(s, inbox), jnp.minimum(s, inbox) < s),
+            combine="min",
+        ), 100, lambda st: st),
+        # Connected components via max-label propagation: max combine.
+        "cc": (VertexProgram(
+            init_vertex=lambda ids, vd: ids.astype(jnp.float32),
+            message=lambda j, s, ed: s,
+            apply=lambda j, s, inbox, got: (
+                jnp.maximum(s, inbox), jnp.maximum(s, inbox) > s),
+            combine="max",
+        ), 100, lambda st: st),
+    }
+
+
+def main() -> None:
+    results = {}
+    from repro.launch.mesh import make_data_mesh
+    from repro.core.pregel import Graph, VertexProgram, compile_pregel
+
+    mesh = make_data_mesh()
+    src, dst = _random_graph()
+    outdeg = np.bincount(src, minlength=N).astype(np.float32)
+    g = Graph(N, jnp.asarray(src), jnp.asarray(dst), jnp.asarray(outdeg))
+
+    # --- fixpoint conformance: sharded sparse vs single-shard dense --------
+    errs = {}
+    sparse_engaged = {}
+    supports = {}
+    for name, (prog, iters, readout) in _programs().items():
+        oracle = compile_pregel(prog, g).run(max_iters=iters, on_device=False)
+        want = np.asarray(readout(oracle.state[0]))
+        for conn in CONNECTORS:
+            ex = compile_pregel(prog, g, mesh=mesh, force_connector=conn,
+                                semi_naive=True)
+            # Pin the dense<->sparse policy so conformance does not depend
+            # on the cost model's threshold for this tiny graph.
+            ex.plan = dataclasses.replace(
+                ex.plan, density_threshold=0.6, sparse_cap_floor=16)
+            supports[f"{name}/{conn}"] = bool(ex.supports_sparse)
+            res = ex.run(max_iters=iters)
+            got = np.asarray(readout(res.state[0]))
+            errs[f"{name}/{conn}"] = float(np.max(np.abs(got - want)))
+            sparse_engaged[f"{name}/{conn}"] = any(
+                m.startswith("sparse@") for m in res.modes)
+    results["fixpoint_errs"] = errs
+    results["sparse_engaged"] = sparse_engaged
+    results["supports_sparse"] = supports
+
+    # --- superstep-level conformance: every connector x combine pair -------
+    # One sharded dense superstep vs one sharded frontier-compacted sparse
+    # superstep on the same pinned ~10% frontier.
+    step_errs = {}
+    rng = np.random.default_rng(5)
+    active = np.zeros(N, bool)
+    active[rng.choice(N, max(1, N // 10), replace=False)] = True
+    for op in ("sum", "max", "min"):
+        prog = VertexProgram(
+            init_vertex=lambda ids, vd: ids.astype(jnp.float32) + 1.0,
+            message=lambda j, s, ed: 0.5 * s + 1.0,
+            apply=lambda j, s, inbox, got: (
+                inbox, jnp.ones(s.shape[0], jnp.bool_)),
+            combine=op,
+        )
+        for conn in CONNECTORS:
+            ex = compile_pregel(prog, g, mesh=mesh, force_connector=conn,
+                                semi_naive=True)
+            ex.plan = dataclasses.replace(ex.plan, sparse_cap_floor=16)
+            carry = (ex.init()[0], jnp.asarray(active))
+            d_state, d_active = ex.jitted_superstep(carry, jnp.int32(0))
+            cap = ex.sparse_cap_for(int(ex.shard_edge_counts(carry[1]).max()))
+            s_state, s_active = ex.sparse_superstep(cap)(carry, jnp.int32(0))
+            err = float(np.max(np.abs(
+                np.asarray(s_state) - np.asarray(d_state))))
+            agree = bool(np.array_equal(
+                np.asarray(s_active), np.asarray(d_active)))
+            step_errs[f"{op}/{conn}"] = err if agree else float("inf")
+    results["superstep_errs"] = step_errs
+
+    # --- empty-frontier early termination on the sharded path --------------
+    # Path graph: the last active vertex has no out-edges, so the final
+    # frontier carries zero active edges — the driver must halt instead of
+    # running a no-op sparse superstep.
+    src_p = np.arange(N - 1, dtype=np.int32)
+    dst_p = np.arange(1, N, dtype=np.int32)
+    g_path = Graph(N, jnp.asarray(src_p), jnp.asarray(dst_p),
+                   jnp.zeros(N, jnp.float32))
+    sssp = _programs()["sssp"][0]
+    ex = compile_pregel(sssp, g_path, mesh=mesh, semi_naive=True)
+    ex.plan = dataclasses.replace(
+        ex.plan, density_threshold=0.6, sparse_cap_floor=4)
+    res = ex.run(max_iters=N + 5)
+    oracle = compile_pregel(sssp, g_path).run(max_iters=N + 5,
+                                              on_device=False)
+    results["halt_converged"] = bool(res.converged)
+    results["halt_last_mode"] = res.modes[-1] if res.modes else ""
+    results["halt_sparse_engaged"] = any(
+        m.startswith("sparse@") for m in res.modes)
+    results["halt_err"] = float(np.max(np.abs(
+        np.asarray(res.state[0]) - np.asarray(oracle.state[0]))))
+    # The halt superstep must leave the same all-False active set the dense
+    # path produces — no stale frontier flags on any shard.
+    results["halt_active_cleared"] = not bool(np.asarray(res.state[1]).any())
+
+    # --- sharded edge_data is rejected loudly, not silently dropped --------
+    g_w = Graph(N, jnp.asarray(src_p), jnp.asarray(dst_p),
+                jnp.zeros(N, jnp.float32),
+                edge_data=jnp.ones(N - 1, jnp.float32))
+    try:
+        compile_pregel(sssp, g_w, mesh=mesh)
+        results["edge_data_rejected"] = False
+    except NotImplementedError:
+        results["edge_data_rejected"] = True
+
+    print("RESULTS_JSON:" + json.dumps(results))
+
+
+if __name__ == "__main__":
+    main()

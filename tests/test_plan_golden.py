@@ -1,0 +1,121 @@
+"""Golden ``plan.notes`` snapshots for the cost-based planner.
+
+The applied-rule notes are the planner's public record of which rewrites
+fired (tests, EXPERIMENTS.md and the benchmarks all key off them), so a
+planner change that silently adds, drops, or reorders a rewrite decision on
+any mesh shape must show up as a diff here.  Snapshots cover 1/2/4-way data
+meshes plus a 2x2 pod mesh for both ``plan_pregel`` and ``plan_imru``.
+"""
+
+from repro.core.hardware import MeshSpec
+from repro.core.planner import IMRUStats, PregelStats, plan_imru, plan_pregel
+
+MESHES = {
+    "1way": MeshSpec((("data", 1),)),
+    "2way": MeshSpec((("data", 2),)),
+    "4way": MeshSpec((("data", 4),)),
+    "2x2pod": MeshSpec((("pod", 2), ("data", 2))),
+}
+
+PREGEL_STATS = PregelStats(n_vertices=4096, n_edges=65536,
+                           vertex_bytes=4, msg_bytes=4)
+IMRU_STATS = IMRUStats(n_records=1_000_000, record_bytes=400,
+                       model_bytes=16 * 2**20, stat_bytes=16 * 2**20,
+                       flops_per_record=1e4)
+
+_PREGEL_BASE = (
+    "storage-selection(dense-indexed-state)",
+    "join-algorithm(index-gather)",
+    "loop-invariant-caching(graph)",
+    "early-grouping(sender-combine)",
+    "connector(dense_psum)",
+)
+
+PREGEL_GOLDEN = {
+    # Single shard: no interconnect, the sparse path wins below 50% density.
+    ("1way", True): _PREGEL_BASE + (
+        "semi-naive(adaptive dense<->sparse @ density 0.5)",
+    ),
+    # Sharded: the per-shard compaction + frontier-sized bucket-a2a plan is
+    # recorded, but on this tiny (65K-edge) graph the alpha terms of the
+    # sparse exchange never beat one dense psum on the TPU hardware model —
+    # the threshold solves to the "sparse never wins" sentinel.
+    ("2way", True): _PREGEL_BASE + (
+        "sharded-delta(per-shard compaction, bucket-a2a x2, "
+        "collective mode-agreement)",
+        "semi-naive(adaptive dense<->sparse @ density 0)",
+    ),
+    ("4way", True): _PREGEL_BASE + (
+        "sharded-delta(per-shard compaction, bucket-a2a x4, "
+        "collective mode-agreement)",
+        "semi-naive(adaptive dense<->sparse @ density 0)",
+    ),
+    ("2x2pod", True): _PREGEL_BASE + (
+        "sharded-delta(per-shard compaction, bucket-a2a x4, "
+        "collective mode-agreement)",
+        "semi-naive(adaptive dense<->sparse @ density 0)",
+    ),
+    ("1way", False): _PREGEL_BASE,
+    ("2way", False): _PREGEL_BASE,
+    ("4way", False): _PREGEL_BASE,
+    ("2x2pod", False): _PREGEL_BASE,
+}
+
+_IMRU_BASE = (
+    "loop-invariant-caching(training_data)",
+    "early-aggregation(map-local)",
+    "model-volume(replicate-params)",
+)
+
+IMRU_GOLDEN = {
+    "1way": _IMRU_BASE + ("aggregation-tree(flat)",),
+    "2way": _IMRU_BASE + ("aggregation-tree(flat)",),
+    "4way": _IMRU_BASE + ("aggregation-tree(flat)",),
+    # Multi-pod: the 16 MB gradient crosses DCN — ZeRO-1 reduce-scatter wins.
+    "2x2pod": _IMRU_BASE + ("aggregation-tree(scatter)",),
+}
+
+
+def test_pregel_plan_notes_golden():
+    for (mesh_name, semi_naive), want in PREGEL_GOLDEN.items():
+        plan = plan_pregel(PREGEL_STATS, MESHES[mesh_name],
+                           semi_naive=semi_naive)
+        assert plan.notes == want, (mesh_name, semi_naive, plan.notes)
+
+
+def test_imru_plan_notes_golden():
+    for mesh_name, want in IMRU_GOLDEN.items():
+        plan = plan_imru(IMRU_STATS, MESHES[mesh_name])
+        assert plan.notes == want, (mesh_name, plan.notes)
+
+
+def test_pregel_sharded_threshold_nonzero_at_scale():
+    """On a production-sized graph the frontier-sized bucket exchange DOES
+    beat the dense psum below a density threshold that shrinks as the dense
+    exchange amortizes over more shards — pin the ladder's solutions so the
+    cost model can't drift silently."""
+
+    stats = PregelStats(n_vertices=10_000_000, n_edges=500_000_000,
+                        vertex_bytes=8, msg_bytes=8)
+    thresholds = {
+        dp: plan_pregel(stats, MeshSpec((("data", dp),)),
+                        semi_naive=True).density_threshold
+        for dp in (2, 8, 16)
+    }
+    assert thresholds == {2: 0.0625, 8: 0.0078125, 16: 0.00390625}
+
+
+def test_pregel_sparse_cap_floor_scales_down_for_small_shards():
+    """The planner-derived per-shard compaction capacity: capped at 64 for
+    production slabs, but no more than a quarter of a small local slab so
+    the sparse path can engage on test-sized graphs."""
+
+    big = plan_pregel(PREGEL_STATS, MESHES["4way"], semi_naive=True)
+    assert big.sparse_cap_floor == 64
+    small = plan_pregel(
+        PregelStats(n_vertices=64, n_edges=288, vertex_bytes=4, msg_bytes=4),
+        MeshSpec((("data", 8),)), semi_naive=True,
+    )
+    assert small.sparse_cap_floor == 8
+    assert small.sparse_cap_for(3) == 8
+    assert small.sparse_cap_for(100) == 128

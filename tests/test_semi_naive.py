@@ -26,6 +26,7 @@ from repro.core.hardware import MeshSpec
 from repro.core.physical import (
     compact_active_edges,
     dense_psum_exchange,
+    fused_got_exchange,
     scatter_combine,
     segment_combine_sorted,
     sparse_hash_sort_exchange,
@@ -207,6 +208,97 @@ def test_compaction_preserves_active_set(e, n, cap_pow, density_pct, seed):
     want = np.nonzero(mask)[0][:cap]
     np.testing.assert_array_equal(np.asarray(idx[valid]), want)
     assert int(valid.sum()) == min(int(mask.sum()), cap)
+
+
+def _compact_reference(mask: np.ndarray, cap: int):
+    """Pure-NumPy oracle for :func:`compact_active_edges`: the first ``cap``
+    set positions in order, sentinel ``E`` in the empty slots."""
+
+    e = len(mask)
+    nz = np.nonzero(mask)[0][:cap].astype(np.int32)
+    idx = np.full(cap, e, np.int32)
+    idx[: len(nz)] = nz
+    valid = np.zeros(cap, bool)
+    valid[: len(nz)] = True
+    return idx, valid
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    e=st.integers(8, 300),
+    cap_pow=st.integers(0, 9),
+    density_pct=st.integers(0, 100),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_compaction_matches_numpy_reference_exactly(e, cap_pow, density_pct,
+                                                    seed):
+    """Full-array equality vs the NumPy oracle — including the sentinel ids
+    of empty slots and the cap-overflow prefix behavior."""
+
+    rng = np.random.default_rng(seed)
+    cap = 1 << cap_pow
+    mask = rng.random(e) < density_pct / 100.0
+    idx, valid = jax.jit(compact_active_edges, static_argnums=1)(
+        jnp.asarray(mask), cap
+    )
+    ref_idx, ref_valid = _compact_reference(mask, cap)
+    np.testing.assert_array_equal(np.asarray(idx), ref_idx)
+    np.testing.assert_array_equal(np.asarray(valid), ref_valid)
+
+
+def test_compaction_empty_frontier():
+    e, cap = 50, 16
+    idx, valid = compact_active_edges(jnp.zeros(e, jnp.bool_), cap)
+    assert not bool(valid.any())
+    np.testing.assert_array_equal(np.asarray(idx), np.full(cap, e))
+
+
+def test_compaction_saturated_frontier():
+    e = 48
+    # cap >= |frontier|: every edge present, in order, then sentinels.
+    idx, valid = compact_active_edges(jnp.ones(e, jnp.bool_), 64)
+    np.testing.assert_array_equal(np.asarray(idx[:e]), np.arange(e))
+    np.testing.assert_array_equal(np.asarray(idx[e:]), np.full(64 - e, e))
+    assert int(valid.sum()) == e
+
+
+def test_compaction_cap_overflow_keeps_prefix():
+    # More active edges than capacity: the first ``cap`` actives survive in
+    # order and every slot is occupied — overflow drops the tail, which is
+    # why the adaptive driver sizes the cap from the measured count (and
+    # falls back to the masked dense path when it cannot).
+    rng = np.random.default_rng(11)
+    e, cap = 200, 32
+    mask = rng.random(e) < 0.8
+    assert int(mask.sum()) > cap
+    idx, valid = compact_active_edges(jnp.asarray(mask), cap)
+    np.testing.assert_array_equal(
+        np.asarray(idx), np.nonzero(mask)[0][:cap])
+    assert bool(valid.all())
+
+
+@pytest.mark.parametrize("op", ["sum", "max", "min"])
+def test_fused_got_exchange_matches_two_pass(op):
+    """The fused got-flag column must reproduce the two-exchange semantics:
+    got is True exactly at destinations receiving >= 1 valid message, for
+    every combine op (min needs the ``== 1.0`` read — +inf identity would
+    pass a naive ``> 0`` test)."""
+
+    n = 6
+    dst = jnp.asarray(np.array([0, 0, 2, 3, 3, 5], np.int32))
+    valid = jnp.asarray(np.array([True, True, False, True, False, False]))
+    pay = jnp.asarray(np.array([2.0, 3.0, 7.0, -4.0, 9.0, 1.0], np.float32))
+    ex = lambda fused: dense_psum_exchange(dst, fused, n, (), op,
+                                           edge_mask=valid)
+    inbox, got = fused_got_exchange(ex, pay, valid, op)
+    np.testing.assert_array_equal(
+        np.asarray(got), [True, False, False, True, False, False])
+    _, ident = {"sum": (None, 0.0), "max": (None, -jnp.inf),
+                "min": (None, jnp.inf)}[op]
+    oracle = scatter_combine(jnp.where(valid, pay, ident), dst, n, op)
+    np.testing.assert_allclose(np.asarray(inbox)[np.asarray(got)],
+                               np.asarray(oracle)[np.asarray(got)],
+                               rtol=1e-6)
 
 
 @pytest.mark.parametrize("op", ["sum", "max", "min"])
@@ -418,6 +510,38 @@ def test_adaptive_driver_switches_modes_on_collapsing_frontier():
                                                   on_device=False)
     np.testing.assert_allclose(
         np.asarray(res.state[0]), np.asarray(r_dense.state[0])
+    )
+
+
+def test_empty_frontier_halts_instead_of_noop_superstep():
+    """Regression: a frontier with zero active edges used to run one
+    ``sparse_cap_floor``-sized compact/exchange no-op superstep before
+    converging.  The selector must now swap in the algebraically-simplified
+    halt superstep (clear the active flags, O(N)) — same state, same active
+    set, same convergence and iteration count as the dense run."""
+
+    N = 128
+    src = np.arange(N - 1, dtype=np.int32)   # path: vertex N-1 has no
+    dst = np.arange(1, N, dtype=np.int32)    # out-edges
+    g = Graph(N, jnp.asarray(src), jnp.asarray(dst),
+              jnp.zeros(N, jnp.float32))
+    ex = compile_pregel(_sssp_prog(), g, semi_naive=True)
+    res = ex.run(max_iters=N + 5)
+    assert res.converged
+    assert res.modes[-1] == "halt(empty-frontier)"
+    assert not any(m.startswith("halt") for m in res.modes[:-1])
+    assert res.iterations == len(res.modes)
+    # The halt superstep leaves exactly what the dense superstep would:
+    # unchanged state and an all-False active set — no stale frontier flags.
+    assert not bool(np.asarray(res.state[1]).any())
+    r_dense = compile_pregel(_sssp_prog(), g).run(max_iters=N + 5,
+                                                  on_device=False)
+    assert res.iterations == r_dense.iterations
+    np.testing.assert_allclose(
+        np.asarray(res.state[0]), np.asarray(r_dense.state[0])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.state[1]), np.asarray(r_dense.state[1])
     )
 
 

@@ -1,36 +1,14 @@
 """Multi-device SPMD tests (subprocess: needs 8 fake devices while the main
 pytest process must keep seeing 1 — per the dry-run contract)."""
 
-import json
-import os
-import subprocess
-import sys
-
 import pytest
+
+from _spmd_subprocess import run_spmd_program
 
 
 @pytest.fixture(scope="module")
 def spmd_results():
-    prog = os.path.join(os.path.dirname(__file__), "spmd_program.py")
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(
-        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"
-    )
-    # XLA CPU aborts a collective if a participant thread is starved for
-    # 40 s (8 virtual devices share one physical core here) — retry once
-    # to ride out transient machine load.
-    for attempt in (1, 2):
-        proc = subprocess.run(
-            [sys.executable, prog], capture_output=True, text=True, env=env,
-            timeout=1800,
-        )
-        if proc.returncode == 0:
-            break
-        if attempt == 2 or "rendezvous" not in proc.stderr.lower():
-            assert proc.returncode == 0, proc.stderr[-4000:]
-    line = [l for l in proc.stdout.splitlines()
-            if l.startswith("RESULTS_JSON:")][-1]
-    return json.loads(line[len("RESULTS_JSON:"):])
+    return run_spmd_program("spmd_program.py")
 
 
 def test_all_reduce_schedules_reach_same_fixpoint(spmd_results):
