@@ -12,6 +12,11 @@ is >= 3x superstep speedup at <= 5% density.
 needed): per-shard compaction, frontier-sized bucket exchanges, and the
 collective mode agreement — acceptance bar >= 2x superstep speedup at <= 5%
 density over the sharded dense path.
+
+A third workload, weighted SSSP (``sssp_w``: ``Graph.edge_data`` weights
+read by the message UDF), sweeps the same densities on the weighted
+edge-slab path; its rows are informational — the acceptance bars stay on
+the unweighted graph.
 """
 
 from __future__ import annotations
@@ -65,6 +70,23 @@ def _sssp(N: int) -> VertexProgram:
             jnp.minimum(s, inbox), jnp.minimum(s, inbox) < s),
         combine="min",
     )
+
+
+def _weighted_sssp(N: int) -> VertexProgram:
+    inf = jnp.float32(1e9)
+    return VertexProgram(
+        init_vertex=lambda ids, vd: jnp.where(ids == 0, 0.0, inf),
+        message=lambda j, s, ed: s + ed,
+        apply=lambda j, s, inbox, got: (
+            jnp.minimum(s, inbox), jnp.minimum(s, inbox) < s),
+        combine="min",
+    )
+
+
+def _weighted(g: Graph) -> Graph:
+    w = (((np.arange(g.n_edges) % 7) + 1) * 0.25).astype(np.float32)
+    return Graph(g.n_vertices, g.src, g.dst, g.vertex_data,
+                 edge_data=jnp.asarray(w))
 
 
 def sweep(name, ex, state, emit):
@@ -122,16 +144,25 @@ def main(emit=print, sharded: bool = False) -> bool:
         target = 2.0
 
     ok = True
-    for name, prog in (("pagerank", _pagerank(N, outdeg)), ("sssp", _sssp(N))):
-        ex = compile_pregel(prog, g, mesh=mesh, semi_naive=True)
+    workloads = (
+        # (name, program, graph, gates the acceptance bar)
+        ("pagerank", _pagerank(N, outdeg), g, True),
+        ("sssp", _sssp(N), g, True),
+        # Weighted edge-slab path: informational rows, no bar — the
+        # --check gate stays on the unweighted graph.
+        ("sssp_w", _weighted_sssp(N), _weighted(g), False),
+    )
+    for name, prog, graph, gate in workloads:
+        ex = compile_pregel(prog, graph, mesh=mesh, semi_naive=True)
         state = ex.init()
         speedups = sweep(name + tag, ex, state, emit)
         at_5pct = speedups[0.05]
-        ok = ok and at_5pct >= target
+        ok = ok and (at_5pct >= target or not gate)
         emit(row(
             f"fig10/{name}{tag}_speedup_at_5pct", 0.0,
-            f"measured: {at_5pct:.2f}x (target >= {target:g}x) "
-            f"threshold={ex.plan.density_threshold:g}",
+            f"measured: {at_5pct:.2f}x "
+            + (f"(target >= {target:g}x) " if gate else "(informational) ")
+            + f"threshold={ex.plan.density_threshold:g}",
         ))
     return ok
 
@@ -142,10 +173,9 @@ if __name__ == "__main__":
     flags = os.environ.get("XLA_FLAGS", "")
     if want_sharded and "xla_force_host_platform_device_count" not in flags:
         # The device-count flag must be set before jax initializes: re-exec.
-        env = dict(os.environ)
-        env["XLA_FLAGS"] = (
-            flags + " --xla_force_host_platform_device_count=8"
-        ).strip()
+        from repro.launch.mesh import virtual_device_env
+
+        env = virtual_device_env(8)
         env["PYTHONPATH"] = os.pathsep.join(
             p for p in (_ROOT, env.get("PYTHONPATH", "")) if p
         )

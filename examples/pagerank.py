@@ -2,6 +2,13 @@
 planner choosing the message-exchange connector (Fig. 4 / Fig. 9).
 
     PYTHONPATH=src python examples/pagerank.py [--connector dense_psum]
+                                               [--semi-naive]
+
+``--semi-naive`` compiles the delta-frontier plan and runs the adaptive
+dense<->sparse driver (PR 1); the per-superstep mode choices recorded in
+``FixpointResult.modes`` are printed after the run.  PageRank keeps every
+vertex active, so the expected readout is all-dense — the point is seeing
+the adaptive policy's decisions, not a speedup on this workload.
 """
 
 import argparse
@@ -30,6 +37,9 @@ def main() -> None:
     ap.add_argument("--iters", type=int, default=20)
     ap.add_argument("--connector", default=None,
                     choices=(None, "dense_psum", "merging", "hash_sort"))
+    ap.add_argument("--semi-naive", action="store_true", dest="semi_naive",
+                    help="delta-frontier plan + adaptive dense<->sparse "
+                         "driver; prints the per-superstep modes")
     args = ap.parse_args()
 
     N = args.vertices
@@ -47,7 +57,8 @@ def main() -> None:
         combine="sum",
     )
     g = Graph(N, jnp.asarray(src), jnp.asarray(dst), jnp.asarray(outdeg))
-    ex = compile_pregel(prog, g, force_connector=args.connector)
+    ex = compile_pregel(prog, g, force_connector=args.connector,
+                        semi_naive=args.semi_naive)
     print("\n== physical plan ==")
     print(ex.plan.explain())
 
@@ -58,6 +69,10 @@ def main() -> None:
     top = np.argsort(-ranks)[:10]
     print(f"\n{res.iterations} supersteps in {dt:.2f}s "
           f"({len(src) * res.iterations / dt:.2e} edge-updates/s)")
+    if args.semi_naive:
+        counts = {m: res.modes.count(m) for m in dict.fromkeys(res.modes)}
+        print("adaptive modes:", list(res.modes))
+        print("mode counts:", counts)
     print("top-10:", list(zip(top.tolist(), np.round(ranks[top], 6))))
 
 

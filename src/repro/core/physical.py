@@ -288,8 +288,9 @@ def segment_combine_sorted(
     """
 
     if use_kernel is None:
-        # Shared auto-dispatch predicate (f32-only: the kernel accumulates
-        # in f32, which would silently narrow f64/int payloads).
+        # Shared auto-dispatch predicate (f32 and bf16 payloads: the kernel
+        # accumulates in f32 and casts back, which would silently narrow
+        # f64/int payloads — those stay on the XLA path).
         use_kernel = _kernel_eligible(values, interpret)
     if use_kernel:
         flat = values.reshape(values.shape[0], -1).astype(jnp.float32)
@@ -395,6 +396,14 @@ def compact_active_edges(
     """
 
     E = edge_mask.shape[0]
+    if E == 0:
+        # Zero-edge slab: nothing to compact.  Every slot is empty and
+        # carries the sentinel index E (== 0); ``csum[-1]`` below would
+        # read out of bounds on an empty prefix sum.
+        return (
+            jnp.zeros((cap,), jnp.int32),
+            jnp.zeros((cap,), jnp.bool_),
+        )
     csum = jnp.cumsum(edge_mask.astype(jnp.int32))
     # Slot s holds the edge where the running count first reaches s+1: a
     # vectorized binary search over the monotone prefix sums — O(cap log E),

@@ -87,12 +87,19 @@ class PregelStats:
     vertex is still active (|Δ frontier| / E).  Semi-naive plans cost their
     superstep estimate at this density (see :func:`plan_pregel`); the
     adaptive driver re-measures the true density every superstep and
-    re-evaluates the dense↔sparse choice online."""
+    re-evaluates the dense↔sparse choice online.
+
+    ``edge_attr_bytes`` is the per-edge attribute payload (weighted graphs:
+    the bytes of ``Graph.edge_data`` gathered for every evaluated edge — 0
+    for unweighted topologies).  It widens the edge-pipeline memory terms on
+    both the dense and the frontier-compacted paths, so the dense↔sparse
+    ``density_threshold`` accounts for weighted payloads."""
 
     n_vertices: int
     n_edges: int
     vertex_bytes: int
     msg_bytes: int
+    edge_attr_bytes: int = 0
     flops_per_edge: float = 2.0
     frontier_density: float = 1.0
 
@@ -385,6 +392,11 @@ def pregel_superstep_costs(
       frontier (cumsum + scatter, memory-bound, touches only ids + mask),
       then gather/UDF/combine/exchange all scale with density·E.
 
+    Weighted graphs (``stats.edge_attr_bytes > 0``) add the per-edge
+    attribute gather to both edge pipelines: the dense path streams E
+    attribute rows, the sparse path only density·E of them — widening the
+    payload moves the crossover in favor of compaction.
+
     This model is only ever used for *relative* dense-vs-sparse decisions
     (the threshold ladder and the expected-density ratio in
     :func:`plan_pregel`); absolute superstep estimates come from
@@ -400,7 +412,8 @@ def pregel_superstep_costs(
     def edge_pipeline(n_e: float) -> float:
         compute = n_e * stats.flops_per_edge / (chips * hw.peak_flops_bf16)
         memory = (
-            n_e * (8 + 2 * stats.msg_bytes) + n * stats.vertex_bytes
+            n_e * (8 + 2 * stats.msg_bytes + stats.edge_attr_bytes)
+            + n * stats.vertex_bytes
         ) / (chips * hw.hbm_bw)
         return max(compute, memory)
 
@@ -492,9 +505,17 @@ def plan_pregel(
         connector = min(options, key=options.get)
     notes.append(f"connector({connector})")
 
+    # Rule: weighted-payload cost terms — per-edge attributes (edge weights,
+    # labels, feature rows) are gathered for every evaluated edge, widening
+    # the edge-pipeline memory traffic on both the dense and the compacted
+    # sparse paths (see :func:`pregel_superstep_costs`).
+    if stats.edge_attr_bytes:
+        notes.append(f"edge-payload({stats.edge_attr_bytes}B/edge)")
+
     compute = stats.n_edges * stats.flops_per_edge / (chips * hw.peak_flops_bf16)
     memory = (
-        stats.n_edges * 8 + stats.n_vertices * stats.vertex_bytes
+        stats.n_edges * (8 + stats.edge_attr_bytes)
+        + stats.n_vertices * stats.vertex_bytes
     ) / (chips * hw.hbm_bw)
     comm = {
         "dense_psum": dense_cost.seconds,

@@ -16,7 +16,13 @@ The graph is dense-id CSR-ish: ``src``/``dst`` int arrays over edges,
 vertices ``[0, N)`` partitioned contiguously over the data axes, edges
 partitioned by source vertex so messages are computed from purely local
 state (loop-invariant caching: topology never moves — §5.2's
-order-of-magnitude argument vs Hadoop).
+order-of-magnitude argument vs Hadoop).  Optional per-edge attributes
+(``Graph.edge_data``, any pytree with leading dim E — weights, labels,
+feature rows) ride along on every layout: on sharded meshes each leaf is
+partitioned into the same padded per-shard edge slabs as ``src``/``dst``
+(edge-slab partitioning), so both the dense ``shard_map`` superstep and the
+frontier-compacted sparse superstep hand the message UDF shard-local edge
+attributes, gathered by the same (compacted) indices as the endpoints.
 
 The per-superstep dataflow materializes Figure 4:
 
@@ -95,6 +101,19 @@ def _compact_and_gather(prog: "VertexProgram", j, state, active, src, dst,
     Empty slots carry a clamped in-range index (their payload is computed
     from real state but excluded everywhere via ``valid``)."""
 
+    if src.shape[0] == 0:
+        # Zero-edge slab (an edgeless graph, or a mesh with more shards than
+        # edges): the clamp below would wrap ``src.shape[0] - 1`` to -1 and
+        # silently gather the *last* edge.  Synthesize one inert padding
+        # edge instead so every downstream gather has a real row; it is
+        # masked off via ``pad``, so the slab compacts to all-invalid slots
+        # and the exchange drops everything it produces.
+        src = jnp.zeros((1,), jnp.int32)
+        dst = jnp.zeros((1,), jnp.int32)
+        pad = jnp.ones((1,), jnp.bool_)
+        edge_data = jax.tree_util.tree_map(
+            lambda e: jnp.zeros((1,) + e.shape[1:], e.dtype), edge_data
+        )
     mask = jnp.take(active, src, axis=0)
     if pad is not None:
         mask = jnp.logical_and(mask, jnp.logical_not(pad))
@@ -432,7 +451,27 @@ def compile_pregel(
     physical plan gains a frontier-density threshold from the cost model, and
     the executable carries frontier-compacted sparse supersteps that the
     adaptive driver swaps in when the measured density drops below it.
+
+    ``graph.edge_data`` (weighted graphs) runs on every layout: sharded
+    meshes partition each leaf into the per-shard edge slabs, and the
+    planner's cost terms account for the per-edge attribute bytes
+    (``PregelStats.edge_attr_bytes``, recorded in ``plan.notes``).
     """
+
+    # Per-edge attribute payload width (weighted graphs): bytes of edge_data
+    # gathered per edge, fed to the planner's weighted cost terms.
+    edge_attr_bytes = 0
+    if graph.edge_data is not None:
+        for leaf in jax.tree_util.tree_leaves(graph.edge_data):
+            shape = getattr(leaf, "shape", None)
+            if shape is None or len(shape) < 1 or shape[0] != graph.n_edges:
+                raise ValueError(
+                    "every edge_data leaf needs leading dim n_edges "
+                    f"({graph.n_edges}); got shape {shape}"
+                )
+            edge_attr_bytes += np.dtype(leaf.dtype).itemsize * int(
+                np.prod(shape[1:], dtype=np.int64)
+            )
 
     # (1)-(3): Datalog -> XY schedule -> Figure-3 logical plan.
     program = prog.program()
@@ -456,6 +495,7 @@ def compile_pregel(
         n_edges=graph.n_edges,
         vertex_bytes=payload_bytes,
         msg_bytes=payload_bytes,
+        edge_attr_bytes=edge_attr_bytes,
     )
     plan = plan_pregel(
         stats, mesh_spec, hw, force_connector=force_connector,
@@ -538,18 +578,32 @@ def compile_pregel(
         vdata = jax.device_put(
             graph.vertex_data, NamedSharding(mesh, spec1)
         )
-        if graph.edge_data is not None:
-            # The sharded layouts (dense and sparse) do not partition
-            # edge_data into the per-shard slabs yet; the message UDF would
-            # silently trace with edge_data=None while the same program runs
-            # correctly single-shard — fail loudly instead.
-            raise NotImplementedError(
-                "edge_data is not supported on sharded meshes yet; "
-                "fold per-edge attributes into vertex_data or run "
-                "single-shard"
+
+        # Edge-slab partitioning of per-edge attributes: every edge_data
+        # leaf rides the same owner permutation + padding as src/dst, so
+        # slab row i always carries the attributes of the edge in slab row
+        # i.  Padding rows are zero-filled — they are masked off (pad_mask)
+        # before any payload they produce can travel.
+        def _edge_slab(leaf):
+            leaf_np = np.asarray(leaf)
+            slab = np.zeros(
+                (n_shards, slab_cap) + leaf_np.shape[1:], leaf_np.dtype
+            )
+            leaf_sorted = leaf_np[order]
+            for s in range(n_shards):
+                lo, hi = offs[s], offs[s + 1]
+                slab[s, : hi - lo] = leaf_sorted[lo:hi]
+            return jnp.asarray(
+                slab.reshape((n_shards * slab_cap,) + leaf_np.shape[1:])
             )
 
-        def sharded(state, active, src_l, dst_l, pad_l, vdata_l, j):
+        edata = None
+        if graph.edge_data is not None:
+            edata = jax.tree_util.tree_map(_edge_slab, graph.edge_data)
+            edata = jax.device_put(edata, NamedSharding(mesh, spec1))
+        espec = jax.tree_util.tree_map(lambda _: spec1, edata)
+
+        def sharded(state, active, src_l, dst_l, pad_l, edata_l, vdata_l, j):
             # Mask padded edges: treat their source as inactive.
             act = jnp.logical_and(
                 jnp.take(active, src_l, axis=0), jnp.logical_not(pad_l)
@@ -560,7 +614,7 @@ def compile_pregel(
             src_state = jax.tree_util.tree_map(
                 lambda s: jnp.take(s, src_l, axis=0), state
             )
-            payload = prog.message(j, src_state, None)
+            payload = prog.message(j, src_state, edata_l)
             _, ident = COMBINE_OPS[op]
             fill = 0.0 if op == "sum" else ident
             payload = jnp.where(act, payload, jnp.full_like(payload, fill))
@@ -579,7 +633,7 @@ def compile_pregel(
         state_specs = P(batch_axes)
         fn = shard_map(
             sharded, mesh=mesh,
-            in_specs=(state_specs, state_specs, spec1, spec1, spec1,
+            in_specs=(state_specs, state_specs, spec1, spec1, spec1, espec,
                       jax.tree_util.tree_map(lambda _: spec1, vdata), P()),
             out_specs=(state_specs, state_specs),
             check_rep=False,
@@ -587,7 +641,8 @@ def compile_pregel(
 
         def superstep(carry, j):
             state, active = carry
-            return fn(state, active, src_arr, dst_arr, pad_arr, vdata, j)
+            return fn(state, active, src_arr, dst_arr, pad_arr, edata,
+                      vdata, j)
 
         # -- sharded semi-naive (delta-frontier) machinery ------------------
 
@@ -618,10 +673,10 @@ def compile_pregel(
             cross-shard exchange payloads — scales with the frontier
             instead of the slab."""
 
-            def step_shard(state, active, src_l, dst_l, pad_l, j):
+            def step_shard(state, active, src_l, dst_l, pad_l, edata_l, j):
                 dst_c, payload, valid = _compact_and_gather(
                     prog, j, state, active, src_l, dst_l, compact_cap,
-                    pad=pad_l,
+                    pad=pad_l, edge_data=edata_l,
                 )
                 if sparse_ex is None:
                     # No sparse connector variant: the frontier-masked dense
@@ -640,14 +695,16 @@ def compile_pregel(
 
             wrapped = shard_map(
                 step_shard, mesh=mesh,
-                in_specs=(state_specs, state_specs, spec1, spec1, spec1, P()),
+                in_specs=(state_specs, state_specs, spec1, spec1, spec1,
+                          espec, P()),
                 out_specs=(state_specs, state_specs),
                 check_rep=False,
             )
 
             def step(carry, j):
                 state, active = carry
-                return wrapped(state, active, src_arr, dst_arr, pad_arr, j)
+                return wrapped(state, active, src_arr, dst_arr, pad_arr,
+                               edata, j)
 
             return jax.jit(step)
     else:

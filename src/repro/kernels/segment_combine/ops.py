@@ -21,13 +21,16 @@ __all__ = ["segment_combine", "kernel_eligible"]
 def kernel_eligible(values: jax.Array, interpret: Optional[bool]) -> bool:
     """Auto-dispatch predicate shared by every segment-combine entry point
     (this wrapper and ``physical.segment_combine_sorted``): the Pallas
-    kernel runs on TPU (or in interpret mode) and only for f32 payloads —
-    it accumulates in f32, which would silently narrow f64/int payloads.
-    Non-f32 callers can still opt in explicitly with ``use_kernel=True``."""
+    kernel runs on TPU (or in interpret mode) for f32 payloads, and for
+    bf16 payloads too — the kernel always accumulates in f32 and casts the
+    result back to the payload dtype, so bf16 loses no more precision than
+    the XLA fallback.  Wider/integer dtypes (f64, ints) would be silently
+    narrowed by the f32 accumulator and stay on the XLA path; such callers
+    can still opt in explicitly with ``use_kernel=True``."""
 
     return (
         jax.default_backend() == "tpu" or bool(interpret)
-    ) and values.dtype == jnp.float32
+    ) and values.dtype in (jnp.float32, jnp.bfloat16)
 
 
 def segment_combine(

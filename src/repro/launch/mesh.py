@@ -11,10 +11,13 @@ hop is the paper's 1-level aggregation tree over DCN.
 
 from __future__ import annotations
 
+import os
+
 import jax
 
 __all__ = ["make_compat_mesh", "make_data_mesh", "make_production_mesh",
-           "mesh_spec_of", "SINGLE_POD_AXES", "MULTI_POD_AXES"]
+           "mesh_spec_of", "virtual_device_env",
+           "SINGLE_POD_AXES", "MULTI_POD_AXES"]
 
 SINGLE_POD_AXES = (("data", 16), ("model", 16))
 MULTI_POD_AXES = (("pod", 2), ("data", 16), ("model", 16))
@@ -42,6 +45,24 @@ def make_data_mesh(n_data: int = 0):
     if n_data <= 0:
         n_data = len(jax.devices())
     return make_compat_mesh((n_data,), ("data",))
+
+
+def virtual_device_env(n: int = 8, base_env=None) -> dict:
+    """Environment for a subprocess that must see ``n`` virtual CPU devices.
+
+    XLA reads ``--xla_force_host_platform_device_count`` at first jax
+    import, so the flag only helps a *fresh* process — the sharded test
+    programs and the fig10 ``--sharded`` self re-exec both launch
+    subprocesses with this environment.  An already-present device-count
+    flag is respected (the caller is running under one)."""
+
+    env = dict(os.environ if base_env is None else base_env)
+    flags = env.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        env["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}"
+        ).strip()
+    return env
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -106,6 +106,41 @@ def test_segment_combine_matches_reference(E, F, N, op):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-6)
 
 
+def test_kernel_eligible_accepts_bf16_rejects_wider():
+    # bf16 payloads must ride the Pallas kernel (f32 accumulation, cast
+    # back on output) instead of silently skipping to the XLA fallback;
+    # f64/int payloads would be narrowed by the f32 accumulator and stay
+    # ineligible.
+    from repro.kernels.segment_combine.ops import kernel_eligible
+
+    bf16 = jnp.zeros((8, 2), jnp.bfloat16)
+    f32 = jnp.zeros((8, 2), jnp.float32)
+    i32 = jnp.zeros((8, 2), jnp.int32)
+    assert kernel_eligible(bf16, True)
+    assert kernel_eligible(f32, True)
+    assert not kernel_eligible(i32, True)
+    if jax.default_backend() != "tpu":
+        # off-TPU without interpret mode there is no kernel to run at all
+        assert not kernel_eligible(bf16, None)
+
+
+@pytest.mark.parametrize("op", ["sum", "max", "min"])
+def test_segment_combine_bf16_payload_matches_f32_reference(op):
+    # The kernel accumulates bf16 payloads in f32 and casts back, so the
+    # result must agree with the f32 reference to bf16 resolution.
+    E, F, N = 600, 4, 40
+    rng = np.random.default_rng(9)
+    ids = jnp.asarray(np.sort(rng.integers(0, N, E)).astype(np.int32))
+    vals32 = rng.normal(size=(E, F)).astype(np.float32)
+    out = segment_combine(jnp.asarray(vals32, jnp.bfloat16), ids, N, op,
+                          interpret=True)
+    assert out.dtype == jnp.bfloat16
+    ref = segment_combine_reference(
+        jnp.asarray(vals32, jnp.bfloat16).astype(jnp.float32), ids, N, op)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               rtol=5e-2, atol=5e-2)
+
+
 @settings(max_examples=25, deadline=None)
 @given(
     n_seg=st.integers(2, 40),

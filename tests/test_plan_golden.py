@@ -4,8 +4,11 @@ The applied-rule notes are the planner's public record of which rewrites
 fired (tests, EXPERIMENTS.md and the benchmarks all key off them), so a
 planner change that silently adds, drops, or reorders a rewrite decision on
 any mesh shape must show up as a diff here.  Snapshots cover 1/2/4-way data
-meshes plus a 2x2 pod mesh for both ``plan_pregel`` and ``plan_imru``.
+meshes plus a 2x2 pod mesh for both ``plan_pregel`` and ``plan_imru``,
+unweighted and weighted (``edge_attr_bytes > 0``) graph statistics.
 """
+
+import dataclasses
 
 from repro.core.hardware import MeshSpec
 from repro.core.planner import IMRUStats, PregelStats, plan_imru, plan_pregel
@@ -76,9 +79,36 @@ IMRU_GOLDEN = {
 }
 
 
+WEIGHTED_STATS = dataclasses.replace(PREGEL_STATS, edge_attr_bytes=4)
+
+# Weighted graphs: the edge-payload note lands right after the connector
+# choice, before the semi-naive policy notes.
+PREGEL_WEIGHTED_GOLDEN = {
+    ("1way", True): _PREGEL_BASE + (
+        "edge-payload(4B/edge)",
+        "semi-naive(adaptive dense<->sparse @ density 0.5)",
+    ),
+    ("4way", True): _PREGEL_BASE + (
+        "edge-payload(4B/edge)",
+        "sharded-delta(per-shard compaction, bucket-a2a x4, "
+        "collective mode-agreement)",
+        "semi-naive(adaptive dense<->sparse @ density 0)",
+    ),
+    ("1way", False): _PREGEL_BASE + ("edge-payload(4B/edge)",),
+    ("4way", False): _PREGEL_BASE + ("edge-payload(4B/edge)",),
+}
+
+
 def test_pregel_plan_notes_golden():
     for (mesh_name, semi_naive), want in PREGEL_GOLDEN.items():
         plan = plan_pregel(PREGEL_STATS, MESHES[mesh_name],
+                           semi_naive=semi_naive)
+        assert plan.notes == want, (mesh_name, semi_naive, plan.notes)
+
+
+def test_pregel_weighted_plan_notes_golden():
+    for (mesh_name, semi_naive), want in PREGEL_WEIGHTED_GOLDEN.items():
+        plan = plan_pregel(WEIGHTED_STATS, MESHES[mesh_name],
                            semi_naive=semi_naive)
         assert plan.notes == want, (mesh_name, semi_naive, plan.notes)
 
@@ -103,6 +133,22 @@ def test_pregel_sharded_threshold_nonzero_at_scale():
         for dp in (2, 8, 16)
     }
     assert thresholds == {2: 0.0625, 8: 0.0078125, 16: 0.00390625}
+
+
+def test_pregel_weighted_payload_shifts_threshold_ladder():
+    """Per-edge attribute bytes widen the edge pipeline the dense path pays
+    at full E, so compaction wins earlier: the weighted ladder crosses at a
+    density >= the unweighted one, strictly higher where the power-of-two
+    ladder resolves the difference (dp=8 for the reference stats)."""
+
+    stats = PregelStats(n_vertices=10_000_000, n_edges=500_000_000,
+                        vertex_bytes=8, msg_bytes=8, edge_attr_bytes=8)
+    thresholds = {
+        dp: plan_pregel(stats, MeshSpec((("data", dp),)),
+                        semi_naive=True).density_threshold
+        for dp in (2, 8, 16)
+    }
+    assert thresholds == {2: 0.0625, 8: 0.015625, 16: 0.00390625}
 
 
 def test_pregel_sparse_cap_floor_scales_down_for_small_shards():

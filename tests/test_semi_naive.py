@@ -253,6 +253,50 @@ def test_compaction_empty_frontier():
     np.testing.assert_array_equal(np.asarray(idx), np.full(cap, e))
 
 
+def test_compaction_zero_edge_slab():
+    # E == 0 (an edgeless graph / a shard with an empty slab): no out-of-
+    # bounds prefix-sum read, all slots empty with the sentinel index E == 0.
+    idx, valid = compact_active_edges(jnp.zeros((0,), jnp.bool_), 8)
+    assert idx.shape == (8,) and valid.shape == (8,)
+    assert not bool(valid.any())
+    np.testing.assert_array_equal(np.asarray(idx), np.zeros(8))
+
+
+def test_sparse_superstep_zero_edge_slab_does_not_wrap():
+    # Regression: the compacted-gather clamp ``min(idx, E - 1)`` wraps to -1
+    # on a zero-edge slab and would silently gather the *last* edge.  The
+    # guard must leave the state untouched and clear every active flag.
+    N = 8
+    g = Graph(N, jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32),
+              jnp.zeros(N, jnp.float32))
+    ex = compile_pregel(_sssp_prog(), g, semi_naive=True)
+    state, active = ex.init()
+    s2, a2 = ex.sparse_superstep(4)((state, active), jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(state))
+    assert not bool(np.asarray(a2).any())
+
+
+def test_sparse_superstep_zero_edge_slab_weighted():
+    # Same guard with edge_data present: the synthesized padding edge must
+    # also synthesize inert edge-attribute rows for the message UDF.
+    N = 8
+    g = Graph(N, jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32),
+              jnp.zeros(N, jnp.float32),
+              edge_data=jnp.zeros((0,), jnp.float32))
+    prog = VertexProgram(
+        init_vertex=lambda ids, vd: jnp.where(ids == 0, 0.0, jnp.float32(1e9)),
+        message=lambda j, s, ed: s + ed,
+        apply=lambda j, s, inbox, got: (
+            jnp.minimum(s, inbox), jnp.minimum(s, inbox) < s),
+        combine="min",
+    )
+    ex = compile_pregel(prog, g, semi_naive=True)
+    state, active = ex.init()
+    s2, a2 = ex.sparse_superstep(4)((state, active), jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(state))
+    assert not bool(np.asarray(a2).any())
+
+
 def test_compaction_saturated_frontier():
     e = 48
     # cap >= |frontier|: every edge present, in order, then sentinels.
@@ -275,6 +319,43 @@ def test_compaction_cap_overflow_keeps_prefix():
     np.testing.assert_array_equal(
         np.asarray(idx), np.nonzero(mask)[0][:cap])
     assert bool(valid.all())
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    e=st.integers(1, 300),
+    cap_pow=st.integers(0, 9),
+    density_pct=st.integers(0, 100),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_edge_attr_gather_matches_numpy_reference(e, cap_pow, density_pct,
+                                                  seed):
+    """Edge-attribute gather under ``compact_active_edges`` — the weighted
+    sparse path's slab gather — vs a NumPy oracle, over random masks x
+    random weight pytrees x overflow caps.  The valid slots must carry the
+    attributes of the first ``cap`` active edges in order; empty slots are
+    excluded (their clamped gather reads a real row, but ``valid`` drops
+    them everywhere downstream)."""
+
+    rng = np.random.default_rng(seed)
+    cap = 1 << cap_pow
+    mask = rng.random(e) < density_pct / 100.0
+    edge_data = {
+        "w": rng.normal(size=e).astype(np.float32),
+        "vec": rng.normal(size=(e, 3)).astype(np.float32),
+    }
+    idx, valid = compact_active_edges(jnp.asarray(mask), cap)
+    # The same clamp + gather _compact_and_gather applies to edge_data.
+    idx_c = jnp.minimum(idx, e - 1)
+    gathered = jax.tree_util.tree_map(
+        lambda leaf: jnp.take(jnp.asarray(leaf), idx_c, axis=0), edge_data
+    )
+    want_rows = np.nonzero(mask)[0][:cap]
+    n_valid = int(np.asarray(valid).sum())
+    assert n_valid == len(want_rows)
+    for key, leaf in edge_data.items():
+        got = np.asarray(gathered[key])[np.asarray(valid)]
+        np.testing.assert_array_equal(got, leaf[want_rows])
 
 
 @pytest.mark.parametrize("op", ["sum", "max", "min"])
@@ -486,6 +567,34 @@ def test_sssp_delta_matches_dense(connector):
     assert r_dense.converged and r_delta.converged
     assert r_delta.iterations == r_dense.iterations
     np.testing.assert_allclose(
+        np.asarray(r_delta.state[0]), np.asarray(r_dense.state[0])
+    )
+
+
+@pytest.mark.parametrize("connector", CONNECTORS)
+def test_weighted_sssp_delta_matches_dense(connector):
+    # The single-shard sparse path gathers edge_data by compacted index;
+    # weighted relaxation must agree with the dense run bit-for-bit (min
+    # combine is order-insensitive).
+    N = 96
+    src, dst = _random_graph(N, seed=7)
+    w = (((np.arange(len(src)) % 7) + 1) * 0.25).astype(np.float32)
+    g = Graph(N, jnp.asarray(src), jnp.asarray(dst),
+              jnp.zeros(N, jnp.float32), edge_data=jnp.asarray(w))
+    prog = VertexProgram(
+        init_vertex=lambda ids, vd: jnp.where(ids == 0, 0.0, jnp.float32(1e9)),
+        message=lambda j, s, ed: s + ed,
+        apply=lambda j, s, inbox, got: (
+            jnp.minimum(s, inbox), jnp.minimum(s, inbox) < s),
+        combine="min",
+    )
+    dense = compile_pregel(prog, g, force_connector=connector)
+    delta = compile_pregel(prog, g, force_connector=connector,
+                           semi_naive=True)
+    r_dense = dense.run(max_iters=200, on_device=False)
+    r_delta = delta.run(max_iters=200)
+    assert r_dense.converged and r_delta.converged
+    np.testing.assert_array_equal(
         np.asarray(r_delta.state[0]), np.asarray(r_dense.state[0])
     )
 

@@ -6,6 +6,12 @@ The subprocess (spmd_semi_naive_program.py) runs sharded delta-frontier
 fixpoints for PageRank / SSSP / connected components across all three
 connectors and sum/max/min combines, and compares them against single-shard
 dense oracles; these tests assert on its JSON report.
+
+Weighted graphs are first-class: ``Graph.edge_data`` is partitioned into
+the per-shard edge slabs, so weighted SSSP and edge-weighted PageRank run
+end-to-end on both sharded paths (dense shard_map superstep and the
+frontier-compacted sparse superstep) and must match the single-shard dense
+reference to <= 1e-8 on every connector.
 """
 
 import pytest
@@ -43,10 +49,42 @@ def test_sharded_sparse_superstep_matches_dense_all_ops(sharded_results):
         assert err < 1e-5, (key, err)
 
 
-def test_sharded_edge_data_rejected_loudly(sharded_results):
-    # The sharded layouts do not partition edge_data yet; compiling must
-    # raise instead of silently tracing the message UDF with None.
-    assert sharded_results["edge_data_rejected"]
+def test_weighted_fixpoints_match_single_shard_dense(sharded_results):
+    # Weighted SSSP + edge-weighted PageRank, sharded dense AND sharded
+    # sparse, all three connectors, vs the single-shard dense oracle.
+    errs = sharded_results["weighted_errs"]
+    for name in ("sssp_w", "pagerank_w"):
+        for conn in ("dense_psum", "merging", "hash_sort"):
+            for path in ("dense", "sparse"):
+                key = f"{name}/{conn}/{path}"
+                assert key in errs
+                assert errs[key] <= 1e-8, (key, errs[key])
+
+
+def test_weighted_collapsing_frontier_goes_sparse(sharded_results):
+    # The sparse (compacted attribute gather) path must actually engage for
+    # the collapsing-frontier weighted workload; edge-weighted PageRank
+    # keeps every vertex active and must stay dense in SPMD lockstep.
+    engaged = sharded_results["weighted_sparse_engaged"]
+    for conn in ("dense_psum", "merging", "hash_sort"):
+        assert engaged[f"sssp_w/{conn}"], conn
+        assert not engaged[f"pagerank_w/{conn}"], conn
+
+
+def test_weighted_sharded_sparse_superstep_matches_dense_all_ops(
+        sharded_results):
+    # The compacted slab's edge-attribute gather under every combine op
+    # (sum never goes sparse in a full fixpoint, so it is pinned at the
+    # superstep level).
+    for key, err in sharded_results["weighted_superstep_errs"].items():
+        assert err < 1e-5, (key, err)
+
+
+def test_more_shards_than_edges_weighted_slabs(sharded_results):
+    # 3 edges over 8 shards: mostly-padding weighted slabs must not wrap
+    # the compacted-index clamp (regression for the empty-slab gather).
+    assert sharded_results["tiny_weighted_converged"]
+    assert sharded_results["tiny_weighted_err"] <= 1e-8
 
 
 def test_empty_frontier_halts_sharded_fixpoint_early(sharded_results):
