@@ -1,0 +1,93 @@
+"""Shared machine-readable benchmark format (``repro-bench-v1``).
+
+One schema for every ``BENCH_*.json`` snapshot: the CI ``bench-trend`` job,
+``benchmarks/run.py --json``, and ``benchmarks/fig10_semi_naive.py --json``
+all read/write it, so trajectory files stay comparable across PRs.
+
+    {"schema": "repro-bench-v1",
+     "rows": [{"name": "fig10/pagerank_rho0.05",
+               "us_per_call": 123.4,
+               "detail": "measured: sparse cap=1024 ... -> 7.58x"}]}
+
+``detail`` starts with ``measured:`` for rows timed on the producing host
+and ``derived:`` for cost-model projections; trend comparison only ever
+looks at measured rows.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Optional, Tuple
+
+SCHEMA = "repro-bench-v1"
+
+
+def pop_json_arg(args):
+    """Parse ``--json <path>`` from an argv list: returns ``(abs_path or
+    None, args)`` with the operand rewritten to its absolute path.
+    Absolutizing at parse time anchors the output to the caller's cwd even
+    across chdir/re-exec (fig10 ``--sharded`` re-execs itself with
+    ``cwd=<repo root>``).  Raises ValueError when the flag has no operand.
+    """
+
+    args = list(args)
+    if "--json" not in args:
+        return None, args
+    i = args.index("--json")
+    if i + 1 >= len(args):
+        raise ValueError("--json needs a path")
+    args[i + 1] = os.path.abspath(args[i + 1])
+    return args[i + 1], args
+
+
+def parse_lines(text: str) -> List[Tuple[str, float, str]]:
+    """Every well-formed ``name,us,detail`` row in a block of output."""
+
+    rows = []
+    for line in text.splitlines():
+        parsed = parse_row(line)
+        if parsed is not None:
+            rows.append(parsed)
+    return rows
+
+
+def parse_row(line: str) -> Optional[Tuple[str, float, str]]:
+    """Parse one ``name,us_per_call,detail`` CSV row (the format every
+    benchmark module prints); detail may itself contain commas."""
+
+    parts = line.strip().split(",", 2)
+    if len(parts) != 3 or parts[0] in ("", "name"):
+        return None
+    try:
+        us = float(parts[1])
+    except ValueError:
+        return None
+    return parts[0], us, parts[2]
+
+
+def rows_to_doc(rows: List[Tuple[str, float, str]]) -> dict:
+    return {
+        "schema": SCHEMA,
+        "rows": [
+            {"name": n, "us_per_call": us, "detail": d}
+            for n, us, d in rows
+        ],
+    }
+
+
+def write_doc(path: str, rows: List[Tuple[str, float, str]]) -> None:
+    with open(path, "w") as fh:
+        json.dump(rows_to_doc(rows), fh, indent=1)
+        fh.write("\n")
+
+
+def load_doc(path: str) -> dict:
+    with open(path) as fh:
+        doc = json.load(fh)
+    if doc.get("schema") != SCHEMA:
+        raise ValueError(
+            f"{path}: unknown benchmark schema {doc.get('schema')!r} "
+            f"(expected {SCHEMA!r})"
+        )
+    return doc

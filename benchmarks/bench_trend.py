@@ -1,0 +1,102 @@
+"""CI benchmark-trajectory gate: diff a fresh ``BENCH_PR.json`` against the
+committed ``BENCH_baseline.json``.
+
+Usage::
+
+    python -m benchmarks.bench_trend BENCH_PR.json BENCH_baseline.json \
+        [--tolerance 2.0]
+
+Only **measured** rows (``detail`` starts with ``measured:``) with a
+nonzero timing participate; derived cost-model rows and the 0-us ratio
+rows are informational.  A PR row slower than ``tolerance x`` its baseline
+(with a 100 us absolute floor, so micro-rows under scheduler noise cannot
+flake the gate) is a regression; a measured baseline row missing from the
+PR snapshot is also a failure — benchmarks must not silently disappear
+from the trajectory.  The tolerance is deliberately generous (2x): the
+baseline is committed from a different machine than the CI runner, so the
+gate catches order-of-magnitude path regressions (e.g. a sparse superstep
+silently degrading to dense), not microarchitectural drift.
+
+Exit status: 0 clean, 1 regression/missing rows, 2 usage error.
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks._json import load_doc
+
+ABS_FLOOR_US = 100.0
+
+
+def _measured(doc: dict) -> dict:
+    return {
+        r["name"]: r["us_per_call"]
+        for r in doc["rows"]
+        if r["us_per_call"] > 0.0 and r["detail"].startswith("measured")
+    }
+
+
+def compare(pr: dict, baseline: dict, tolerance: float):
+    """Returns (regressions, missing, improvements, table_lines)."""
+
+    pr_rows, base_rows = _measured(pr), _measured(baseline)
+    regressions, missing, improvements, lines = [], [], [], []
+    for name in sorted(base_rows):
+        if name not in pr_rows:
+            missing.append(name)
+            lines.append(f"MISSING  {name} (baseline {base_rows[name]:.0f}us)")
+            continue
+        new, old = pr_rows[name], base_rows[name]
+        ratio = new / old if old else float("inf")
+        tag = "ok"
+        if new > tolerance * old and new - old > ABS_FLOOR_US:
+            regressions.append((name, old, new))
+            tag = "REGRESSION"
+        elif ratio < 1.0 / tolerance:
+            improvements.append((name, old, new))
+            tag = "improved"
+        lines.append(
+            f"{tag:<10} {name}: {old:.0f}us -> {new:.0f}us ({ratio:.2f}x)"
+        )
+    for name in sorted(set(pr_rows) - set(base_rows)):
+        lines.append(f"new      {name}: {pr_rows[name]:.0f}us (no baseline)")
+    return regressions, missing, improvements, lines
+
+
+def main(argv=None) -> int:
+    args = list(sys.argv[1:] if argv is None else argv)
+    tolerance = 2.0
+    if "--tolerance" in args:
+        i = args.index("--tolerance")
+        try:
+            tolerance = float(args[i + 1])
+        except (IndexError, ValueError):
+            print("--tolerance needs a number", file=sys.stderr)
+            return 2
+        del args[i : i + 2]
+    if len(args) != 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    pr_path, base_path = args
+    regressions, missing, improvements, lines = compare(
+        load_doc(pr_path), load_doc(base_path), tolerance
+    )
+    print(f"bench-trend: {pr_path} vs {base_path} (tolerance {tolerance}x)")
+    for line in lines:
+        print("  " + line)
+    if improvements:
+        print(f"{len(improvements)} row(s) improved beyond {tolerance}x — "
+              "consider refreshing BENCH_baseline.json to tighten the gate")
+    if regressions or missing:
+        print(
+            f"FAIL: {len(regressions)} regression(s), "
+            f"{len(missing)} missing row(s)", file=sys.stderr,
+        )
+        return 1
+    print("bench-trend: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

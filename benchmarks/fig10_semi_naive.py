@@ -16,7 +16,13 @@ density over the sharded dense path.
 A third workload, weighted SSSP (``sssp_w``: ``Graph.edge_data`` weights
 read by the message UDF), sweeps the same densities on the weighted
 edge-slab path; its rows are informational — the acceptance bars stay on
-the unweighted graph.
+the unweighted graph.  A fourth, argmin-SSSP (``sssp_parents``: parent-
+pointer payloads through the generic-monoid combine path), pins the cost
+of a structured aggregate on the same sweep — also informational.
+
+``--json <path>`` writes the sweep rows as a ``repro-bench-v1`` snapshot
+(see :mod:`benchmarks._json`) — the same machine-readable format the CI
+``bench-trend`` job and the ``BENCH_*.json`` trajectory files share.
 """
 
 from __future__ import annotations
@@ -89,6 +95,26 @@ def _weighted(g: Graph) -> Graph:
                  edge_data=jnp.asarray(w))
 
 
+def _argmin_sssp(N: int) -> VertexProgram:
+    """SSSP with parent pointers: the argmin monoid's (dist, parent) rows
+    ride the generic XLA combine path — the structured-payload cost pin."""
+
+    inf = jnp.float32(1e9)
+    return VertexProgram(
+        init_vertex=lambda ids, vd: jnp.stack(
+            [jnp.where(ids == 0, 0.0, inf),
+             jnp.full(ids.shape, -1.0),
+             ids.astype(jnp.float32)], axis=1),
+        message=lambda j, s, ed: jnp.stack([s[:, 0] + ed, s[:, 2]], axis=1),
+        apply=lambda j, s, inbox, got: (
+            jnp.concatenate(
+                [jnp.where((inbox[:, 0] < s[:, 0])[:, None],
+                           inbox, s[:, :2]), s[:, 2:]], axis=1),
+            inbox[:, 0] < s[:, 0]),
+        combine="argmin",
+    )
+
+
 def sweep(name, ex, state, emit):
     """Time dense vs sparse supersteps with the frontier pinned per density.
 
@@ -148,9 +174,11 @@ def main(emit=print, sharded: bool = False) -> bool:
         # (name, program, graph, gates the acceptance bar)
         ("pagerank", _pagerank(N, outdeg), g, True),
         ("sssp", _sssp(N), g, True),
-        # Weighted edge-slab path: informational rows, no bar — the
-        # --check gate stays on the unweighted graph.
+        # Weighted edge-slab path and the generic-monoid (argmin parent-
+        # pointer) path: informational rows, no bar — the --check gate
+        # stays on the unweighted sum/min workloads.
         ("sssp_w", _weighted_sssp(N), _weighted(g), False),
+        ("sssp_parents", _argmin_sssp(N), _weighted(g), False),
     )
     for name, prog, graph, gate in workloads:
         ex = compile_pregel(prog, graph, mesh=mesh, semi_naive=True)
@@ -168,8 +196,17 @@ def main(emit=print, sharded: bool = False) -> bool:
 
 
 if __name__ == "__main__":
+    from benchmarks._json import parse_row, pop_json_arg, write_doc
+
     want_sharded = "--sharded" in sys.argv
     check = "--check" in sys.argv
+    try:
+        # Absolutized before the --sharded re-exec (which runs the child
+        # with cwd=_ROOT), so the snapshot lands in the caller's cwd.
+        json_path, argv_rest = pop_json_arg(sys.argv[1:])
+    except ValueError as err:
+        print(err, file=sys.stderr)
+        sys.exit(2)
     flags = os.environ.get("XLA_FLAGS", "")
     if want_sharded and "xla_force_host_platform_device_count" not in flags:
         # The device-count flag must be set before jax initializes: re-exec.
@@ -180,8 +217,21 @@ if __name__ == "__main__":
             p for p in (_ROOT, env.get("PYTHONPATH", "")) if p
         )
         sys.exit(subprocess.call(
-            [sys.executable, os.path.abspath(__file__)] + sys.argv[1:],
+            [sys.executable, os.path.abspath(__file__)] + argv_rest,
             env=env, cwd=_ROOT,
         ))
-    ok = main(sharded=want_sharded)
+    if json_path is not None:
+        rows = []
+
+        def emit(line):
+            parsed = parse_row(line)
+            if parsed is not None:
+                rows.append(parsed)
+            print(line)
+
+        ok = main(emit=emit, sharded=want_sharded)
+        write_doc(json_path, rows)
+        print(f"wrote {len(rows)} rows to {json_path}", file=sys.stderr)
+    else:
+        ok = main(sharded=want_sharded)
     sys.exit(0 if (ok or not check) else 1)

@@ -7,10 +7,16 @@ cost models (CPU container: TPU/2012-cluster numbers cannot be measured).
 ``--smoke`` runs the fast subset (the fig10 semi-naive superstep sweep plus
 the derived-only modules) — the CI-friendly mode that still exercises the
 real compiled dense and sparse superstep paths.
+
+``--json <path>`` additionally writes every emitted row as a
+``repro-bench-v1`` snapshot (see :mod:`benchmarks._json`) — the format the
+CI ``bench-trend`` job diffs against the committed ``BENCH_baseline.json``.
 """
 
 from __future__ import annotations
 
+import contextlib
+import io
 import sys
 import traceback
 
@@ -35,18 +41,37 @@ def _modules(smoke: bool):
 
 
 def main(argv=None) -> int:
-    args = sys.argv[1:] if argv is None else argv
+    from benchmarks._json import parse_lines, pop_json_arg, write_doc
+
+    args = sys.argv[1:] if argv is None else list(argv)
     smoke = "--smoke" in args
+    try:
+        json_path, args = pop_json_arg(args)
+    except ValueError as err:
+        print(err, file=sys.stderr)
+        return 2
 
     print("name,us_per_call,derived")
+    rows = []
     failures = 0
     for mod in _modules(smoke):
+        # Capture each module's CSV lines (echoed through) so --json sees
+        # every row regardless of how the module emits them.
+        buf = io.StringIO()
         try:
-            mod.main()
+            with contextlib.redirect_stdout(buf):
+                mod.main()
         except Exception:  # noqa: BLE001 - keep the suite running
             failures += 1
             print(f"{mod.__name__},0.0,ERROR", file=sys.stderr)
             traceback.print_exc()
+        out = buf.getvalue()
+        if out:
+            sys.stdout.write(out)
+        rows.extend(parse_lines(out))
+    if json_path is not None:
+        write_doc(json_path, rows)
+        print(f"wrote {len(rows)} rows to {json_path}", file=sys.stderr)
     return 1 if failures else 0
 
 

@@ -1,0 +1,571 @@
+"""Extensible aggregate algebra: registrable combine monoids.
+
+The paper's central claim is that ONE recursive-query engine serves many ML
+flavors — but that only holds if the aggregation algebra is open.  This
+module replaces the closed ``sum``/``max``/``min`` string enum with
+first-class :class:`CombineMonoid` objects registered once and resolved by
+name everywhere a combine happens: the logical layer's delta-safety
+metadata (:meth:`CombineMonoid.as_aggregate` →
+:class:`repro.core.datalog.Aggregate`), the planner's payload-width cost
+terms (``PregelStats.combine`` / ``msg_bytes``), the Fig.-9 connectors and
+group-by primitives in :mod:`repro.core.physical`, and both sharded
+superstep paths in :mod:`repro.core.pregel`.
+
+A monoid combines *slabs*: arrays whose trailing dimension is the monoid's
+payload width ``W`` (1 for plain elementwise combines).  ``combine`` must be
+vectorized over every leading dimension, **associative**, **commutative**,
+and absorb the ``identity`` row — properties checked at registration
+(:func:`register_monoid` fails closed on violations, so an unsound
+aggregate can never silently corrupt a fixpoint).
+
+Structured payloads make whole workload families expressible [Das et al.
+1909.08249]:
+
+* ``argmin`` — lexicographic row-min over (key, payload...) columns:
+  SSSP with parent pointers, spanning forests.  Idempotent → delta-safe.
+* ``topk``  — merge two descending-sorted rows, keep the width:
+  k-truncated personalized PageRank.  (Multiset merge: not idempotent.)
+* ``mean``  — (sum, count) pairs with a ``finalize`` that divides:
+  label propagation / Adsorption-style averaging.  Rides the ``sum``
+  fast path (``kernel_op="sum"``).
+* ``logsumexp`` — elementwise ``logaddexp``: soft-min/softmax-style
+  accumulation in log space.
+
+Execution strategy: monoids whose ``kernel_op`` names a hardware fast path
+(``sum``/``max``/``min``) run the existing Pallas kernel / XLA segment ops /
+psum-scatter machinery untouched.  Everything else lowers to the **generic
+XLA monoid path** (:func:`generic_segment_combine`): sort rows by segment
+(when not presorted), run a segmented ``lax.associative_scan`` with the
+monoid's combine, and scatter each run's end into the output — O(E log E)
+work, jit/shard_map-safe, static shapes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "CombineMonoid",
+    "MonoidError",
+    "register_monoid",
+    "get_monoid",
+    "registered_monoids",
+    "check_monoid",
+    "generic_segment_combine",
+]
+
+
+class MonoidError(ValueError):
+    """A registered aggregate violates the monoid laws (or is unknown)."""
+
+
+IdentitySpec = Union[float, Callable[[int], Sequence[float]]]
+
+
+@dataclass(frozen=True)
+class CombineMonoid:
+    """A commutative, associative combine with identity — one aggregate.
+
+    ``combine(a, b)`` folds two slabs of shape ``[..., W]`` elementwise over
+    the leading dims; ``identity`` is either a scalar (broadcast over any
+    shape) or a callable ``width -> row`` for monoids whose identity differs
+    per column (argmin: ``[+inf, 0, ...]``).
+
+    ``width`` pins the exact payload width (``mean`` needs (sum, count)
+    pairs); ``min_width`` is a lower bound (``argmin`` needs a key column
+    plus at least one payload column).  Monoids with ``width``/``min_width``
+    structure require payloads of rank >= 2 (``[E, W]``).
+
+    ``idempotent`` (``combine(x, x) == x``) and ``delta_safe`` mirror
+    :class:`repro.core.datalog.Aggregate`: idempotent combines absorb stale
+    re-deliveries, so delta-frontier reads are sound; ``delta_safe=None``
+    defaults to ``idempotent``.  (Pregel inboxes are additionally
+    *recomputable* — rebuilt from scratch every superstep — which licenses
+    delta reads for any monoid in that plan; ``as_aggregate`` lets callers
+    opt in.)
+
+    ``kernel_op`` names the hardware fast path this monoid can ride
+    (``"sum"``/``"max"``/``"min"``: the Pallas TPU kernel, XLA segment ops,
+    psum-scatter).  ``None`` routes to the generic XLA monoid path.
+
+    ``finalize`` optionally maps the combined accumulator to the value the
+    consumer sees (``mean``: ``(sum, count) -> sum / count``); the Pregel
+    executor applies it to the inbox before the apply UDF on every path.
+
+    ``float_only`` is the dtype policy: the generic path manufactures
+    ±inf identities and accumulates through ``associative_scan``, so it
+    rejects non-floating payloads instead of silently truncating them.
+    """
+
+    name: str
+    combine: Callable[[jax.Array, jax.Array], jax.Array]
+    identity: IdentitySpec
+    width: Optional[int] = None
+    min_width: int = 1
+    idempotent: bool = False
+    delta_safe: Optional[bool] = None
+    kernel_op: Optional[str] = None
+    finalize: Optional[Callable[[jax.Array], jax.Array]] = field(
+        default=None
+    )
+    float_only: bool = True
+    # Maps an arbitrary slab into the monoid's valid domain (``topk``:
+    # descending-sorted rows).  Used by the registration law checker to
+    # sample domain-valid inputs; message UDFs must emit payloads already
+    # in-domain (the identity row always is).
+    canonicalize: Optional[Callable[[jax.Array], jax.Array]] = None
+    doc: str = ""
+
+    # -- derived properties -------------------------------------------------
+
+    @property
+    def is_delta_safe(self) -> bool:
+        return self.idempotent if self.delta_safe is None else self.delta_safe
+
+    @property
+    def structured(self) -> bool:
+        """True when the payload's trailing dim is monoid structure (the
+        slab must be rank >= 2), not free feature columns."""
+
+        return self.width is not None or self.min_width > 1
+
+    # -- identity construction ---------------------------------------------
+
+    def identity_row(self, width: int) -> np.ndarray:
+        if callable(self.identity):
+            row = np.asarray(self.identity(width), dtype=np.float64)
+            if row.shape != (width,):
+                raise MonoidError(
+                    f"monoid {self.name!r}: identity({width}) returned shape "
+                    f"{row.shape}, expected ({width},)"
+                )
+            return row
+        return np.full((width,), float(self.identity))
+
+    def identity_slab(
+        self, shape: Tuple[int, ...], dtype, flag_cols: int = 0
+    ) -> jax.Array:
+        """An identity-filled slab of ``shape``; the trailing ``flag_cols``
+        columns (fused got-flags riding the exchange) take 0, the identity
+        of the ``max`` they combine under."""
+
+        width = int(shape[-1]) - flag_cols
+        row = np.concatenate(
+            [self.identity_row(width), np.zeros((flag_cols,))]
+        )
+        return jnp.broadcast_to(jnp.asarray(row, dtype), shape)
+
+    def identity_like(self, x: jax.Array) -> jax.Array:
+        """Identity slab shaped like ``x`` (used to neutralize payloads of
+        inactive/padding edges before they reach a combine)."""
+
+        if not callable(self.identity):
+            return jnp.full_like(x, float(self.identity))
+        if x.ndim < 2:
+            raise MonoidError(
+                f"monoid {self.name!r} has a structured identity; payloads "
+                f"must be rank >= 2 ([rows, width]), got shape {x.shape}"
+            )
+        return self.identity_slab(x.shape, x.dtype)
+
+    # -- fused-slab combine (payload columns + got-flag columns) ------------
+
+    def combine_slab(
+        self, a: jax.Array, b: jax.Array, flag_cols: int = 0
+    ) -> jax.Array:
+        """Combine two slabs whose trailing ``flag_cols`` columns are fused
+        got-flags: payload columns fold under the monoid, flag columns under
+        ``max`` (idempotent — safe however many times a flag is re-combined,
+        and 1.0-vs-0.0 flags read back as "any message arrived")."""
+
+        if flag_cols == 0:
+            return self.combine(a, b)
+        pa, fa = a[..., :-flag_cols], a[..., -flag_cols:]
+        pb, fb = b[..., :-flag_cols], b[..., -flag_cols:]
+        return jnp.concatenate(
+            [self.combine(pa, pb), jnp.maximum(fa, fb)], axis=-1
+        )
+
+    def got_mask(self, flag: jax.Array) -> jax.Array:
+        """Decode the combined got-flag column of a fused exchange.
+
+        Fast paths combine the flag with the monoid's own ``kernel_op``
+        (``min``: identity +inf would fool ``> 0``, so test ``== 1.0``);
+        the generic path always combines flags with ``max``."""
+
+        if self.kernel_op == "min":
+            return flag == 1.0
+        return flag > 0
+
+    # -- payload validation -------------------------------------------------
+
+    def validate_payload(self, shape: Tuple[int, ...], dtype) -> None:
+        """Raise when a message payload cannot feed this monoid (shape
+        checked at compile, before any superstep runs)."""
+
+        if self.structured:
+            if len(shape) < 2:
+                raise MonoidError(
+                    f"monoid {self.name!r} needs structured payloads "
+                    f"[rows, width>={max(self.min_width, self.width or 0)}]; "
+                    f"got shape {shape}"
+                )
+            w = int(shape[-1])
+            if self.width is not None and w != self.width:
+                raise MonoidError(
+                    f"monoid {self.name!r} needs payload width "
+                    f"{self.width}, got {w} (shape {shape})"
+                )
+            if w < self.min_width:
+                raise MonoidError(
+                    f"monoid {self.name!r} needs payload width >= "
+                    f"{self.min_width}, got {w} (shape {shape})"
+                )
+        if self.float_only and not jnp.issubdtype(dtype, jnp.floating):
+            raise MonoidError(
+                f"monoid {self.name!r} accepts floating payloads only, "
+                f"got dtype {np.dtype(dtype)}"
+            )
+
+    # -- bridge to the logical layer ----------------------------------------
+
+    def as_aggregate(self, *, recomputable: bool = False):
+        """This monoid as a :class:`repro.core.datalog.Aggregate`.
+
+        ``recomputable`` is a property of the *executing plan*, not of the
+        monoid (Pregel inboxes are rebuilt from scratch every superstep, so
+        its front-end passes True); it defaults False so generic Datalog
+        programs fail closed: ``delta_rewritable_rules`` only accepts this
+        aggregate when the monoid itself is delta-safe."""
+
+        from repro.core.datalog import Aggregate
+
+        return Aggregate(
+            name=self.name,
+            zero=(lambda: self.identity_row(self.width or 1)),
+            combine=self.combine,
+            idempotent=self.idempotent,
+            recomputable=recomputable or self.is_delta_safe,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Registration-time law checking (fail closed)
+# ---------------------------------------------------------------------------
+
+
+def _check_widths(m: CombineMonoid) -> Tuple[int, ...]:
+    if m.width is not None:
+        return (m.width,)
+    lo = max(m.min_width, 1)
+    return tuple(dict.fromkeys((lo, lo + 1, lo + 3)))
+
+
+def _sample_slabs(m: CombineMonoid, width: int, rng) -> np.ndarray:
+    """Adversarial-ish sample: negatives, zeros, duplicated rows (so
+    commutativity/idempotence checks see ties), and identity rows."""
+
+    base = rng.standard_normal((8, width)) * 4.0
+    base[2] = base[1]            # exact duplicate row → ties
+    base[3] = 0.0
+    base[4, 0] = base[5, 0]      # tied leading column, differing payload
+    base[6] = m.identity_row(width)
+    return base.astype(np.float64)
+
+
+def check_monoid(m: CombineMonoid, *, seed: int = 0) -> None:
+    """Verify the monoid laws on deterministic samples; raise
+    :class:`MonoidError` on any violation.
+
+    Checks, per candidate width: identity absorption (both sides, exact up
+    to float tolerance), commutativity, associativity, and — only when
+    claimed — idempotence.  This is the registration gate: commutativity +
+    associativity is exactly what licenses sender-side early aggregation
+    and re-associating combines across shards, and idempotence is a
+    soundness claim consumed by the semi-naive rewrite, so none of them may
+    be taken on faith.
+    """
+
+    rng = np.random.default_rng(seed)
+    for width in _check_widths(m):
+        ident = m.identity_row(width)
+        if not np.all(np.isfinite(ident) | np.isinf(ident)):
+            raise MonoidError(f"monoid {m.name!r}: non-numeric identity")
+        x = _sample_slabs(m, width, rng).astype(np.float32)
+        a = jnp.asarray(x)
+        b = jnp.asarray(np.roll(x, 1, axis=0))
+        c = jnp.asarray(np.roll(x, 3, axis=0))
+        if m.canonicalize is not None:
+            a, b, c = m.canonicalize(a), m.canonicalize(b), m.canonicalize(c)
+        ident_slab = m.identity_slab(x.shape, jnp.float32)
+
+        def close(u, v):
+            return np.allclose(
+                np.asarray(u), np.asarray(v), rtol=1e-6, atol=1e-8,
+                equal_nan=True,
+            )
+
+        if not close(m.combine(a, ident_slab), a) or not close(
+            m.combine(ident_slab, a), a
+        ):
+            raise MonoidError(
+                f"monoid {m.name!r}: identity law violated at width {width} "
+                f"(combine(x, identity) != x)"
+            )
+        if not close(m.combine(a, b), m.combine(b, a)):
+            raise MonoidError(
+                f"monoid {m.name!r}: combine is not commutative at width "
+                f"{width}"
+            )
+        if not close(
+            m.combine(m.combine(a, b), c), m.combine(a, m.combine(b, c))
+        ):
+            raise MonoidError(
+                f"monoid {m.name!r}: combine is not associative at width "
+                f"{width}"
+            )
+        if m.idempotent and not close(m.combine(a, a), a):
+            raise MonoidError(
+                f"monoid {m.name!r}: claimed idempotent but "
+                f"combine(x, x) != x at width {width}"
+            )
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, CombineMonoid] = {}
+
+
+def register_monoid(
+    m: CombineMonoid, *, check: bool = True, overwrite: bool = False
+) -> CombineMonoid:
+    """Register ``m`` under ``m.name``; fails closed via
+    :func:`check_monoid` unless ``check=False`` (reserved for the built-ins
+    whose laws the test suite pins directly)."""
+
+    if not m.name or not isinstance(m.name, str):
+        raise MonoidError("monoid needs a non-empty string name")
+    if m.name in _REGISTRY and not overwrite:
+        raise MonoidError(
+            f"monoid {m.name!r} is already registered "
+            "(pass overwrite=True to replace it)"
+        )
+    if m.kernel_op is not None and m.kernel_op not in (
+        "sum", "max", "min"
+    ):
+        raise MonoidError(
+            f"monoid {m.name!r}: kernel_op must be one of sum/max/min "
+            f"(the hardware fast paths), got {m.kernel_op!r}"
+        )
+    if check:
+        check_monoid(m)
+    _REGISTRY[m.name] = m
+    return m
+
+
+def get_monoid(name: str) -> CombineMonoid:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise MonoidError(
+            f"unknown combine monoid {name!r}; registered: "
+            f"{', '.join(sorted(_REGISTRY))}"
+        ) from None
+
+
+def registered_monoids() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# Generic XLA monoid path: segmented reduce via associative scan
+# ---------------------------------------------------------------------------
+
+
+def generic_segment_combine(
+    values: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+    monoid: CombineMonoid,
+    *,
+    edge_active: Optional[jax.Array] = None,
+    flag_cols: int = 0,
+    presorted: bool = False,
+) -> jax.Array:
+    """Segmented reduce under an arbitrary registered monoid.
+
+    ``values`` is a rank-2 slab ``[E, W(+flag_cols)]``; rows with
+    ``edge_active`` False (or a negative segment id — padding) are replaced
+    by the identity row, so they combine as no-ops without disturbing a
+    presorted id order.  Ids at or beyond ``num_segments`` spill into a
+    dropped row, mirroring the fast paths.  Empty segments read the
+    identity row — callers gate them behind the got-a-message mask exactly
+    as they do the ±inf of the XLA segment ops.
+
+    Formulation: (optionally sort by id, then) run the classic segmented
+    scan — ``op((va, ia), (vb, ib)) = (ia == ib ? combine(va, vb) : vb,
+    ib)``, associative for sorted ids — and scatter each run's final
+    element into its output row.  Static shapes, no host sync,
+    jit/shard_map-safe.
+    """
+
+    if values.ndim != 2:
+        raise MonoidError(
+            f"generic monoid path needs rank-2 slabs, got {values.shape}"
+        )
+    monoid.validate_payload(
+        values.shape[:-1] + (values.shape[-1] - flag_cols,), values.dtype
+    )
+    E = values.shape[0]
+    out_shape = (num_segments,) + values.shape[1:]
+    if E == 0:
+        return monoid.identity_slab(out_shape, values.dtype, flag_cols)
+
+    ids = segment_ids.astype(jnp.int32)
+    ident = monoid.identity_slab(values.shape, values.dtype, flag_cols)
+    dead = ids < 0
+    if edge_active is not None:
+        dead = jnp.logical_or(dead, jnp.logical_not(edge_active))
+    values = jnp.where(dead[:, None], ident, values)
+    # Neutralized rows keep an in-range id so sortedness survives: clamping
+    # negatives to 0 can only move them ahead of every real row.
+    ids = jnp.where(dead, jnp.maximum(ids, 0), ids)
+    ids = jnp.minimum(ids, num_segments)  # spill row for out-of-range ids
+
+    if not presorted:
+        order = jnp.argsort(ids)
+        ids = ids[order]
+        values = values[order]
+
+    def seg_op(a, b):
+        va, ia = a
+        vb, ib = b
+        same = (ia == ib)[:, None]
+        return (
+            jnp.where(same, monoid.combine_slab(va, vb, flag_cols), vb),
+            ib,
+        )
+
+    scanned, _ = lax.associative_scan(seg_op, (values, ids), axis=0)
+    is_end = jnp.concatenate(
+        [ids[1:] != ids[:-1], jnp.ones((1,), jnp.bool_)]
+    )
+    out = monoid.identity_slab(
+        (num_segments + 1,) + values.shape[1:], values.dtype, flag_cols
+    )
+    out = out.at[jnp.where(is_end, ids, num_segments)].set(scanned)
+    return out[:num_segments]
+
+
+# ---------------------------------------------------------------------------
+# Built-in monoids
+# ---------------------------------------------------------------------------
+
+
+def _lex_min(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Lexicographic row minimum over the trailing columns: column 0 is the
+    key; ties cascade through the payload columns, which keeps the combine
+    commutative (and deterministic) when keys collide."""
+
+    a_wins = jnp.zeros(a.shape[:-1], jnp.bool_)
+    undecided = jnp.ones(a.shape[:-1], jnp.bool_)
+    for col in range(a.shape[-1]):
+        ac, bc = a[..., col], b[..., col]
+        a_wins = jnp.logical_or(a_wins, jnp.logical_and(undecided, ac < bc))
+        undecided = jnp.logical_and(undecided, ac == bc)
+    return jnp.where(a_wins[..., None], a, b)
+
+
+def _topk_merge(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Merge two descending-sorted rows, keeping the k = width largest of
+    the multiset union (associative and commutative by construction)."""
+
+    merged = jnp.sort(jnp.concatenate([a, b], axis=-1), axis=-1)
+    return merged[..., ::-1][..., : a.shape[-1]]
+
+
+def _mean_finalize(acc: jax.Array) -> jax.Array:
+    """(sum, count) accumulator -> mean; empty inboxes (count 0) read 0 and
+    are gated behind the got-a-message mask anyway."""
+
+    return acc[..., 0] / jnp.maximum(acc[..., 1], 1.0)
+
+
+def _register_builtins() -> None:
+    # The three hardware fast-path combines the closed enum used to hold —
+    # unchanged semantics, now carrying their own metadata.  float_only is
+    # False: the XLA segment/scatter ops take integer payloads too.
+    register_monoid(CombineMonoid(
+        "sum", combine=jnp.add, identity=0.0, kernel_op="sum",
+        idempotent=False, float_only=False,
+        doc="elementwise addition (PageRank mass, gradients)",
+    ), check=False)
+    register_monoid(CombineMonoid(
+        "max", combine=jnp.maximum, identity=float("-inf"), kernel_op="max",
+        idempotent=True, float_only=False,
+        doc="elementwise maximum (connected components by max label)",
+    ), check=False)
+    register_monoid(CombineMonoid(
+        "min", combine=jnp.minimum, identity=float("inf"), kernel_op="min",
+        idempotent=True, float_only=False,
+        doc="elementwise minimum (SSSP distances)",
+    ), check=False)
+
+    # The four generalized aggregates this registry exists for.  Like
+    # sum/max/min they register with check=False: their laws are pinned
+    # directly by tests/test_monoids.py, and the registration-time law
+    # check would otherwise run eager JAX dispatch on every import of
+    # this module (~1s of warmup paid by planner-only consumers too).
+    register_monoid(CombineMonoid(
+        "argmin",
+        combine=_lex_min,
+        identity=lambda w: [float("inf")] + [0.0] * (w - 1),
+        min_width=2,
+        idempotent=True,
+        doc="lexicographic row-min: (key, payload...) — SSSP parent "
+            "pointers, spanning forests",
+    ), check=False)
+    register_monoid(CombineMonoid(
+        "topk",
+        combine=_topk_merge,
+        identity=float("-inf"),
+        min_width=1,
+        idempotent=False,
+        delta_safe=False,
+        canonicalize=lambda x: jnp.sort(x, axis=-1)[..., ::-1],
+        doc="keep the k = payload-width largest values (k-truncated "
+            "personalized PageRank); rows must be descending-sorted",
+    ), check=False)
+    register_monoid(CombineMonoid(
+        "mean",
+        combine=jnp.add,
+        identity=0.0,
+        width=2,
+        idempotent=False,
+        delta_safe=False,
+        kernel_op="sum",
+        finalize=_mean_finalize,
+        doc="(sum, count) pairs finalized to sum/count — label "
+            "propagation / Adsorption-style averaging",
+    ), check=False)
+    register_monoid(CombineMonoid(
+        "logsumexp",
+        combine=jnp.logaddexp,
+        identity=float("-inf"),
+        idempotent=False,
+        delta_safe=False,
+        doc="elementwise log-sum-exp accumulation (softmax-weighted "
+            "message pooling in log space)",
+    ), check=False)
+
+
+_register_builtins()

@@ -37,6 +37,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.monoid import (
+    CombineMonoid,
+    generic_segment_combine,
+    get_monoid,
+)
 from repro.core.planner import ReduceSchedule
 from repro.kernels.segment_combine.ops import (
     kernel_eligible as _kernel_eligible,
@@ -68,12 +73,51 @@ __all__ = [
 # ---------------------------------------------------------------------------
 # Combine ops usable by Pregel combiners and segment reduces
 # ---------------------------------------------------------------------------
+#
+# COMBINE_OPS is the *hardware fast-path* table (XLA segment ops, scatter
+# .at[] combines, psum-scatter, the Pallas kernel).  The open-ended set of
+# aggregates lives in the monoid registry (:mod:`repro.core.monoid`): every
+# ``op`` string below resolves through :func:`get_monoid`, and monoids whose
+# ``kernel_op`` is None lower to the generic XLA monoid path instead.
 
 COMBINE_OPS = {
     "sum": (jnp.add, 0.0),
     "max": (jnp.maximum, -jnp.inf),
     "min": (jnp.minimum, jnp.inf),
 }
+
+
+def _generic_combine(
+    values: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+    monoid: CombineMonoid,
+    *,
+    edge_active=None,
+    flag_cols: int = 0,
+    presorted: bool,
+) -> jax.Array:
+    """Rank-normalizing wrapper over :func:`generic_segment_combine`:
+    scalar-payload monoids accept [E] / [E, ...] slabs (flattened to 2-D and
+    restored); structured monoids require [E, W] exactly."""
+
+    if values.ndim == 2:
+        return generic_segment_combine(
+            values, segment_ids, num_segments, monoid,
+            edge_active=edge_active, flag_cols=flag_cols,
+            presorted=presorted,
+        )
+    if monoid.structured or flag_cols:
+        raise ValueError(
+            f"monoid {monoid.name!r} needs [rows, width] payloads, got "
+            f"shape {values.shape}"
+        )
+    flat = values.reshape(values.shape[0], -1)
+    out = generic_segment_combine(
+        flat, segment_ids, num_segments, monoid,
+        edge_active=edge_active, presorted=presorted,
+    )
+    return out.reshape((num_segments,) + values.shape[1:])
 
 
 # ---------------------------------------------------------------------------
@@ -268,6 +312,7 @@ def segment_combine_sorted(
     edge_active: Optional[jax.Array] = None,
     use_kernel: Optional[bool] = None,
     interpret: Optional[bool] = None,
+    flag_cols: int = 0,
 ) -> jax.Array:
     """Pre-clustered (sorted) group-by combine — the *merging* side of Fig. 9.
 
@@ -283,15 +328,30 @@ def segment_combine_sorted(
     mask: rows outside the frontier are excluded from the combine, and the
     kernel path skips fully-inactive edge blocks outright via its
     scalar-prefetched active-block bitmap.  Empty segments differ by path
-    (kernel: combine identity mapped to 0; XLA max/min: ±inf) — Pregel
-    callers gate them behind the ``got``-a-message mask either way.
+    (kernel: combine identity mapped to 0; XLA max/min: ±inf; generic
+    monoids: the identity row) — Pregel callers gate them behind the
+    ``got``-a-message mask either way.
+
+    ``op`` names any registered monoid.  Monoids riding a hardware fast
+    path (``kernel_op`` in sum/max/min) take the kernel/XLA code below;
+    everything else lowers to the generic XLA monoid path.  ``flag_cols``
+    marks trailing fused got-flag columns (see
+    :func:`fused_got_exchange`), which generic monoids combine under
+    ``max`` instead of the payload combine.
     """
 
+    monoid = get_monoid(op)
+    if monoid.kernel_op is None:
+        return _generic_combine(
+            values, segment_ids, num_segments, monoid,
+            edge_active=edge_active, flag_cols=flag_cols, presorted=True,
+        )
+    op = monoid.kernel_op
     if use_kernel is None:
         # Shared auto-dispatch predicate (f32 and bf16 payloads: the kernel
         # accumulates in f32 and casts back, which would silently narrow
         # f64/int payloads — those stay on the XLA path).
-        use_kernel = _kernel_eligible(values, interpret)
+        use_kernel = _kernel_eligible(values, interpret, op)
     if use_kernel:
         flat = values.reshape(values.shape[0], -1).astype(jnp.float32)
         out = _segment_combine_kernel(
@@ -335,14 +395,23 @@ def scatter_combine(
     op: str = "sum",
     *,
     edge_active: Optional[jax.Array] = None,
+    flag_cols: int = 0,
 ) -> jax.Array:
     """Unordered scatter-reduce — the *hash* (+sort-free) side of Fig. 9.
 
     No sortedness assumption: every row scatters into its destination slot.
     Rows where ``edge_active`` is False take an out-of-range destination and
-    are dropped by the scatter.
+    are dropped by the scatter.  Generic monoids (no ``kernel_op``) sort by
+    destination and run the segmented-scan monoid path.
     """
 
+    monoid = get_monoid(op)
+    if monoid.kernel_op is None:
+        return _generic_combine(
+            values, segment_ids, num_segments, monoid,
+            edge_active=edge_active, flag_cols=flag_cols, presorted=False,
+        )
+    op = monoid.kernel_op
     if edge_active is not None:
         segment_ids = jnp.where(edge_active, segment_ids, num_segments)
     fn, init = COMBINE_OPS[op]
@@ -437,9 +506,15 @@ def fused_got_exchange(
     * ``min``  — combined flag is exactly 1.0 where any message arrived;
       empty destinations read +inf (XLA) or 0 (kernel) — both fail
       ``flag == 1.0`` (the ``> 0`` test would wrongly pass on +inf).
+    * generic monoids — the flag column combines under ``max`` (the
+      monoid's ``combine_slab`` splits payload and flag columns), so the
+      combined flag is 1.0 exactly where any message arrived and empty
+      destinations read the 0 flag identity; ``got = flag > 0``.
 
     ``exchange`` maps the fused ``[E, F+1]`` slab through the connector;
-    the caller closes over destination ids / axes / masks.
+    the caller closes over destination ids / axes / masks (and passes
+    ``flag_cols=1`` so generic monoids keep the flag out of the payload
+    combine).
     """
 
     flat = payload.reshape(payload.shape[0], -1)
@@ -447,8 +522,7 @@ def fused_got_exchange(
     fused = jnp.concatenate([flat, flag[:, None]], axis=1)
     out = exchange(fused)
     inbox = out[..., :-1].reshape((out.shape[0],) + payload.shape[1:])
-    f = out[..., -1]
-    got = (f == 1.0) if op == "min" else (f > 0)
+    got = get_monoid(op).got_mask(out[..., -1])
     return inbox, got
 
 
@@ -460,6 +534,7 @@ def sparse_merging_exchange(
     axes: Tuple[str, ...],
     op: str = "sum",
     bucket_cap: Optional[int] = None,
+    flag_cols: int = 0,
 ) -> jax.Array:
     """Frontier-compacted variant of :func:`merging_exchange`.
 
@@ -472,7 +547,7 @@ def sparse_merging_exchange(
 
     return merging_exchange(
         dst_ids, payload, n_vertices, axes, op, bucket_cap,
-        edge_mask=edge_valid,
+        edge_mask=edge_valid, flag_cols=flag_cols,
     )
 
 
@@ -484,13 +559,14 @@ def sparse_hash_sort_exchange(
     axes: Tuple[str, ...],
     op: str = "sum",
     bucket_cap: Optional[int] = None,
+    flag_cols: int = 0,
 ) -> jax.Array:
     """Frontier-compacted variant of :func:`hash_sort_exchange` (same slab
     contract as :func:`sparse_merging_exchange`)."""
 
     return hash_sort_exchange(
         dst_ids, payload, n_vertices, axes, op, bucket_cap,
-        edge_mask=edge_valid,
+        edge_mask=edge_valid, flag_cols=flag_cols,
     )
 
 
@@ -501,6 +577,7 @@ def dense_psum_exchange(
     axes: Tuple[str, ...],
     op: str = "sum",
     edge_mask: Optional[jax.Array] = None,
+    flag_cols: int = 0,
 ) -> jax.Array:
     """Dense partial-vector exchange: each shard scatter-combines its
     outbound messages into a dense length-N vector, then a single
@@ -516,19 +593,25 @@ def dense_psum_exchange(
     changing the fixpoint.
     """
 
+    monoid = get_monoid(op)
     dense = scatter_combine(
-        payload, dst_ids, n_vertices, op, edge_active=edge_mask
+        payload, dst_ids, n_vertices, op, edge_active=edge_mask,
+        flag_cols=flag_cols,
     )
     axes = _axes_present(axes)
     if not axes:
         return dense
     n_shards = _axes_size(axes)
     grouped = dense.reshape((n_shards, n_vertices // n_shards) + dense.shape[1:])
-    if op != "sum":
-        # psum_scatter only sums; for max/min fall back to all-reduce-style
-        # combine via all_gather (rare in practice — PageRank/BGD are sums).
+    if monoid.kernel_op != "sum":
+        # psum_scatter only sums; for max/min — and any generic monoid —
+        # fall back to all-reduce-style combine via all_gather (rare in
+        # practice — PageRank/BGD are sums).
         gathered = lax.all_gather(grouped, axes, tiled=False)
-        fn, _ = COMBINE_OPS[op]
+        if monoid.kernel_op is not None:
+            fn, _ = COMBINE_OPS[monoid.kernel_op]
+        else:
+            fn = lambda a, b: monoid.combine_slab(a, b, flag_cols)
         combined = functools.reduce(
             fn, [gathered[i] for i in range(gathered.shape[0])]
         )
@@ -598,7 +681,7 @@ def _bucket_by_owner(
 
 def _sparse_exchange(
     dst_ids, payload, n_vertices, axes, op, bucket_cap, presorted,
-    edge_active=None,
+    edge_active=None, flag_cols=0,
 ):
     axes = _axes_present(axes)
     if not axes:
@@ -607,10 +690,11 @@ def _sparse_exchange(
             act = None if edge_active is None else edge_active[order]
             return segment_combine_sorted(
                 payload[order], dst_ids[order], n_vertices, op,
-                edge_active=act,
+                edge_active=act, flag_cols=flag_cols,
             )
         return scatter_combine(
-            payload, dst_ids, n_vertices, op, edge_active=edge_active
+            payload, dst_ids, n_vertices, op, edge_active=edge_active,
+            flag_cols=flag_cols,
         )
 
     # Sharded path: excluded rows are dropped at bucket packing (they take
@@ -652,15 +736,20 @@ def _sparse_exchange(
         local_s, vals_s = local[order], flat_vals[order]
         occupied = (flat_ids >= 0)[order]
         out = segment_combine_sorted(
-            vals_s, local_s, n_local_v + 1, op, edge_active=occupied
+            vals_s, local_s, n_local_v + 1, op, edge_active=occupied,
+            flag_cols=flag_cols,
         )
     else:
-        out = scatter_combine(flat_vals, local, n_local_v + 1, op)
+        out = scatter_combine(
+            flat_vals, local, n_local_v + 1, op,
+            edge_active=(flat_ids >= 0), flag_cols=flag_cols,
+        )
     return out[:n_local_v]
 
 
 def merging_exchange(dst_ids, payload, n_vertices, axes,
-                     op="sum", bucket_cap=None, edge_mask=None):
+                     op="sum", bucket_cap=None, edge_mask=None,
+                     flag_cols=0):
     """The hash-partitioning *merging* connector (Fig. 4): sender-side
     sort-by-destination + all_to_all + receiver-side ordered merge/combine.
 
@@ -674,12 +763,13 @@ def merging_exchange(dst_ids, payload, n_vertices, axes,
     cap = bucket_cap or dst_ids.shape[0]
     return _sparse_exchange(
         dst_ids, payload, n_vertices, axes, op, cap, True,
-        edge_active=edge_mask,
+        edge_active=edge_mask, flag_cols=flag_cols,
     )
 
 
 def hash_sort_exchange(dst_ids, payload, n_vertices, axes,
-                       op="sum", bucket_cap=None, edge_mask=None):
+                       op="sum", bucket_cap=None, edge_mask=None,
+                       flag_cols=0):
     """The hash connector + explicit receiver-side grouping (Fig. 9 variant):
     all_to_all in arrival order, receiver scatter-combines (no order
     property)."""
@@ -687,5 +777,5 @@ def hash_sort_exchange(dst_ids, payload, n_vertices, axes,
     cap = bucket_cap or dst_ids.shape[0]
     return _sparse_exchange(
         dst_ids, payload, n_vertices, axes, op, cap, False,
-        edge_active=edge_mask,
+        edge_active=edge_mask, flag_cols=flag_cols,
     )

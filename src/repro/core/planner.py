@@ -93,7 +93,14 @@ class PregelStats:
     the bytes of ``Graph.edge_data`` gathered for every evaluated edge — 0
     for unweighted topologies).  It widens the edge-pipeline memory terms on
     both the dense and the frontier-compacted paths, so the dense↔sparse
-    ``density_threshold`` accounts for weighted payloads."""
+    ``density_threshold`` accounts for weighted payloads.
+
+    ``combine`` names the registered aggregate monoid; ``msg_bytes`` is the
+    full per-message payload (a structured monoid like argmin carries its
+    whole (key, payload...) row — ``compile_pregel`` derives it from the
+    probed message shape).  Monoids without a hardware fast path combine
+    dense partials by all-gather instead of psum-scatter, which the
+    connector costing accounts for (see :func:`plan_pregel`)."""
 
     n_vertices: int
     n_edges: int
@@ -102,6 +109,7 @@ class PregelStats:
     edge_attr_bytes: int = 0
     flops_per_edge: float = 2.0
     frontier_density: float = 1.0
+    combine: str = "sum"
 
 
 # ---------------------------------------------------------------------------
@@ -471,6 +479,13 @@ def plan_pregel(
     dp = mesh.data_parallel_size
     chips = mesh.n_devices
 
+    # Aggregate resolution: every combine string names a registered monoid
+    # whose payload width already widened ``msg_bytes`` (compile_pregel) and
+    # whose execution strategy shapes the dense-exchange cost below.
+    from repro.core.monoid import get_monoid  # deferred: planner stays light
+
+    monoid = get_monoid(stats.combine)
+
     # Connector choice, cost-based (Fig. 9).  The dense plan moves
     # N*msg_bytes/device once (psum-scatter); the sparse plans move only
     # boundary messages but pay alpha*(n-1) and sort/merge compute.
@@ -480,9 +495,21 @@ def plan_pregel(
     combined_per_dev = min(edge_msgs_per_dev,
                            stats.n_vertices * stats.msg_bytes / max(dp, 1) * 1.0)
 
-    dense_cost = ring_reduce_scatter(
-        dense_bytes_per_dev, dp, hw.ici_bw, hw.ici_latency
-    )
+    if monoid.kernel_op is None:
+        # Generic monoids cannot ride psum-scatter: each shard all-gathers
+        # every partial dense vector and re-combines locally.  The gathered
+        # total is dp full length-N vectors (ring_all_gather's nbytes is
+        # the total volume) — dp^2 x the reduce-scatter's per-shard bytes,
+        # which pushes wide-payload generic aggregates toward the sparse
+        # connectors.
+        dense_cost = ring_all_gather(
+            stats.n_vertices * stats.msg_bytes * max(dp, 1), dp,
+            hw.ici_bw, hw.ici_latency,
+        )
+    else:
+        dense_cost = ring_reduce_scatter(
+            dense_bytes_per_dev, dp, hw.ici_bw, hw.ici_latency
+        )
     sparse_cost = all_to_all(combined_per_dev, dp, hw.ici_bw, hw.ici_latency)
     # Merging connector stall penalty grows with the fan-in (paper §5.2.3):
     merge_stall = hw.ici_latency * dp * 8.0
@@ -504,6 +531,20 @@ def plan_pregel(
         }
         connector = min(options, key=options.get)
     notes.append(f"connector({connector})")
+
+    # Rule: aggregate-monoid resolution — anything beyond the closed
+    # sum/max/min enum records its payload-width cost term and execution
+    # strategy (the generic XLA monoid path, or a fast path it rides like
+    # mean's sum kernel), mirroring the edge-payload note below.
+    if stats.combine not in ("sum", "max", "min"):
+        strategy = (
+            f"{monoid.kernel_op}-fast-path" if monoid.kernel_op
+            else "xla-generic"
+        )
+        notes.append(
+            f"combine-monoid({stats.combine}, {stats.msg_bytes}B/msg, "
+            f"{strategy})"
+        )
 
     # Rule: weighted-payload cost terms — per-edge attributes (edge weights,
     # labels, feature rows) are gathered for every evaluated edge, widening

@@ -45,7 +45,7 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import algebra, stratify
-from repro.core.datalog import Aggregate, Program
+from repro.core.datalog import Program
 from repro.core.fixpoint import (
     DriverConfig,
     FixpointResult,
@@ -54,8 +54,8 @@ from repro.core.fixpoint import (
 )
 from repro.core.hardware import MeshSpec, TPU_V5E, HardwareSpec
 from repro.core.listings import pregel_program
+from repro.core.monoid import get_monoid
 from repro.core.physical import (
-    COMBINE_OPS,
     compact_active_edges,
     dense_psum_exchange,
     fused_got_exchange,
@@ -137,8 +137,16 @@ def _apply_and_merge(prog: "VertexProgram", j, state, inbox, got):
     """Shared superstep epilogue (O8..O10 + L7): run the apply UDF, keep the
     old state wherever no message arrived, and halt those vertices.  Every
     superstep variant — dense/sparse, single-shard/sharded — must share this
-    exact merge semantics or the execution strategies diverge."""
+    exact merge semantics or the execution strategies diverge.
 
+    Monoids with a ``finalize`` (mean: (sum, count) -> sum/count) have it
+    applied to the combined inbox HERE — the one seam every superstep
+    variant shares — so the apply UDF always sees finalized values no
+    matter which execution strategy produced the accumulator."""
+
+    monoid = get_monoid(prog.combine)
+    if monoid.finalize is not None:
+        inbox = monoid.finalize(inbox)
     new_state, new_active = prog.apply(j, state, inbox, got)
     merged = jax.tree_util.tree_map(
         lambda old, new: jnp.where(
@@ -160,19 +168,14 @@ class VertexProgram:
     name: str = "pregel-task"
 
     def program(self) -> Program:
-        fn, zero = COMBINE_OPS[self.combine]
+        monoid = get_monoid(self.combine)
+        # The monoid's own idempotence travels into the logical layer;
+        # every Pregel inbox is additionally recomputed from scratch each
+        # superstep (collect@J derives solely from send@J), which licenses
+        # the semi-naive rewrite even for non-idempotent combines.
         return pregel_program(
             udfs={"init_vertex": self.init_vertex, "update": self.apply},
-            aggregates={
-                # max/min are idempotent; every Pregel inbox is recomputed
-                # from scratch each superstep (collect@J derives solely from
-                # send@J) — both properties license the semi-naive rewrite.
-                "combine": Aggregate(
-                    self.combine, zero=lambda: zero, combine=fn,
-                    idempotent=self.combine in ("max", "min"),
-                    recomputable=True,
-                )
-            },
+            aggregates={"combine": monoid.as_aggregate(recomputable=True)},
         )
 
 
@@ -274,11 +277,12 @@ class PregelExecutable:
             )
             if sparse_ex is None:
                 ex = lambda fused: dense_psum_exchange(
-                    dst_c, fused, g.n_vertices, (), op, edge_mask=valid
+                    dst_c, fused, g.n_vertices, (), op, edge_mask=valid,
+                    flag_cols=1,
                 )
             else:
                 ex = lambda fused: sparse_ex(
-                    dst_c, fused, valid, g.n_vertices, (), op
+                    dst_c, fused, valid, g.n_vertices, (), op, flag_cols=1
                 )
             inbox, got = fused_got_exchange(ex, payload, valid, op)
             return _apply_and_merge(prog, j, state, inbox, got)
@@ -456,7 +460,17 @@ def compile_pregel(
     meshes partition each leaf into the per-shard edge slabs, and the
     planner's cost terms account for the per-edge attribute bytes
     (``PregelStats.edge_attr_bytes``, recorded in ``plan.notes``).
+
+    ``prog.combine`` names any registered :class:`~repro.core.monoid.
+    CombineMonoid`.  The message payload's shape is probed (shape-only
+    ``jax.eval_shape`` of the init/message UDFs, no FLOPs) so structured
+    monoids validate their width before anything compiles and the planner
+    prices the true per-message bytes (``PregelStats.msg_bytes`` /
+    ``combine`` — the payload-width cost terms); ``payload_bytes`` is the
+    fallback when the probe cannot run.
     """
+
+    monoid = get_monoid(prog.combine)
 
     # Per-edge attribute payload width (weighted graphs): bytes of edge_data
     # gathered per edge, fed to the planner's weighted cost terms.
@@ -472,6 +486,39 @@ def compile_pregel(
             edge_attr_bytes += np.dtype(leaf.dtype).itemsize * int(
                 np.prod(shape[1:], dtype=np.int64)
             )
+
+    # Message-payload probe: abstract evaluation of init_vertex + message
+    # gives the payload's shape/dtype without running either UDF.  Width
+    # violations (e.g. an argmin payload without its key column) surface
+    # here, at compile, rather than as a shape error mid-superstep.
+    msg_bytes = payload_bytes
+    try:
+        ids_s = jax.ShapeDtypeStruct((graph.n_vertices,), jnp.int32)
+        state_s = jax.eval_shape(prog.init_vertex, ids_s, graph.vertex_data)
+        src_state_s = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(
+                (graph.n_edges,) + s.shape[1:], s.dtype
+            ),
+            state_s,
+        )
+        edata_s = (
+            None if graph.edge_data is None else jax.tree_util.tree_map(
+                lambda e: jax.ShapeDtypeStruct(
+                    (graph.n_edges,) + e.shape[1:], e.dtype
+                ),
+                graph.edge_data,
+            )
+        )
+        payload_s = jax.eval_shape(
+            prog.message, jnp.int32(0), src_state_s, edata_s
+        )
+    except Exception:
+        payload_s = None  # shape probe is best-effort for exotic UDFs
+    if payload_s is not None:
+        monoid.validate_payload(payload_s.shape, payload_s.dtype)
+        msg_bytes = np.dtype(payload_s.dtype).itemsize * max(
+            int(np.prod(payload_s.shape[1:], dtype=np.int64)), 1
+        )
 
     # (1)-(3): Datalog -> XY schedule -> Figure-3 logical plan.
     program = prog.program()
@@ -494,8 +541,9 @@ def compile_pregel(
         n_vertices=graph.n_vertices,
         n_edges=graph.n_edges,
         vertex_bytes=payload_bytes,
-        msg_bytes=payload_bytes,
+        msg_bytes=msg_bytes,
         edge_attr_bytes=edge_attr_bytes,
+        combine=prog.combine,
     )
     plan = plan_pregel(
         stats, mesh_spec, hw, force_connector=force_connector,
@@ -523,12 +571,12 @@ def compile_pregel(
         )
         src_active = jnp.take(active_shard, src_l, axis=0)
         payload = prog.message(j, src_state, edata_l)
-        # Vote-to-halt: inactive sources contribute combine-identity.
-        _, ident = COMBINE_OPS[op]
+        # Vote-to-halt: inactive sources contribute the combine identity
+        # (a per-column identity row for structured monoids like argmin).
         payload = jnp.where(
             src_active.reshape((-1,) + (1,) * (payload.ndim - 1)),
             payload,
-            jnp.full_like(payload, ident if op != "sum" else 0),
+            get_monoid(op).identity_like(payload),
         )
         # O15 sender combine + connector + O14 receiver combine.
         inbox = connector(dst_l, payload, graph.n_vertices, batch_axes, op)
@@ -615,9 +663,11 @@ def compile_pregel(
                 lambda s: jnp.take(s, src_l, axis=0), state
             )
             payload = prog.message(j, src_state, edata_l)
-            _, ident = COMBINE_OPS[op]
-            fill = 0.0 if op == "sum" else ident
-            payload = jnp.where(act, payload, jnp.full_like(payload, fill))
+            payload = jnp.where(
+                act.reshape((-1,) + (1,) * (payload.ndim - 1)),
+                payload,
+                get_monoid(op).identity_like(payload),
+            )
             dst_eff = jnp.where(pad_l, -1, dst_l)
             inbox = connector(
                 jnp.where(dst_eff < 0, 0, dst_eff),
@@ -684,11 +734,12 @@ def compile_pregel(
                     # edge-side work runs on the compacted slab.
                     ex = lambda fused: dense_psum_exchange(
                         dst_c, fused, graph.n_vertices, batch_axes, op,
-                        edge_mask=valid,
+                        edge_mask=valid, flag_cols=1,
                     )
                 else:
                     ex = lambda fused: sparse_ex(
-                        dst_c, fused, valid, graph.n_vertices, batch_axes, op
+                        dst_c, fused, valid, graph.n_vertices, batch_axes,
+                        op, flag_cols=1,
                     )
                 inbox, got = fused_got_exchange(ex, payload, valid, op)
                 return _apply_and_merge(prog, j, state, inbox, got)

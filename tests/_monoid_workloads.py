@@ -1,0 +1,287 @@
+"""Shared monoid workloads + NumPy oracles for the aggregate-algebra suites.
+
+Each of the four generalized aggregates ships with a workload that exercises
+it end-to-end through the Pregel stack, paired with a pure-NumPy re-
+implementation of the same superstep semantics (vote-to-halt included).
+The oracles are deliberately *independent* code — python loops over edges
+and vertices, float64 accumulation — so a conformance failure implicates
+the engine, not a shared helper.
+
+* ``argmin``     — weighted SSSP with parent pointers (spanning tree).
+* ``topk``       — top-k value propagation (k-truncated personalized-
+                   PageRank-style: every vertex tracks the k largest
+                   reachable seed values).
+* ``mean``       — label propagation / Adsorption-style averaging.
+* ``logsumexp``  — log-space diffusion (softmax-weighted pooling).
+
+Used by ``tests/test_monoids.py`` (single shard) and
+``tests/spmd_monoid_program.py`` (8 virtual devices, subprocess).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+TOPK_K = 4
+INF = 1e9
+
+
+def make_graph(n: int, seed: int = 3):
+    """Random multigraph with every vertex reachable-ish: ~3 out-edges per
+    vertex plus one guaranteed in-edge per vertex.  Weights are exact binary
+    fractions so min/argmin relaxations are bit-exact across paths."""
+
+    rng = np.random.default_rng(seed)
+    src, dst = [], []
+    for v in range(n):
+        for _ in range(int(rng.integers(2, 5))):
+            src.append(v)
+            dst.append(int(rng.integers(0, n)))
+    for v in range(n):
+        src.append(int(rng.integers(0, n)))
+        dst.append(v)
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    weights = (((np.arange(len(src)) % 7) + 1) * 0.25).astype(np.float64)
+    return src, dst, weights
+
+
+# ---------------------------------------------------------------------------
+# NumPy combine oracles (one row at a time)
+# ---------------------------------------------------------------------------
+
+
+def np_combines():
+    return {
+        "sum": lambda a, b: a + b,
+        "max": np.maximum,
+        "min": np.minimum,
+        "argmin": lambda a, b: a if tuple(a) <= tuple(b) else b,
+        "topk": lambda a, b: np.sort(np.concatenate([a, b]))[::-1][: len(a)],
+        "mean": lambda a, b: a + b,
+        "logsumexp": np.logaddexp,
+    }
+
+
+def np_identity(name, width):
+    if name == "argmin":
+        return np.concatenate([[np.inf], np.zeros(width - 1)])
+    return {
+        "sum": np.zeros(width), "mean": np.zeros(width),
+        "max": np.full(width, -np.inf), "min": np.full(width, np.inf),
+        "topk": np.full(width, -np.inf),
+        "logsumexp": np.full(width, -np.inf),
+    }[name]
+
+
+def numpy_pregel(src, dst, weights, n, state0, msg_fn, combine_fn,
+                 apply_fn, finalize_fn, iters, active0=None):
+    """Reference Pregel loop: messages from active sources only, per-
+    destination fold with ``combine_fn``, got-gated apply and halt — the
+    exact merge semantics of ``repro.core.pregel._apply_and_merge``.
+
+    ``msg_fn(j, state_row, weight) -> row``; ``apply_fn(j, state_row,
+    inbox_row, got) -> (new_row, active)`` is called per vertex with
+    ``inbox_row=None`` when no message arrived.  Returns (state, converged,
+    n_iters)."""
+
+    state = np.array(state0, np.float64, copy=True)
+    active = (np.ones(n, bool) if active0 is None
+              else np.asarray(active0, bool).copy())
+    e_count = len(src)
+    for j in range(iters):
+        inbox = {}
+        for e in range(e_count):
+            s = int(src[e])
+            if not active[s]:
+                continue
+            m = np.asarray(
+                msg_fn(j, state[s], None if weights is None else weights[e]),
+                np.float64,
+            )
+            d = int(dst[e])
+            inbox[d] = m if d not in inbox else combine_fn(inbox[d], m)
+        if not inbox:
+            active[:] = False
+            return state, True, j + 1
+        new_active = np.zeros(n, bool)
+        for d, acc in inbox.items():
+            fin = acc if finalize_fn is None else finalize_fn(acc)
+            new_row, act = apply_fn(j, state[d], fin, True)
+            state[d] = new_row
+            new_active[d] = act
+        active = new_active
+        if not active.any():
+            return state, True, j + 1
+    return state, False, iters
+
+
+def numpy_superstep(src, dst, weights, n, state, active, msg_fn,
+                    combine_fn, apply_fn, finalize_fn):
+    """One got-gated superstep (same semantics as :func:`numpy_pregel`),
+    returning (new_state, new_active)."""
+
+    out, _, _ = numpy_pregel(
+        src, dst, weights, n, state, msg_fn, combine_fn, apply_fn,
+        finalize_fn, iters=1, active0=active,
+    )
+    # Recompute new_active exactly: run the loop body again for the flags.
+    st = np.array(state, np.float64, copy=True)
+    inbox = {}
+    for e in range(len(src)):
+        s = int(src[e])
+        if not active[s]:
+            continue
+        m = np.asarray(
+            msg_fn(0, st[s], None if weights is None else weights[e]),
+            np.float64,
+        )
+        d = int(dst[e])
+        inbox[d] = m if d not in inbox else combine_fn(inbox[d], m)
+    new_active = np.zeros(n, bool)
+    for d, acc in inbox.items():
+        fin = acc if finalize_fn is None else finalize_fn(acc)
+        _, act = apply_fn(0, st[d], fin, True)
+        new_active[d] = act
+    return out, new_active
+
+
+# ---------------------------------------------------------------------------
+# Workloads: jax VertexProgram + the matching NumPy pieces
+# ---------------------------------------------------------------------------
+
+
+def build_workloads(n: int, dtype=None):
+    """Returns ``{name: spec}`` where spec has the jax ``prog`` (a
+    VertexProgram), ``iters``, ``weighted`` (bool: message reads edge
+    weights), plus the NumPy oracle pieces (``np_state0`` f64 [n, ...],
+    ``np_msg``, ``np_apply``, ``np_finalize``, ``combine`` name).
+
+    ``dtype`` defaults to f32; the SPMD conformance program passes f64
+    (with jax_enable_x64) so cross-shard reassociation error stays under
+    the 1e-8 bar even for logsumexp/mean.
+    """
+
+    import jax.numpy as jnp
+    from repro.core.pregel import VertexProgram
+
+    dtype = dtype or jnp.float32
+    rng = np.random.default_rng(11)
+    seeds = rng.standard_normal(n) * 3.0
+    k = TOPK_K
+
+    # -- argmin: weighted SSSP with parent pointers -------------------------
+    # state [n, 3] = (dist, parent, self id); message (dist + w, self id).
+    def sssp_init(ids, vd):
+        dist = jnp.where(ids == 0, 0.0, INF).astype(dtype)
+        return jnp.stack(
+            [dist, jnp.full((n,), -1.0, dtype), ids.astype(dtype)], axis=1
+        )
+
+    def sssp_message(j, s, ed):
+        return jnp.stack([s[:, 0] + ed, s[:, 2]], axis=1)
+
+    def sssp_apply(j, s, inbox, got):
+        better = inbox[:, 0] < s[:, 0]
+        head = jnp.where(better[:, None], inbox, s[:, :2])
+        return jnp.concatenate([head, s[:, 2:]], axis=1), better
+
+    argmin_state0 = np.stack(
+        [np.where(np.arange(n) == 0, 0.0, INF),
+         np.full(n, -1.0), np.arange(n, dtype=np.float64)], axis=1
+    )
+
+    def argmin_np_msg(j, srow, w):
+        return np.array([srow[0] + w, srow[2]])
+
+    def argmin_np_apply(j, srow, inbox, got):
+        if inbox[0] < srow[0]:
+            return np.concatenate([inbox, srow[2:]]), True
+        return srow, False
+
+    # -- topk: k largest reachable seed values ------------------------------
+    def topk_init(ids, vd):
+        base = jnp.full((n, k), -jnp.inf, dtype)
+        return base.at[:, 0].set(jnp.asarray(seeds, dtype))
+
+    def topk_merge(a, b):
+        return jnp.sort(jnp.concatenate([a, b], axis=1), axis=1)[:, ::-1][:, :k]
+
+    def topk_apply(j, s, inbox, got):
+        merged = topk_merge(s, inbox)
+        return merged, jnp.any(merged != s, axis=1)
+
+    topk_state0 = np.full((n, k), -np.inf)
+    topk_state0[:, 0] = seeds
+
+    def topk_np_apply(j, srow, inbox, got):
+        merged = np.sort(np.concatenate([srow, inbox]))[::-1][:k]
+        return merged, not np.array_equal(merged, srow)
+
+    # -- mean: label propagation (Adsorption-style averaging) ---------------
+    def mean_init(ids, vd):
+        return jnp.asarray(seeds, dtype)
+
+    def mean_message(j, s, ed):
+        return jnp.stack([s, jnp.ones_like(s)], axis=1)
+
+    def mean_apply(j, s, inbox, got):
+        return 0.5 * s + 0.5 * inbox, jnp.ones(s.shape[0], jnp.bool_)
+
+    def mean_np_finalize(acc):
+        return acc[0] / max(acc[1], 1.0)
+
+    def mean_np_apply(j, srow, inbox, got):
+        return 0.5 * srow + 0.5 * inbox, True
+
+    # -- logsumexp: log-space diffusion -------------------------------------
+    def lse_init(ids, vd):
+        return jnp.asarray(seeds, dtype)
+
+    def lse_apply(j, s, inbox, got):
+        return inbox, jnp.ones(s.shape[0], jnp.bool_)
+
+    def passthrough_np_msg(j, srow, w):
+        return srow
+
+    return {
+        "argmin_sssp": dict(
+            prog=VertexProgram(sssp_init, sssp_message, sssp_apply,
+                               combine="argmin", name="sssp-parents"),
+            iters=4 * n, weighted=True, combine="argmin",
+            np_state0=argmin_state0, np_msg=argmin_np_msg,
+            np_apply=argmin_np_apply, np_finalize=None,
+        ),
+        "topk_prop": dict(
+            prog=VertexProgram(topk_init, lambda j, s, ed: s, topk_apply,
+                               combine="topk", name="topk-prop"),
+            iters=4 * n, weighted=False, combine="topk",
+            np_state0=topk_state0, np_msg=passthrough_np_msg,
+            np_apply=topk_np_apply, np_finalize=None,
+        ),
+        "mean_labelprop": dict(
+            prog=VertexProgram(mean_init, mean_message, mean_apply,
+                               combine="mean", name="label-prop"),
+            iters=6, weighted=False, combine="mean",
+            np_state0=seeds.astype(np.float64),
+            np_msg=lambda j, srow, w: np.array([srow, 1.0]),
+            np_apply=mean_np_apply, np_finalize=mean_np_finalize,
+        ),
+        "logsumexp_diffusion": dict(
+            prog=VertexProgram(lse_init, lambda j, s, ed: s, lse_apply,
+                               combine="logsumexp", name="lse-diffusion"),
+            iters=4, weighted=False, combine="logsumexp",
+            np_state0=seeds.astype(np.float64),
+            np_msg=passthrough_np_msg,
+            np_apply=lambda j, srow, inbox, got: (inbox, True),
+            np_finalize=None,
+        ),
+    }
+
+
+def finite(x, neg=-1e30):
+    """Map -inf to a finite sentinel (in f64!) so |a - b| comparisons work
+    on topk/logsumexp states that legitimately hold -inf."""
+
+    x = np.asarray(x, np.float64)
+    return np.where(np.isneginf(x), neg, x)

@@ -1,0 +1,107 @@
+"""Unit coverage for the CI benchmark-trajectory machinery: the shared
+``repro-bench-v1`` snapshot format and the ``bench_trend`` regression gate
+(the slow smoke *run* itself happens in the CI ``bench-trend`` job)."""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import pytest
+
+from benchmarks._json import load_doc, parse_row, rows_to_doc, write_doc
+from benchmarks.bench_trend import compare, main as trend_main
+
+
+def test_parse_row_keeps_commas_in_detail():
+    assert parse_row(
+        "fig10/sssp_rho0.05,2342.1,measured: sparse cap=8192 "
+        "(6552/131072 edges) vs dense 15553us -> 6.64x"
+    ) == (
+        "fig10/sssp_rho0.05", 2342.1,
+        "measured: sparse cap=8192 (6552/131072 edges) vs dense 15553us "
+        "-> 6.64x",
+    )
+
+
+def test_parse_row_rejects_header_and_noise():
+    assert parse_row("name,us_per_call,derived") is None
+    assert parse_row("straggler: iteration 5 took 0.7s") is None
+    assert parse_row("") is None
+
+
+def test_doc_roundtrip(tmp_path):
+    rows = [("a/b", 12.5, "measured: x"), ("a/c", 0.0, "derived: y")]
+    path = str(tmp_path / "snap.json")
+    write_doc(path, rows)
+    doc = load_doc(path)
+    assert doc["schema"] == "repro-bench-v1"
+    assert doc["rows"][0] == {
+        "name": "a/b", "us_per_call": 12.5, "detail": "measured: x"}
+
+
+def test_load_doc_rejects_unknown_schema(tmp_path):
+    path = str(tmp_path / "bad.json")
+    with open(path, "w") as fh:
+        json.dump({"schema": "v0", "rows": []}, fh)
+    with pytest.raises(ValueError, match="schema"):
+        load_doc(path)
+
+
+def _doc(rows):
+    return rows_to_doc(rows)
+
+
+def test_compare_clean_and_derived_rows_ignored():
+    base = _doc([("a", 1000.0, "measured: x"), ("d", 9.0, "derived: y")])
+    pr = _doc([("a", 1500.0, "measured: x")])  # 1.5x < 2x tolerance
+    regressions, missing, improvements, _ = compare(pr, base, 2.0)
+    assert not regressions and not missing and not improvements
+
+
+def test_compare_flags_regression_beyond_tolerance_and_floor():
+    base = _doc([("a", 1000.0, "measured: x")])
+    pr = _doc([("a", 2500.0, "measured: x")])
+    regressions, _, _, _ = compare(pr, base, 2.0)
+    assert regressions == [("a", 1000.0, 2500.0)]
+
+
+def test_compare_absolute_floor_absorbs_micro_noise():
+    # 5x on a 10us row is scheduler noise, not a path regression.
+    base = _doc([("tiny", 10.0, "measured: x")])
+    pr = _doc([("tiny", 50.0, "measured: x")])
+    regressions, _, _, _ = compare(pr, base, 2.0)
+    assert not regressions
+
+
+def test_compare_flags_missing_measured_rows():
+    base = _doc([("a", 1000.0, "measured: x"), ("b", 1000.0, "measured: x")])
+    pr = _doc([("a", 1000.0, "measured: x")])
+    _, missing, _, _ = compare(pr, base, 2.0)
+    assert missing == ["b"]
+
+
+def test_trend_main_exit_codes(tmp_path):
+    base = str(tmp_path / "base.json")
+    good = str(tmp_path / "good.json")
+    bad = str(tmp_path / "bad.json")
+    write_doc(base, [("a", 1000.0, "measured: x")])
+    write_doc(good, [("a", 1100.0, "measured: x")])
+    write_doc(bad, [("a", 9000.0, "measured: x")])
+    assert trend_main([good, base]) == 0
+    assert trend_main([bad, base]) == 1
+    assert trend_main([bad, base, "--tolerance", "10"]) == 0
+    assert trend_main(["only-one-arg"]) == 2
+
+
+def test_committed_baseline_is_valid_and_nonempty():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    doc = load_doc(os.path.join(root, "BENCH_baseline.json"))
+    measured = [r for r in doc["rows"]
+                if r["us_per_call"] > 0 and r["detail"].startswith("measured")]
+    # The trajectory must not be empty: the fig10 sweep (incl. the argmin
+    # generic-monoid workload) seeds it.
+    assert len(measured) >= 20
+    names = {r["name"] for r in doc["rows"]}
+    assert any(n.startswith("fig10/sssp_parents") for n in names)

@@ -1,0 +1,435 @@
+"""Generalized aggregate algebra: registry fail-closed behavior + single-
+shard differential conformance for the four shipped monoids.
+
+Three properties are defended:
+
+1. **Fail closed at registration** — a combine that is not associative /
+   commutative / identity-absorbing (or falsely claims idempotence) raises
+   :class:`MonoidError` from ``register_monoid`` (property-tested; the
+   hypothesis shim replays deterministic samples when hypothesis is
+   absent).
+2. **Fail closed at the semi-naive rewrite** — ``delta_rewritable_rules``
+   rejects rules whose aggregate is registered but not delta-safe.
+3. **Conformance** — argmin / topk / mean / logsumexp fixpoints and
+   supersteps match independent NumPy oracles on the single-shard dense
+   AND sparse (delta-frontier) paths; the sharded mirror lives in
+   ``tests/test_spmd_monoids.py``.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import (  # noqa: F401
+        HealthCheck, given, settings, strategies as st,
+    )
+
+import jax.numpy as jnp
+
+from repro.core.monoid import (
+    CombineMonoid,
+    MonoidError,
+    check_monoid,
+    generic_segment_combine,
+    get_monoid,
+    register_monoid,
+    registered_monoids,
+)
+from repro.core import stratify
+from repro.core.physical import (
+    dense_psum_exchange,
+    fused_got_exchange,
+    scatter_combine,
+    segment_combine_sorted,
+)
+from repro.core.pregel import Graph, VertexProgram, compile_pregel
+
+from _monoid_workloads import (
+    build_workloads,
+    finite,
+    make_graph,
+    np_combines,
+    np_identity,
+    numpy_pregel,
+)
+
+N = 48
+
+
+# ---------------------------------------------------------------------------
+# Registry basics
+# ---------------------------------------------------------------------------
+
+
+def test_builtins_registered_and_lawful():
+    names = registered_monoids()
+    for required in ("sum", "max", "min", "argmin", "topk", "mean",
+                     "logsumexp"):
+        assert required in names
+    for name in names:
+        check_monoid(get_monoid(name))  # raises on violation
+
+
+def test_unknown_monoid_fails_with_registered_list():
+    with pytest.raises(MonoidError, match="registered:"):
+        get_monoid("median")
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(MonoidError, match="already registered"):
+        register_monoid(CombineMonoid(
+            "sum", combine=jnp.add, identity=0.0))
+
+
+def test_metadata_flags():
+    assert get_monoid("argmin").idempotent
+    assert get_monoid("argmin").is_delta_safe
+    for name in ("topk", "mean", "logsumexp"):
+        m = get_monoid(name)
+        assert not m.idempotent
+        assert not m.is_delta_safe, name
+    assert get_monoid("mean").kernel_op == "sum"   # rides the fast path
+    assert get_monoid("topk").kernel_op is None    # generic XLA path
+
+
+# ---------------------------------------------------------------------------
+# Fail-closed registration (property-tested)
+# ---------------------------------------------------------------------------
+
+# A family of broken combines, each violating exactly one law the checker
+# must catch.  (a+b)/2 breaks associativity; a+b with identity 1 breaks the
+# identity law; a-b breaks commutativity; sum claiming idempotence breaks
+# the idempotence check.
+_BROKEN = {
+    "non_associative": dict(
+        combine=lambda a, b: (a + b) / 2, identity=0.0),
+    "identity_violating": dict(combine=jnp.add, identity=1.0),
+    "non_commutative": dict(
+        combine=lambda a, b: a - b, identity=0.0),
+    "false_idempotence": dict(
+        combine=jnp.add, identity=0.0, idempotent=True),
+}
+
+
+@settings(deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(
+    kind=st.sampled_from(sorted(_BROKEN)),
+    width=st.integers(min_value=1, max_value=4),
+)
+def test_broken_monoids_fail_closed_at_registration(kind, width):
+    spec = dict(_BROKEN[kind])
+    spec.setdefault("idempotent", False)
+    m = CombineMonoid(
+        name=f"_broken_{kind}_{width}", width=width,
+        min_width=1, **spec,
+    )
+    with pytest.raises(MonoidError):
+        register_monoid(m)
+    assert m.name not in registered_monoids()
+
+
+@settings(deadline=None)
+@given(width=st.integers(min_value=1, max_value=6))
+def test_lawful_custom_monoid_registers_and_unregisters(width):
+    # A lawful monoid at any width registers cleanly (max is associative,
+    # commutative, idempotent, -inf-absorbing); overwrite=True keeps the
+    # replayed property examples independent.
+    m = CombineMonoid(
+        "_lawful_probe", combine=jnp.maximum, identity=float("-inf"),
+        width=width, idempotent=True,
+    )
+    register_monoid(m, overwrite=True)
+    assert get_monoid("_lawful_probe").width == width
+
+
+def test_bad_kernel_op_rejected():
+    with pytest.raises(MonoidError, match="kernel_op"):
+        register_monoid(CombineMonoid(
+            "_bad_kernel", combine=jnp.add, identity=0.0,
+            kernel_op="prod"))
+
+
+# ---------------------------------------------------------------------------
+# Fail-closed semi-naive eligibility
+# ---------------------------------------------------------------------------
+
+
+def _program_with_combine(name):
+    from repro.core.listings import pregel_program
+
+    return pregel_program(
+        udfs={"init_vertex": lambda i, d: i, "update": lambda *a: a[:2]},
+        aggregates={
+            "combine": get_monoid(name).as_aggregate(recomputable=False)
+        },
+    )
+
+
+def test_delta_rules_reject_non_delta_safe_registered_aggregate():
+    # topk / mean / logsumexp are registered but NOT delta-safe: without
+    # the Pregel executor's recomputable-inbox guarantee, L3 must keep its
+    # full (naive) read.
+    for name in ("topk", "mean", "logsumexp"):
+        eligible = stratify.delta_rewritable_rules(
+            _program_with_combine(name))
+        assert "L3" not in eligible, name
+
+
+def test_delta_rules_accept_idempotent_monoid_aggregate():
+    # argmin is idempotent (lex-min absorbs re-delivery) — delta-safe even
+    # without the recomputable-inbox guarantee.
+    assert "L3" in stratify.delta_rewritable_rules(
+        _program_with_combine("argmin"))
+
+
+def test_pregel_front_end_marks_inboxes_recomputable():
+    # Inside the Pregel plan every inbox is rebuilt per superstep, so even
+    # non-idempotent monoids license the semi-naive rewrite there.
+    for name in ("topk", "mean", "logsumexp", "argmin"):
+        prog = VertexProgram(
+            init_vertex=lambda i, d: i, message=lambda j, s, e: s,
+            apply=lambda j, s, i, g: (i, jnp.ones(1, jnp.bool_)),
+            combine=name,
+        )
+        assert "L3" in stratify.delta_rewritable_rules(prog.program()), name
+
+
+# ---------------------------------------------------------------------------
+# Combine-primitive conformance vs NumPy (segment + scatter + exchanges)
+# ---------------------------------------------------------------------------
+
+
+def _np_segment_oracle(name, vals, ids, n_seg, active=None):
+    comb = np_combines()[name]
+    out = [None] * n_seg
+    for e in range(len(ids)):
+        if active is not None and not active[e]:
+            continue
+        i = int(ids[e])
+        if not (0 <= i < n_seg):
+            continue
+        row = vals[e].astype(np.float64)
+        out[i] = row if out[i] is None else comb(out[i], row)
+    width = vals.shape[1]
+    ident = np_identity(name, width)
+    return np.stack([ident if r is None else r for r in out])
+
+
+@pytest.mark.parametrize("name,width", [
+    ("argmin", 2), ("argmin", 3), ("topk", 4), ("mean", 2),
+    ("logsumexp", 1), ("logsumexp", 3),
+])
+@pytest.mark.parametrize("masked", [False, True])
+def test_segment_and_scatter_combine_match_numpy(name, width, masked):
+    rng = np.random.default_rng(17)
+    e, n_seg = 96, 13
+    vals = (rng.standard_normal((e, width)) * 2).astype(np.float32)
+    if name == "topk":
+        vals = np.sort(vals, axis=1)[:, ::-1].copy()  # in-domain rows
+    ids = np.sort(rng.integers(0, n_seg, e)).astype(np.int32)
+    active = rng.random(e) > 0.3 if masked else None
+    ref = _np_segment_oracle(name, vals, ids, n_seg, active)
+    m = get_monoid(name)
+    ident = m.identity_slab((n_seg, width), jnp.float32)
+
+    sorted_out = segment_combine_sorted(
+        jnp.asarray(vals), jnp.asarray(ids), n_seg, name,
+        edge_active=None if active is None else jnp.asarray(active),
+    )
+    np.testing.assert_allclose(
+        finite(sorted_out), finite(ref), rtol=1e-5, atol=1e-6)
+
+    perm = rng.permutation(e)
+    scat_out = scatter_combine(
+        jnp.asarray(vals[perm]), jnp.asarray(ids[perm]), n_seg, name,
+        edge_active=None if active is None else jnp.asarray(active[perm]),
+    )
+    np.testing.assert_allclose(
+        finite(scat_out), finite(ref), rtol=1e-5, atol=1e-6)
+
+    # Empty segments read the identity row on the generic path.
+    empty = ~np.isin(np.arange(n_seg), ids[active] if masked else ids)
+    if empty.any() and m.kernel_op is None:
+        np.testing.assert_array_equal(
+            finite(np.asarray(sorted_out)[empty]),
+            finite(np.asarray(ident)[empty]))
+
+
+def test_kernels_public_wrapper_routes_generic_monoids():
+    from repro.kernels.segment_combine.ops import kernel_eligible, \
+        segment_combine
+
+    vals = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (16, 2)).astype(np.float32))
+    vals = jnp.sort(vals, axis=1)[:, ::-1]
+    ids = jnp.asarray(np.sort(np.random.default_rng(1).integers(0, 5, 16))
+                      .astype(np.int32))
+    # Generic monoids never take the Pallas kernel, even in interpret mode.
+    assert not kernel_eligible(vals, True, "topk")
+    assert not kernel_eligible(vals, True, "argmin")
+    assert kernel_eligible(vals, True, "mean")  # rides the sum fast path
+    out = segment_combine(vals, ids, 5, "topk")
+    ref = _np_segment_oracle("topk", np.asarray(vals), np.asarray(ids), 5)
+    np.testing.assert_allclose(finite(out), finite(ref), rtol=1e-5)
+
+
+@pytest.mark.parametrize("name,width", [
+    ("argmin", 2), ("topk", 3), ("mean", 2), ("logsumexp", 2),
+])
+def test_fused_got_exchange_generic_monoids(name, width):
+    rng = np.random.default_rng(23)
+    e, n = 64, 12
+    pay = (rng.standard_normal((e, width)) * 2).astype(np.float32)
+    if name == "topk":
+        pay = np.sort(pay, axis=1)[:, ::-1].copy()
+    dst = rng.integers(0, n, e).astype(np.int32)
+    valid = rng.random(e) > 0.4
+
+    ex = lambda fused: dense_psum_exchange(
+        jnp.asarray(dst), fused, n, (), name,
+        edge_mask=jnp.asarray(valid), flag_cols=1)
+    inbox, got = fused_got_exchange(
+        ex, jnp.asarray(pay), jnp.asarray(valid), name)
+    ref = _np_segment_oracle(name, pay, dst, n, active=valid)
+    got_ref = np.zeros(n, bool)
+    for i in range(e):
+        if valid[i]:
+            got_ref[dst[i]] = True
+    np.testing.assert_array_equal(np.asarray(got), got_ref)
+    np.testing.assert_allclose(
+        finite(np.asarray(inbox)[got_ref]), finite(ref[got_ref]),
+        rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Payload validation at compile
+# ---------------------------------------------------------------------------
+
+
+def test_structured_monoid_rejects_scalar_payload_at_compile():
+    src, dst, _ = make_graph(16)
+    g = Graph(16, jnp.asarray(src), jnp.asarray(dst),
+              jnp.zeros(16, jnp.float32))
+    prog = VertexProgram(
+        init_vertex=lambda ids, vd: ids.astype(jnp.float32),
+        message=lambda j, s, ed: s,            # [E] — argmin needs [E, >=2]
+        apply=lambda j, s, i, got: (i, jnp.ones(s.shape[0], jnp.bool_)),
+        combine="argmin",
+    )
+    with pytest.raises(MonoidError, match="width"):
+        compile_pregel(prog, g)
+
+
+def test_mean_rejects_wrong_width_at_compile():
+    src, dst, _ = make_graph(16)
+    g = Graph(16, jnp.asarray(src), jnp.asarray(dst),
+              jnp.zeros(16, jnp.float32))
+    prog = VertexProgram(
+        init_vertex=lambda ids, vd: ids.astype(jnp.float32),
+        message=lambda j, s, ed: jnp.stack([s, s, s], axis=1),  # width 3
+        apply=lambda j, s, i, got: (s, jnp.ones(s.shape[0], jnp.bool_)),
+        combine="mean",
+    )
+    with pytest.raises(MonoidError, match="width"):
+        compile_pregel(prog, g)
+
+
+def test_planner_records_monoid_payload_terms():
+    src, dst, w = make_graph(24)
+    g = Graph(24, jnp.asarray(src), jnp.asarray(dst),
+              jnp.zeros(24, jnp.float32),
+              edge_data=jnp.asarray(w.astype(np.float32)))
+    wl = build_workloads(24)["argmin_sssp"]
+    ex = compile_pregel(wl["prog"], g)
+    assert "combine-monoid(argmin, 8B/msg, xla-generic)" in ex.plan.notes
+    assert ex.plan.mesh is not None
+    # mean rides the sum fast path and says so.
+    g2 = Graph(24, jnp.asarray(src), jnp.asarray(dst),
+               jnp.zeros(24, jnp.float32))
+    ex2 = compile_pregel(build_workloads(24)["mean_labelprop"]["prog"], g2)
+    assert "combine-monoid(mean, 8B/msg, sum-fast-path)" in ex2.plan.notes
+
+
+# ---------------------------------------------------------------------------
+# Single-shard fixpoint + superstep conformance vs the NumPy oracles
+# ---------------------------------------------------------------------------
+
+
+def _graph_for(wl, n):
+    src, dst, w = make_graph(n)
+    edata = (jnp.asarray(w.astype(np.float32)) if wl["weighted"] else None)
+    return (
+        Graph(n, jnp.asarray(src), jnp.asarray(dst),
+              jnp.zeros(n, jnp.float32), edge_data=edata),
+        src, dst, (w if wl["weighted"] else None),
+    )
+
+
+@pytest.mark.parametrize("name", sorted(build_workloads(8)))
+@pytest.mark.parametrize("connector", ["dense_psum", "merging", "hash_sort"])
+def test_single_shard_fixpoints_match_numpy_oracle(name, connector):
+    wl = build_workloads(N)[name]
+    g, src, dst, w = _graph_for(wl, N)
+    ref, _, _ = numpy_pregel(
+        src, dst, w, N, wl["np_state0"], wl["np_msg"],
+        np_combines()[wl["combine"]], wl["np_apply"], wl["np_finalize"],
+        wl["iters"],
+    )
+    ex = compile_pregel(wl["prog"], g, force_connector=connector)
+    res = ex.run(max_iters=wl["iters"], on_device=False)
+    np.testing.assert_allclose(
+        finite(res.state[0]), finite(ref), rtol=1e-5, atol=1e-6,
+        err_msg=f"{name}/{connector}/dense")
+
+    # Delta-frontier (sparse) execution with the policy pinned on: the
+    # adaptive driver must produce the same fixpoint.
+    ex_sn = compile_pregel(wl["prog"], g, force_connector=connector,
+                           semi_naive=True)
+    ex_sn.plan = dataclasses.replace(
+        ex_sn.plan, density_threshold=0.6, sparse_cap_floor=16)
+    res_sn = ex_sn.run(max_iters=wl["iters"])
+    np.testing.assert_allclose(
+        finite(res_sn.state[0]), finite(ref), rtol=1e-5, atol=1e-6,
+        err_msg=f"{name}/{connector}/sparse")
+
+
+def test_collapsing_monoid_workloads_engage_sparse_path():
+    for name in ("argmin_sssp", "topk_prop"):
+        wl = build_workloads(N)[name]
+        g, *_ = _graph_for(wl, N)
+        ex = compile_pregel(wl["prog"], g, semi_naive=True)
+        ex.plan = dataclasses.replace(
+            ex.plan, density_threshold=0.6, sparse_cap_floor=16)
+        res = ex.run(max_iters=wl["iters"])
+        assert res.converged, name
+        assert any(m.startswith("sparse@") for m in res.modes), name
+
+
+def test_mean_finalize_reaches_apply():
+    # The apply UDF must see sum/count already divided: a mean inbox of a
+    # constant-label graph is that constant, so one superstep keeps every
+    # label exactly (0.5 * c + 0.5 * c == c).
+    wl = build_workloads(N)["mean_labelprop"]
+    src, dst, _ = make_graph(N)
+    g = Graph(N, jnp.asarray(src), jnp.asarray(dst),
+              jnp.zeros(N, jnp.float32))
+    prog = dataclasses.replace(
+        wl["prog"],
+        init_vertex=lambda ids, vd: jnp.full((N,), 2.5, jnp.float32))
+    ex = compile_pregel(prog, g)
+    state, active = ex.jitted_superstep(ex.init(), jnp.int32(0))
+    np.testing.assert_allclose(np.asarray(state), 2.5, rtol=1e-6)
+
+
+def test_generic_segment_combine_zero_rows():
+    m = get_monoid("argmin")
+    out = generic_segment_combine(
+        jnp.zeros((0, 2), jnp.float32), jnp.zeros((0,), jnp.int32), 4, m)
+    assert out.shape == (4, 2)
+    np.testing.assert_array_equal(
+        finite(out), finite(np.asarray(m.identity_slab((4, 2),
+                                                       jnp.float32))))

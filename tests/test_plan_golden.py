@@ -151,6 +151,51 @@ def test_pregel_weighted_payload_shifts_threshold_ladder():
     assert thresholds == {2: 0.0625, 8: 0.015625, 16: 0.00390625}
 
 
+MONOID_STATS = dataclasses.replace(PREGEL_STATS, msg_bytes=8,
+                                   combine="argmin")
+
+# Generic-monoid aggregates (no psum-scatter fast path): the dense
+# connector pays an all-gather, which flips the sharded choice to the
+# sparse hash_sort plan; the monoid's payload-width term is recorded right
+# after the connector note.
+PREGEL_MONOID_GOLDEN = {
+    ("1way", False): _PREGEL_BASE + (
+        "combine-monoid(argmin, 8B/msg, xla-generic)",
+    ),
+    ("1way", True): _PREGEL_BASE + (
+        "combine-monoid(argmin, 8B/msg, xla-generic)",
+        "semi-naive(adaptive dense<->sparse @ density 0.5)",
+    ),
+    ("4way", False): _PREGEL_BASE[:-1] + (
+        "connector(hash_sort)",
+        "combine-monoid(argmin, 8B/msg, xla-generic)",
+    ),
+    ("4way", True): _PREGEL_BASE[:-1] + (
+        "connector(hash_sort)",
+        "combine-monoid(argmin, 8B/msg, xla-generic)",
+        "sharded-delta(per-shard compaction, bucket-a2a x4, "
+        "collective mode-agreement)",
+        "semi-naive(adaptive dense<->sparse @ density 0)",
+    ),
+}
+
+
+def test_pregel_monoid_plan_notes_golden():
+    for (mesh_name, semi_naive), want in PREGEL_MONOID_GOLDEN.items():
+        plan = plan_pregel(MONOID_STATS, MESHES[mesh_name],
+                           semi_naive=semi_naive)
+        assert plan.notes == want, (mesh_name, semi_naive, plan.notes)
+
+
+def test_pregel_fast_path_monoid_keeps_psum_connector():
+    # mean rides the sum fast path: no all-gather penalty, dense_psum
+    # stays the 4-way winner, and the note records the ridden path.
+    stats = dataclasses.replace(PREGEL_STATS, msg_bytes=8, combine="mean")
+    plan = plan_pregel(stats, MESHES["4way"])
+    assert plan.connector == "dense_psum"
+    assert "combine-monoid(mean, 8B/msg, sum-fast-path)" in plan.notes
+
+
 def test_pregel_sparse_cap_floor_scales_down_for_small_shards():
     """The planner-derived per-shard compaction capacity: capped at 64 for
     production slabs, but no more than a quarter of a small local slab so

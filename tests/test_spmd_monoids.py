@@ -1,0 +1,61 @@
+"""Sharded generalized-aggregate differential conformance (subprocess:
+needs 8 fake devices while the main pytest process must keep seeing 1 —
+same contract as test_spmd.py).
+
+The subprocess (spmd_monoid_program.py) runs the four generalized
+aggregates — argmin / topk / mean / logsumexp — through sharded dense AND
+sharded sparse (delta-frontier) execution across all three Fig.-9
+connectors, in float64, and compares fixpoints and pinned-frontier
+supersteps against independent NumPy oracles; these tests assert on its
+JSON report with the 1e-8 acceptance bar.
+"""
+
+import pytest
+
+from _spmd_subprocess import run_spmd_program
+
+WORKLOADS = ("argmin_sssp", "topk_prop", "mean_labelprop",
+             "logsumexp_diffusion")
+CONNECTORS = ("dense_psum", "merging", "hash_sort")
+
+
+@pytest.fixture(scope="module")
+def monoid_results():
+    return run_spmd_program("spmd_monoid_program.py")
+
+
+def test_sharded_fixpoints_match_numpy_oracle(monoid_results):
+    errs = monoid_results["fixpoint_errs"]
+    for name in WORKLOADS:
+        for conn in CONNECTORS:
+            for path in ("dense", "sparse"):
+                key = f"{name}/{conn}/{path}"
+                assert key in errs
+                assert errs[key] <= 1e-8, (key, errs[key])
+
+
+def test_sharded_supersteps_match_numpy_oracle(monoid_results):
+    errs = monoid_results["superstep_errs"]
+    for name in WORKLOADS:
+        for conn in CONNECTORS:
+            for path in ("dense", "sparse"):
+                key = f"{name}/{conn}/{path}"
+                assert key in errs
+                assert errs[key] <= 1e-8, (key, errs[key])
+
+
+def test_collapsing_monoid_workloads_go_sparse_in_lockstep(monoid_results):
+    engaged = monoid_results["sparse_engaged"]
+    for conn in CONNECTORS:
+        # Collapsing frontiers (argmin SSSP, topk saturation) must actually
+        # exercise the compacted path...
+        assert engaged[f"argmin_sssp/{conn}"], conn
+        assert engaged[f"topk_prop/{conn}"], conn
+        # ...while always-active workloads stay dense in SPMD lockstep.
+        assert not engaged[f"mean_labelprop/{conn}"], conn
+        assert not engaged[f"logsumexp_diffusion/{conn}"], conn
+
+
+def test_convergence_verdicts_agree_with_oracle(monoid_results):
+    assert all(monoid_results["convergence_agrees"].values()), \
+        monoid_results["convergence_agrees"]
