@@ -28,16 +28,18 @@ def _modules(smoke: bool):
         fig8_pagerank_speedup,
         fig9_connector_plans,
         fig10_semi_naive,
+        fig11_generic_engine,
         table1_pagerank_scaleup,
         roofline,
         microbench,
     )
 
     if smoke:
-        return (fig10_semi_naive, fig9_connector_plans, roofline)
+        return (fig10_semi_naive, fig11_generic_engine,
+                fig9_connector_plans, roofline)
     return (fig6_bgd_speedup, fig7_bgd_scaleup, fig8_pagerank_speedup,
             table1_pagerank_scaleup, fig9_connector_plans,
-            fig10_semi_naive, microbench, roofline)
+            fig10_semi_naive, fig11_generic_engine, microbench, roofline)
 
 
 def main(argv=None) -> int:

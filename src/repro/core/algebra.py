@@ -22,9 +22,15 @@ construction the paper references [Ramakrishnan & Ullman 1993]:
   "Storage Selection" optimization (the B-tree "avoids the logical max
   aggregation in Figure 3").
 
-The output :class:`LogicalPlan` is consumed by :mod:`repro.core.planner`.
-Golden tests assert that translating Listings 1/2 reproduces the operator
-structure of the paper's Figures 2 and 3.
+The output :class:`LogicalPlan` is consumed by :mod:`repro.core.planner`
+and — since the unified-executor refactor — **executed** by
+:mod:`repro.core.executor`: ``compile_program`` interprets this DAG
+per-stratum on the dense-grid backend, so the logical plan is the actual
+execution contract rather than a decorative artifact.  Golden tests assert
+that translating Listings 1/2 reproduces the operator structure of the
+paper's Figures 2 and 3, and pin the operator skeletons of the generic
+example programs (transitive closure, connected components, the
+multi-stratum pipeline).
 """
 
 from __future__ import annotations

@@ -55,6 +55,9 @@ class FixpointResult:
     # Per-iteration execution mode labels when an adaptive step selector ran
     # ("dense" / "sparse@<cap>"); empty otherwise.
     modes: Tuple[str, ...] = ()
+    # Multi-stratum programs (the generic executor): iterations spent in each
+    # sequential fixpoint phase, in phase order; empty for single-loop runs.
+    phase_iterations: Tuple[int, ...] = ()
 
 
 def device_fixpoint(

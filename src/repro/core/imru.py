@@ -20,8 +20,10 @@ Compilation pipeline (the paper's Figure 1 stack, end to end):
 3. the algebra translator produces the Figure-2 logical plan;
 4. the planner lowers it to an :class:`IMRUPhysicalPlan` for the target mesh
    (reduce-schedule selection, caching, microbatching);
-5. this module materializes that plan as jitted JAX: a ``shard_map`` step
-   with the planned collective schedule, wrapped in a fixpoint driver.
+5. the unified executor (:func:`repro.core.executor.build_imru_step`)
+   materializes that plan as jitted JAX: a ``shard_map`` step with the
+   planned collective schedule, wrapped in a fixpoint driver.  This module
+   is the thin front-end: UDF binding, statistics, planning.
 
 Convergence is rule G3's ``M != NewM`` test: the fixpoint is reached when
 ``update`` returns the model unchanged (to within ``tol``).
@@ -29,18 +31,17 @@ Convergence is rule G3's ``M != NewM`` test: the fixpoint is reached when
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional, Sequence, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core import algebra, stratify
 from repro.core.datalog import Aggregate, Program
+from repro.core.executor import build_imru_step
 from repro.core.fixpoint import (
     DriverConfig,
     FixpointResult,
@@ -49,7 +50,6 @@ from repro.core.fixpoint import (
 )
 from repro.core.hardware import MeshSpec, TPU_V5E, HardwareSpec
 from repro.core.listings import imru_program
-from repro.core.physical import reduce_tree
 from repro.core.planner import IMRUPhysicalPlan, IMRUStats, plan_imru
 
 __all__ = ["IMRUTask", "IMRUExecutable", "compile_imru", "tree_sum_aggregate"]
@@ -144,14 +144,6 @@ class IMRUExecutable:
         )
 
 
-def _shard_records(records: Any, mesh: Mesh, batch_axes: Tuple[str, ...]):
-    spec = P(batch_axes if batch_axes else None)
-    return jax.device_put(
-        records,
-        NamedSharding(mesh, spec),
-    ) if mesh is not None else records
-
-
 def compile_imru(
     task: IMRUTask,
     records: Any,
@@ -210,79 +202,9 @@ def compile_imru(
         force_reduce=force_reduce, codec=codec, microbatches=microbatches,
     )
 
-    # (5): materialize the physical plan as a jitted step.
-    reduce_sched = plan.reduce
-    data_axes = tuple(a for a in ("data",) if mesh_spec.size(a) > 1) or ("data",)
-    n_mb = plan.microbatches
-
-    def local_partial(records_shard: Any, model: Any) -> Any:
-        """map + sender-side early aggregation over the local shard, with
-        optional microbatching (Fig. 5 O5+O6)."""
-
-        if n_mb <= 1:
-            return task.map(records_shard, model)
-        leaves0 = jax.tree_util.tree_leaves(records_shard)
-        n_local = leaves0[0].shape[0]
-        mb = max(1, n_local // n_mb)
-
-        def body(acc, i):
-            batch = jax.tree_util.tree_map(
-                lambda x: lax.dynamic_slice_in_dim(x, i * mb, mb, 0),
-                records_shard,
-            )
-            stat = task.map(batch, model)
-            acc = jax.tree_util.tree_map(jnp.add, acc, stat)
-            return acc, None
-
-        zero_stat = jax.tree_util.tree_map(
-            jnp.zeros_like,
-            jax.eval_shape(
-                lambda: task.map(
-                    jax.tree_util.tree_map(lambda x: x[:mb], records_shard),
-                    model,
-                )
-            ),
-        )
-        acc, _ = lax.scan(body, zero_stat, jnp.arange(n_local // mb))
-        return acc
-
-    if mesh is not None and any(
-        mesh.shape.get(a, 1) > 1 for a in ("pod", "data")
-    ):
-        batch_axes = tuple(
-            a for a in ("pod", "data") if mesh.shape.get(a, 1) > 1
-        )
-        records = _shard_records(records, mesh, batch_axes)
-
-        from jax.experimental.shard_map import shard_map
-
-        in_specs = (
-            jax.tree_util.tree_map(lambda _: P(batch_axes), records),
-            P(),  # model replicated
-            P(),  # j replicated
-        )
-
-        def sharded_step(records_shard, model, j):
-            partial = local_partial(records_shard, model)
-            total = reduce_tree(
-                partial, reduce_sched,
-                data_axes=tuple(a for a in ("data",) if a in batch_axes),
-                pod_axis="pod",
-            )
-            return task.update(j, model, total)
-
-        step_inner = shard_map(
-            sharded_step, mesh=mesh,
-            in_specs=in_specs, out_specs=P(),
-            check_rep=False,
-        )
-        step = jax.jit(lambda model, j: step_inner(records, model, j))
-    else:
-        def step_fn(model, j):
-            partial = local_partial(records, model)
-            return task.update(j, model, partial)
-
-        step = jax.jit(step_fn)
+    # (5): the unified executor materializes the planned step (map +
+    # early aggregation + planned reduce schedule + update).
+    step, records = build_imru_step(task, records, plan, mesh, mesh_spec)
 
     return IMRUExecutable(
         task=task,

@@ -29,7 +29,15 @@ from repro.core.datalog import (
     fresh_var,
 )
 
-__all__ = ["pregel_program", "imru_program", "ACTIVATION_MSG"]
+__all__ = [
+    "pregel_program",
+    "imru_program",
+    "transitive_closure_program",
+    "connected_components_program",
+    "same_generation_program",
+    "pagerank_threshold_program",
+    "ACTIVATION_MSG",
+]
 
 ACTIVATION_MSG = "__ACTIVATION__"
 
@@ -207,4 +215,180 @@ def imru_program(
         udfs=registry,
         aggregates=aggs,
         name="imru",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Generic recursive programs for the unified executor
+# ---------------------------------------------------------------------------
+#
+# The workloads the related Datalog systems target (BigDatalog's TC / SG,
+# Myria/SociaLite's CC, and aggregates-in-recursion pipelines): arbitrary
+# XY-stratified programs the two listing front-ends cannot express, executed
+# by :func:`repro.core.executor.compile_program` on the dense-grid backend.
+# Aggregates resolve through the CombineMonoid registry, so their
+# delta-safety metadata (min/max idempotent, sum not) feeds the semi-naive
+# rewrite exactly as in the listing programs.
+
+
+def _monoid_aggregate(name: str) -> Aggregate:
+    from repro.core.monoid import get_monoid
+
+    return get_monoid(name).as_aggregate()
+
+
+def transitive_closure_program() -> Program:
+    """Transitive closure over ``edge(X, Y)``.
+
+    * T1  tc(0, X, Y)   :- edge(X, Y).
+    * T2  tc(J+1, X, Y) :- tc(J, X, Z), edge(Z, Y).
+    * T3  tc(J+1, X, Y) :- tc(J, X, Y).              (facts persist)
+
+    Fixpoint when T2 derives nothing new (tc stops growing).
+    """
+
+    J, Jp1, J0 = TempVar("J"), TempSucc("J"), TempZero()
+    X, Y, Z = Var("X"), Var("Y"), Var("Z")
+    rules = (
+        Rule(Atom("tc", (J0, X, Y), temporal=True),
+             (Atom("edge", (X, Y)),), label="T1"),
+        Rule(Atom("tc", (Jp1, X, Y), temporal=True),
+             (Atom("tc", (J, X, Z), temporal=True), Atom("edge", (Z, Y))),
+             label="T2"),
+        Rule(Atom("tc", (Jp1, X, Y), temporal=True),
+             (Atom("tc", (J, X, Y), temporal=True),), label="T3"),
+    )
+    return Program(rules=rules, edb={"edge": 2}, name="transitive-closure")
+
+
+def connected_components_program() -> Program:
+    """Connected components by min-label propagation over ``edge``/``node``.
+
+    * C1  cc(0, X, L)        :- node(X, L).           (own label, L = id)
+    * C2  cc(J+1, X, min<L>) :- cc(J, Y, L), edge(Y, X).
+    * C3  cc(J+1, X, L)      :- cc(J, X, L).          (keep own label)
+
+    The ``min`` aggregate is idempotent, so C2 is delta-rewritable: under
+    ``semi_naive=True`` it reads only the labels that changed last
+    iteration (the classic semi-naive CC evaluation).
+    """
+
+    J, Jp1, J0 = TempVar("J"), TempSucc("J"), TempZero()
+    X, Y, L = Var("X"), Var("Y"), Var("L")
+    rules = (
+        Rule(Atom("cc", (J0, X, L), temporal=True),
+             (Atom("node", (X, L)),), label="C1"),
+        Rule(Atom("cc", (Jp1, X, AggExpr("min", L)), temporal=True),
+             (Atom("cc", (J, Y, L), temporal=True), Atom("edge", (Y, X))),
+             label="C2"),
+        Rule(Atom("cc", (Jp1, X, L), temporal=True),
+             (Atom("cc", (J, X, L), temporal=True),), label="C3"),
+    )
+    return Program(
+        rules=rules, edb={"edge": 2, "node": 2},
+        aggregates={"min": _monoid_aggregate("min")},
+        name="connected-components",
+    )
+
+
+def same_generation_program() -> Program:
+    """Same-generation over ``parent(P, C)`` — the classic mutually-joined
+    recursion (two recursive-adjacent joins per derivation).
+
+    * S1  sg(0, X, Y)   :- parent(P, X), parent(P, Y).       (siblings)
+    * S2  sg(J+1, X, Y) :- parent(P, X), sg(J, P, Q), parent(Q, Y).
+    * S3  sg(J+1, X, Y) :- sg(J, X, Y).
+    """
+
+    J, Jp1, J0 = TempVar("J"), TempSucc("J"), TempZero()
+    X, Y, Pp, Q = Var("X"), Var("Y"), Var("P"), Var("Q")
+    rules = (
+        Rule(Atom("sg", (J0, X, Y), temporal=True),
+             (Atom("parent", (Pp, X)), Atom("parent", (Pp, Y))), label="S1"),
+        Rule(Atom("sg", (Jp1, X, Y), temporal=True),
+             (Atom("parent", (Pp, X)),
+              Atom("sg", (J, Pp, Q), temporal=True),
+              Atom("parent", (Q, Y))),
+             label="S2"),
+        Rule(Atom("sg", (Jp1, X, Y), temporal=True),
+             (Atom("sg", (J, X, Y), temporal=True),), label="S3"),
+    )
+    return Program(rules=rules, edb={"parent": 2}, name="same-generation")
+
+
+def pagerank_threshold_program(
+    damping: float = 0.85, tau: float = 0.001
+) -> Program:
+    """A sequential multi-stratum pipeline no listing front-end can express:
+    a PageRank fixpoint, a threshold selection over its *converged* result,
+    and a second reachability fixpoint seeded from the hot vertices.
+
+    Phase 1 (PageRank over ``edge`` and ``node(X, R0, D, B)`` — initial
+    rank, out-degree, base rank):
+
+    * P1  rank(0, X, R)        :- node(X, R, _, _).
+    * P2  rank(J+1, X, sum<C>) :- rank(J, Y, R), node(Y, _, D, _),
+                                  edge(Y, X), scale(R, D, C).
+    * P3  rank(J+1, X, B)      :- rank(J, X, _), node(X, _, _, B).
+
+    (P2 and P3 union under the ``sum`` monoid: damped in-rank plus base.)
+
+    Post-stratum over the converged ranks (frontier view, L4/L5-style):
+
+    * P4  rankF(X, R)          :- rank(J, X, R).         [frontier]
+    * P5  hot(X)               :- rankF(X, R), R > tau.
+
+    Phase 2 (reachability through hot vertices — runs only after phase 1
+    converged, because ``hot`` reads rank's final frontier):
+
+    * H1  reach(0, X)          :- hot(X).
+    * H2  reach(J+1, Y)        :- reach(J, X), edge(X, Y), hot(Y).
+    * H3  reach(J+1, X)        :- reach(J, X).
+    """
+
+    import jax.numpy as jnp
+
+    J, Jp1, J0 = TempVar("J"), TempSucc("J"), TempZero()
+    X, Y, R, D, C, B = (Var("X"), Var("Y"), Var("R"), Var("D"), Var("C"),
+                        Var("B"))
+    rules = (
+        Rule(Atom("rank", (J0, X, R), temporal=True),
+             (Atom("node", (X, R, fresh_var(), fresh_var())),), label="P1"),
+        Rule(Atom("rank", (Jp1, X, AggExpr("sum", C)), temporal=True),
+             (Atom("rank", (J, Y, R), temporal=True),
+              Atom("node", (Y, fresh_var(), D, fresh_var())),
+              Atom("edge", (Y, X)),
+              FunctionAtom("scale", (R, D, C), n_in=2)),
+             label="P2"),
+        Rule(Atom("rank", (Jp1, X, B), temporal=True),
+             (Atom("rank", (J, X, fresh_var()), temporal=True),
+              Atom("node", (X, fresh_var(), fresh_var(), B))),
+             label="P3"),
+        Rule(Atom("rankF", (X, R)),
+             (Atom("rank", (J, X, R), temporal=True),),
+             label="P4", frontier=True),
+        Rule(Atom("hot", (X,)),
+             (Atom("rankF", (X, R)), Comparison(">", R, Const(tau))),
+             label="P5"),
+        Rule(Atom("reach", (J0, X), temporal=True),
+             (Atom("hot", (X,)),), label="H1"),
+        Rule(Atom("reach", (Jp1, Y), temporal=True),
+             (Atom("reach", (J, X), temporal=True),
+              Atom("edge", (X, Y)),
+              Atom("hot", (Y,))),
+             label="H2"),
+        Rule(Atom("reach", (Jp1, X), temporal=True),
+             (Atom("reach", (J, X), temporal=True),), label="H3"),
+    )
+    scale = UDF(
+        "scale",
+        lambda r, d: (damping * r / jnp.maximum(d, 1.0),),
+        n_in=2, n_out=1,
+    )
+    return Program(
+        rules=rules,
+        edb={"edge": 2, "node": 4},
+        udfs={"scale": scale},
+        aggregates={"sum": _monoid_aggregate("sum")},
+        name="pagerank-threshold",
     )

@@ -25,6 +25,11 @@ Contents:
 * **Group-by / combine** primitives — sorted segment reduce and scatter-add,
   the two receiver-side grouping algorithms of Fig. 9.
 * **Index join** (Fig. 4 O7) — gather on dense vertex ids (the B-tree probe).
+
+Consumers: the unified executor (:mod:`repro.core.executor`) assembles
+these operators into both the Listing-1/2 fast-path pipelines
+(``build_pregel_steps`` / ``build_imru_step``) and the generic dense-grid
+GroupBy lowering (``segment_combine_sorted`` under the monoid registry).
 """
 
 from __future__ import annotations

@@ -18,17 +18,16 @@ partitioned by source vertex so messages are computed from purely local
 state (loop-invariant caching: topology never moves — §5.2's
 order-of-magnitude argument vs Hadoop).  Optional per-edge attributes
 (``Graph.edge_data``, any pytree with leading dim E — weights, labels,
-feature rows) ride along on every layout: on sharded meshes each leaf is
-partitioned into the same padded per-shard edge slabs as ``src``/``dst``
-(edge-slab partitioning), so both the dense ``shard_map`` superstep and the
-frontier-compacted sparse superstep hand the message UDF shard-local edge
-attributes, gathered by the same (compacted) indices as the endpoints.
+feature rows) ride along on every layout.
 
-The per-superstep dataflow materializes Figure 4:
-
-  frontier state ──gather(src)──> message UDF ──[sender combine O15]──>
-  connector (psum_scatter | merging a2a | hash+sort a2a) ──> inbox (O14)
-  ──index-join(O7)──> apply UDF (O8) ──> masked in-place state update (O10)
+This module is a **thin front-end**: it binds the UDFs into the Listing-1
+Datalog program, probes the workload statistics, and cost-plans the physical
+strategy; the superstep pipeline itself — the Fig.-4 dataflow, the sharded
+edge-slab partitioning, the frontier-compacted sparse variants — is
+materialized by the unified executor
+(:func:`repro.core.executor.build_pregel_steps`), the same engine that runs
+arbitrary XY-stratified programs through
+:func:`repro.core.executor.compile_program`.
 
 Supersteps run to the Appendix-B.2 fixpoint: no active vertices.
 """
@@ -41,11 +40,11 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core import algebra, stratify
 from repro.core.datalog import Program
+from repro.core.executor import build_pregel_steps
 from repro.core.fixpoint import (
     DriverConfig,
     FixpointResult,
@@ -55,17 +54,7 @@ from repro.core.fixpoint import (
 from repro.core.hardware import MeshSpec, TPU_V5E, HardwareSpec
 from repro.core.listings import pregel_program
 from repro.core.monoid import get_monoid
-from repro.core.physical import (
-    compact_active_edges,
-    dense_psum_exchange,
-    fused_got_exchange,
-    hash_sort_exchange,
-    merging_exchange,
-    scatter_combine,
-    segment_combine_sorted,
-    sparse_hash_sort_exchange,
-    sparse_merging_exchange,
-)
+from repro.core.physical import scatter_combine
 from repro.core.planner import PregelPhysicalPlan, PregelStats, plan_pregel
 
 __all__ = ["Graph", "VertexProgram", "PregelExecutable", "compile_pregel"]
@@ -90,71 +79,6 @@ class Graph:
             jnp.ones_like(self.src, dtype=jnp.float32),
             self.src, self.n_vertices, "sum",
         )
-
-
-def _compact_and_gather(prog: "VertexProgram", j, state, active, src, dst,
-                        cap: int, *, pad=None, edge_data=None):
-    """Shared sparse-superstep prologue: mask the edge slab by source
-    activity (and padding, on sharded slabs), compact the frontier into
-    ``cap`` slots, gather the compacted endpoints/state/edge-data, and run
-    the message UDF.  Returns ``(dst_c, payload, valid)`` for the exchange.
-    Empty slots carry a clamped in-range index (their payload is computed
-    from real state but excluded everywhere via ``valid``)."""
-
-    if src.shape[0] == 0:
-        # Zero-edge slab (an edgeless graph, or a mesh with more shards than
-        # edges): the clamp below would wrap ``src.shape[0] - 1`` to -1 and
-        # silently gather the *last* edge.  Synthesize one inert padding
-        # edge instead so every downstream gather has a real row; it is
-        # masked off via ``pad``, so the slab compacts to all-invalid slots
-        # and the exchange drops everything it produces.
-        src = jnp.zeros((1,), jnp.int32)
-        dst = jnp.zeros((1,), jnp.int32)
-        pad = jnp.ones((1,), jnp.bool_)
-        edge_data = jax.tree_util.tree_map(
-            lambda e: jnp.zeros((1,) + e.shape[1:], e.dtype), edge_data
-        )
-    mask = jnp.take(active, src, axis=0)
-    if pad is not None:
-        mask = jnp.logical_and(mask, jnp.logical_not(pad))
-    idx, valid = compact_active_edges(mask, cap)
-    idx_c = jnp.minimum(idx, src.shape[0] - 1)
-    src_c = jnp.take(src, idx_c)
-    dst_c = jnp.take(dst, idx_c)
-    edata_c = (
-        None if edge_data is None else jax.tree_util.tree_map(
-            lambda e: jnp.take(e, idx_c, axis=0), edge_data
-        )
-    )
-    src_state = jax.tree_util.tree_map(
-        lambda s: jnp.take(s, src_c, axis=0), state
-    )
-    payload = prog.message(j, src_state, edata_c)
-    return dst_c, payload, valid
-
-
-def _apply_and_merge(prog: "VertexProgram", j, state, inbox, got):
-    """Shared superstep epilogue (O8..O10 + L7): run the apply UDF, keep the
-    old state wherever no message arrived, and halt those vertices.  Every
-    superstep variant — dense/sparse, single-shard/sharded — must share this
-    exact merge semantics or the execution strategies diverge.
-
-    Monoids with a ``finalize`` (mean: (sum, count) -> sum/count) have it
-    applied to the combined inbox HERE — the one seam every superstep
-    variant shares — so the apply UDF always sees finalized values no
-    matter which execution strategy produced the accumulator."""
-
-    monoid = get_monoid(prog.combine)
-    if monoid.finalize is not None:
-        inbox = monoid.finalize(inbox)
-    new_state, new_active = prog.apply(j, state, inbox, got)
-    merged = jax.tree_util.tree_map(
-        lambda old, new: jnp.where(
-            got.reshape((-1,) + (1,) * (new.ndim - 1)), new, old
-        ),
-        state, new_state,
-    )
-    return merged, jnp.logical_and(new_active, got)
 
 
 @dataclass
@@ -191,11 +115,10 @@ class PregelExecutable:
     semi_naive: bool = False
     # Sparse (delta-frontier) execution runs on every edge layout: the
     # single-shard slab, and sharded meshes via per-shard compaction under
-    # ``shard_map`` (``sparse_step_factory``).
+    # ``shard_map``.  The factory builds the jitted frontier-compacted
+    # superstep for a given static capacity (see
+    # :func:`repro.core.executor.build_pregel_steps`).
     supports_sparse: bool = True
-    # Sharded meshes: builds the jitted frontier-compacted superstep for a
-    # given static per-shard capacity (set by ``compile_pregel``; None on
-    # the single-shard layout, which uses ``_make_sparse_step``).
     sparse_step_factory: Optional[Callable[[int], Callable]] = field(
         default=None, repr=False
     )
@@ -261,47 +184,23 @@ class PregelExecutable:
             return np.asarray([self.active_edge_count(active)])
         return np.asarray(self.shard_count_fn(active))
 
-    def _make_sparse_step(self, cap: int) -> Callable:
-        """Frontier-compacted superstep: all edge-proportional work (gather,
-        message UDF, combine, exchange) runs over a ``cap``-sized compacted
-        slab of the active edges instead of all E edges."""
-
-        g, prog, op = self.graph, self.prog, self.prog.combine
-        sparse_ex = _SPARSE_EXCHANGES.get(self.plan.connector)
-
-        def step(carry, j):
-            state, active = carry
-            dst_c, payload, valid = _compact_and_gather(
-                prog, j, state, active, g.src, g.dst, cap,
-                edge_data=g.edge_data,
-            )
-            if sparse_ex is None:
-                ex = lambda fused: dense_psum_exchange(
-                    dst_c, fused, g.n_vertices, (), op, edge_mask=valid,
-                    flag_cols=1,
-                )
-            else:
-                ex = lambda fused: sparse_ex(
-                    dst_c, fused, valid, g.n_vertices, (), op, flag_cols=1
-                )
-            inbox, got = fused_got_exchange(ex, payload, valid, op)
-            return _apply_and_merge(prog, j, state, inbox, got)
-
-        return step
-
     def sparse_superstep(self, cap: int) -> Callable:
         """Jitted frontier-compacted superstep for a given static capacity
         (cached per capacity — the adaptive driver walks a power-of-two
-        ladder, so only O(log E) variants ever compile).  On sharded meshes
-        the variant comes from ``sparse_step_factory`` (per-shard compaction
-        under ``shard_map``)."""
+        ladder, so only O(log E) variants ever compile).  The variant comes
+        from the executor's ``sparse_step_factory`` (per-shard compaction
+        under ``shard_map`` on meshes, the plain compacted slab otherwise).
+        """
 
         fn = self._sparse_steps.get(cap)
         if fn is None:
-            if self.sparse_step_factory is not None:
-                fn = self.sparse_step_factory(cap)
-            else:
-                fn = jax.jit(self._make_sparse_step(cap))
+            if self.sparse_step_factory is None:
+                raise ValueError(
+                    "PregelExecutable has no sparse_step_factory — build "
+                    "it through compile_pregel (executor.build_pregel_steps"
+                    " supplies the factory on every layout)"
+                )
+            fn = self.sparse_step_factory(cap)
             self._sparse_steps[cap] = fn
         return fn
 
@@ -423,20 +322,6 @@ class PregelExecutable:
         )
 
 
-_EXCHANGES = {
-    "dense_psum": dense_psum_exchange,
-    "merging": merging_exchange,
-    "hash_sort": hash_sort_exchange,
-}
-
-# Frontier-compacted connector variants (dense_psum has no sparse variant:
-# its masked path keeps the N-sized psum but runs edge work on the slab).
-_SPARSE_EXCHANGES = {
-    "merging": sparse_merging_exchange,
-    "hash_sort": sparse_hash_sort_exchange,
-}
-
-
 def compile_pregel(
     prog: VertexProgram,
     graph: Graph,
@@ -549,239 +434,22 @@ def compile_pregel(
         stats, mesh_spec, hw, force_connector=force_connector,
         semi_naive=semi_naive, extra_notes=sn_notes,
     )
-    connector = _EXCHANGES[plan.connector]
-    op = prog.combine
 
-    batch_axes = tuple(
-        a for a in ("pod", "data")
-        if mesh is not None and mesh.shape.get(a, 1) > 1
-    )
-
-    def local_superstep(state_shard, active_shard, src_l, dst_l,
-                        edata_l, vdata_l, base, j):
-        """One superstep on a shard (Fig. 4's O7..O15 pipeline).
-
-        ``src_l`` holds *local* source indices (edges partitioned by owner
-        of the source vertex); ``dst_l`` holds global destination ids.
-        """
-
-        # O7 index join: probe source state by gather (B-tree probe).
-        src_state = jax.tree_util.tree_map(
-            lambda s: jnp.take(s, src_l, axis=0), state_shard
-        )
-        src_active = jnp.take(active_shard, src_l, axis=0)
-        payload = prog.message(j, src_state, edata_l)
-        # Vote-to-halt: inactive sources contribute the combine identity
-        # (a per-column identity row for structured monoids like argmin).
-        payload = jnp.where(
-            src_active.reshape((-1,) + (1,) * (payload.ndim - 1)),
-            payload,
-            get_monoid(op).identity_like(payload),
-        )
-        # O15 sender combine + connector + O14 receiver combine.
-        inbox = connector(dst_l, payload, graph.n_vertices, batch_axes, op)
-        got_msg = connector(
-            dst_l,
-            jnp.where(src_active, 1.0, 0.0),
-            graph.n_vertices, batch_axes, "sum",
-        ) > 0
-        # O8 apply + O9/O10 masked in-place state update (non-null check L7):
-        # vertices with no inbound messages keep their state and stay halted.
-        return _apply_and_merge(prog, j, state_shard, inbox, got_msg)
-
-    if mesh is not None and batch_axes:
-        from jax.experimental.shard_map import shard_map
-
-        n_shards = int(np.prod([mesh.shape[a] for a in batch_axes]))
-        if graph.n_vertices % n_shards:
-            raise ValueError("n_vertices must divide the data shards")
-        n_local = graph.n_vertices // n_shards
-
-        # Partition edges by source-owner shard with equal (padded) counts.
-        owner = np.asarray(graph.src) // n_local
-        order = np.argsort(owner, kind="stable")
-        counts = np.bincount(owner, minlength=n_shards)
-        slab_cap = int(counts.max())
-        src_p = np.full((n_shards, slab_cap), 0, np.int32)
-        dst_p = np.full((n_shards, slab_cap), -1, np.int32)  # -1 = padding
-        src_sorted = np.asarray(graph.src)[order]
-        dst_sorted = np.asarray(graph.dst)[order]
-        offs = np.zeros(n_shards + 1, np.int64)
-        np.cumsum(counts, out=offs[1:])
-        for s in range(n_shards):
-            lo, hi = offs[s], offs[s + 1]
-            src_p[s, : hi - lo] = src_sorted[lo:hi] - s * n_local
-            dst_p[s, : hi - lo] = dst_sorted[lo:hi]
-        # Padding edges: local source 0, destination = sentinel spill row; we
-        # mark them inactive by pointing dst at vertex 0 with identity payload
-        # (their source-active mask is forced off via dst -1 -> clamp).
-        pad_mask = dst_p < 0
-        dst_p = np.where(pad_mask, 0, dst_p)
-
-        spec1 = P(batch_axes)
-        src_arr = jnp.asarray(src_p.reshape(-1))
-        dst_arr = jnp.asarray(dst_p.reshape(-1))
-        pad_arr = jnp.asarray(pad_mask.reshape(-1))
-
-        vdata = jax.device_put(
-            graph.vertex_data, NamedSharding(mesh, spec1)
-        )
-
-        # Edge-slab partitioning of per-edge attributes: every edge_data
-        # leaf rides the same owner permutation + padding as src/dst, so
-        # slab row i always carries the attributes of the edge in slab row
-        # i.  Padding rows are zero-filled — they are masked off (pad_mask)
-        # before any payload they produce can travel.
-        def _edge_slab(leaf):
-            leaf_np = np.asarray(leaf)
-            slab = np.zeros(
-                (n_shards, slab_cap) + leaf_np.shape[1:], leaf_np.dtype
-            )
-            leaf_sorted = leaf_np[order]
-            for s in range(n_shards):
-                lo, hi = offs[s], offs[s + 1]
-                slab[s, : hi - lo] = leaf_sorted[lo:hi]
-            return jnp.asarray(
-                slab.reshape((n_shards * slab_cap,) + leaf_np.shape[1:])
-            )
-
-        edata = None
-        if graph.edge_data is not None:
-            edata = jax.tree_util.tree_map(_edge_slab, graph.edge_data)
-            edata = jax.device_put(edata, NamedSharding(mesh, spec1))
-        espec = jax.tree_util.tree_map(lambda _: spec1, edata)
-
-        def sharded(state, active, src_l, dst_l, pad_l, edata_l, vdata_l, j):
-            # Mask padded edges: treat their source as inactive.
-            act = jnp.logical_and(
-                jnp.take(active, src_l, axis=0), jnp.logical_not(pad_l)
-            )
-            # Reuse local_superstep but with the pad-aware active mask by
-            # temporarily AND-ing into the shard's active vector via payload
-            # masking: simplest is to inline the pipeline here.
-            src_state = jax.tree_util.tree_map(
-                lambda s: jnp.take(s, src_l, axis=0), state
-            )
-            payload = prog.message(j, src_state, edata_l)
-            payload = jnp.where(
-                act.reshape((-1,) + (1,) * (payload.ndim - 1)),
-                payload,
-                get_monoid(op).identity_like(payload),
-            )
-            dst_eff = jnp.where(pad_l, -1, dst_l)
-            inbox = connector(
-                jnp.where(dst_eff < 0, 0, dst_eff),
-                payload, graph.n_vertices, batch_axes, op,
-            )
-            got = connector(
-                jnp.where(dst_eff < 0, 0, dst_eff),
-                jnp.where(act, 1.0, 0.0),
-                graph.n_vertices, batch_axes, "sum",
-            ) > 0
-            return _apply_and_merge(prog, j, state, inbox, got)
-
-        state_specs = P(batch_axes)
-        fn = shard_map(
-            sharded, mesh=mesh,
-            in_specs=(state_specs, state_specs, spec1, spec1, spec1, espec,
-                      jax.tree_util.tree_map(lambda _: spec1, vdata), P()),
-            out_specs=(state_specs, state_specs),
-            check_rep=False,
-        )
-
-        def superstep(carry, j):
-            state, active = carry
-            return fn(state, active, src_arr, dst_arr, pad_arr, edata,
-                      vdata, j)
-
-        # -- sharded semi-naive (delta-frontier) machinery ------------------
-
-        def _local_count(active, src_l, pad_l):
-            mask = jnp.logical_and(
-                jnp.take(active, src_l, axis=0), jnp.logical_not(pad_l)
-            )
-            return jnp.sum(mask.astype(jnp.int32)).reshape(1)
-
-        count_fn = jax.jit(shard_map(
-            _local_count, mesh=mesh,
-            in_specs=(state_specs, spec1, spec1),
-            out_specs=P(batch_axes),
-            check_rep=False,
-        ))
-
-        def shard_count_fn(active):
-            return count_fn(active, src_arr, pad_arr)
-
-        sparse_ex = _SPARSE_EXCHANGES.get(plan.connector)
-
-        def sparse_step_factory(compact_cap: int) -> Callable:
-            """Frontier-compacted sharded superstep: every shard compacts
-            its local edge slab into the same static ``compact_cap`` slots
-            (the host driver derives the capacity from the max shard-local
-            count, keeping the mesh in SPMD lockstep), then all
-            edge-proportional work — gather, message UDF, combine, and the
-            cross-shard exchange payloads — scales with the frontier
-            instead of the slab."""
-
-            def step_shard(state, active, src_l, dst_l, pad_l, edata_l, j):
-                dst_c, payload, valid = _compact_and_gather(
-                    prog, j, state, active, src_l, dst_l, compact_cap,
-                    pad=pad_l, edge_data=edata_l,
-                )
-                if sparse_ex is None:
-                    # No sparse connector variant: the frontier-masked dense
-                    # exchange still moves N-sized partials, but all
-                    # edge-side work runs on the compacted slab.
-                    ex = lambda fused: dense_psum_exchange(
-                        dst_c, fused, graph.n_vertices, batch_axes, op,
-                        edge_mask=valid, flag_cols=1,
-                    )
-                else:
-                    ex = lambda fused: sparse_ex(
-                        dst_c, fused, valid, graph.n_vertices, batch_axes,
-                        op, flag_cols=1,
-                    )
-                inbox, got = fused_got_exchange(ex, payload, valid, op)
-                return _apply_and_merge(prog, j, state, inbox, got)
-
-            wrapped = shard_map(
-                step_shard, mesh=mesh,
-                in_specs=(state_specs, state_specs, spec1, spec1, spec1,
-                          espec, P()),
-                out_specs=(state_specs, state_specs),
-                check_rep=False,
-            )
-
-            def step(carry, j):
-                state, active = carry
-                return wrapped(state, active, src_arr, dst_arr, pad_arr,
-                               edata, j)
-
-            return jax.jit(step)
-    else:
-        def superstep(carry, j):
-            state, active = carry
-            src_l, dst_l = graph.src, graph.dst
-            return local_superstep(
-                state, active, src_l, dst_l, graph.edge_data,
-                graph.vertex_data, 0, j,
-            )
-
-        sparse_step_factory = None
-        shard_count_fn = None
-        slab_cap = graph.n_edges
+    # (5): the unified executor materializes the planned superstep pipeline
+    # (dense shard_map step + frontier-compacted sparse variants).
+    bundle = build_pregel_steps(prog, graph, plan, mesh)
 
     return PregelExecutable(
         prog=prog,
         program=program,
         logical=logical,
         plan=plan,
-        superstep=superstep,
+        superstep=bundle.superstep,
         graph=graph,
         mesh=mesh,
         semi_naive=semi_naive,
         supports_sparse=True,
-        sparse_step_factory=sparse_step_factory,
-        shard_count_fn=shard_count_fn,
-        local_edge_cap=slab_cap,
+        sparse_step_factory=bundle.sparse_step_factory,
+        shard_count_fn=bundle.shard_count_fn,
+        local_edge_cap=bundle.local_edge_cap,
     )

@@ -53,6 +53,7 @@ __all__ = [
     "IterationSchedule",
     "iteration_schedule",
     "delta_rewritable_rules",
+    "fixpoint_phases",
 ]
 
 
@@ -413,6 +414,39 @@ def xy_transform(program: Program) -> Program:
         aggregates=program.aggregates,
         name=program.name + "::xy",
     )
+
+
+# ---------------------------------------------------------------------------
+# Sequential fixpoint phases (multi-stratum programs)
+# ---------------------------------------------------------------------------
+
+
+def fixpoint_phases(program: Program) -> Tuple[Tuple[str, ...], ...]:
+    """Recursive-predicate groups in sequential evaluation order.
+
+    The recursive predicates of a multi-stratum program partition into the
+    strongly-connected components of the dependency graph; a component that
+    (transitively) depends on another must see that component's *converged*
+    fixpoint, so the components execute as **sequential fixpoint phases** in
+    topological order — e.g. a PageRank stratum runs to convergence before a
+    downstream reachability stratum that reads its thresholded result.
+
+    Tarjan's algorithm (see :func:`_sccs`) emits a component only after
+    every component it depends on, so the emission order *is* the phase
+    order.  Single-phase programs (the paper's Listings 1/2, transitive
+    closure, ...) return one group; non-recursive predicates belong to no
+    phase — the executor schedules their rules around the phases by the
+    deepest phase they read.
+    """
+
+    recursive = recursive_predicates(program)
+    graph = dependency_graph(program)
+    phases: List[Tuple[str, ...]] = []
+    for comp in _sccs(graph):
+        members = tuple(sorted(p for p in comp if p in recursive))
+        if members:
+            phases.append(members)
+    return tuple(phases)
 
 
 # ---------------------------------------------------------------------------

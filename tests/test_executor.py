@@ -1,0 +1,385 @@
+"""Differential conformance for the unified logical-plan executor.
+
+Two properties defended:
+
+1. **One engine, many programs** — ``compile_program`` executes arbitrary
+   XY-stratified programs (transitive closure, connected components,
+   same-generation, and the multi-stratum PageRank→threshold→reach
+   pipeline) matching independent NumPy oracles, on the host driver AND the
+   on-device ``lax.while_loop`` driver, naive and semi-naive.
+
+2. **Listings 1/2 through the unified entry point** — the planner selects
+   the specialized fast paths for the paper's listing programs, so
+   ``compile_program(listing, ..., binding=...)`` must produce outputs
+   identical (≤1e-8) to ``compile_pregel`` / ``compile_imru`` on all three
+   connectors, with the plan notes unchanged by the refactor.
+
+The 8-virtual-device SPMD conformance lives in
+``tests/test_spmd_executor.py`` (subprocess launcher).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.executor import (
+    ExecutorError,
+    Relation,
+    compile_program,
+)
+from repro.core.imru import IMRUTask, compile_imru
+from repro.core.listings import (
+    connected_components_program,
+    pagerank_threshold_program,
+    same_generation_program,
+    transitive_closure_program,
+)
+from repro.core.pregel import Graph, VertexProgram, compile_pregel
+
+CONNECTORS = ("dense_psum", "merging", "hash_sort")
+N = 32
+
+
+# ---------------------------------------------------------------------------
+# Shared fixtures
+# ---------------------------------------------------------------------------
+
+
+def _edges(seed=0, m=48):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, N, m), rng.integers(0, N, m)
+
+
+def _tc_oracle(src, dst):
+    adj = np.zeros((N, N), bool)
+    adj[src, dst] = True
+    tc = adj.copy()
+    while True:
+        new = tc | (tc @ adj)
+        if (new == tc).all():
+            return tc
+        tc = new
+
+
+# ---------------------------------------------------------------------------
+# Generic programs vs NumPy oracles
+# ---------------------------------------------------------------------------
+
+
+def test_transitive_closure_matches_numpy_oracle():
+    src, dst = _edges()
+    ex = compile_program(
+        transitive_closure_program(),
+        {"edge": Relation.from_columns(N, src, dst)},
+    )
+    res = ex.run(max_iters=64)
+    assert res.converged
+    assert (np.asarray(res.state["tc"].present) == _tc_oracle(src, dst)).all()
+
+
+def test_transitive_closure_device_driver_matches_host():
+    src, dst = _edges(seed=3)
+    ex = compile_program(
+        transitive_closure_program(),
+        {"edge": Relation.from_columns(N, src, dst)},
+    )
+    host = ex.run(max_iters=64)
+    dev = ex.run(max_iters=64, on_device=True)
+    assert dev.converged and dev.iterations == host.iterations
+    assert (
+        np.asarray(dev.state["tc"].present)
+        == np.asarray(host.state["tc"].present)
+    ).all()
+
+
+@pytest.mark.parametrize("semi_naive", [False, True])
+def test_connected_components_matches_numpy_oracle(semi_naive):
+    src, dst = _edges(seed=1, m=40)
+    s2, d2 = np.concatenate([src, dst]), np.concatenate([dst, src])
+    ex = compile_program(
+        connected_components_program(),
+        {
+            "edge": Relation.from_columns(N, s2, d2),
+            "node": Relation.from_columns(
+                N, np.arange(N), np.arange(N, dtype=np.float32)
+            ),
+        },
+        semi_naive=semi_naive,
+    )
+    if semi_naive:
+        # min is idempotent: C2 reads the delta frontier, and the rewrite
+        # is recorded in the plan notes.
+        assert "semi-naive(C2: cc -> Δcc)" in ex.plan.notes
+    res = ex.run(max_iters=100)
+    assert res.converged
+    lab = np.arange(N, dtype=np.float32)
+    adj = np.zeros((N, N), bool)
+    adj[s2, d2] = True
+    while True:
+        new = lab.copy()
+        for y, x in zip(*np.nonzero(adj)):
+            new[x] = min(new[x], lab[y])
+        if (new == lab).all():
+            break
+        lab = new
+    got = np.asarray(res.state["cc"].values[1])
+    present = np.asarray(res.state["cc"].present)
+    assert present.all()
+    assert (got == lab).all()
+
+
+def test_same_generation_matches_numpy_oracle():
+    rng = np.random.default_rng(4)
+    par_p, par_c = rng.integers(0, N, 36), rng.integers(0, N, 36)
+    ex = compile_program(
+        same_generation_program(),
+        {"parent": Relation.from_columns(N, par_p, par_c)},
+    )
+    res = ex.run(max_iters=100)
+    assert res.converged
+    par = np.zeros((N, N), bool)
+    par[par_p, par_c] = True
+    sg = (par.T @ par) > 0
+    while True:
+        new = sg | (par.T @ sg @ par)
+        if (new == sg).all():
+            break
+        sg = new
+    assert (np.asarray(res.state["sg"].present) == sg).all()
+
+
+def test_multi_stratum_pipeline_matches_numpy_oracle():
+    """PageRank fixpoint -> threshold over the *converged* ranks -> a second
+    reachability fixpoint — the sequential multi-stratum execution neither
+    listing front-end can express."""
+
+    rng = np.random.default_rng(2)
+    src = np.repeat(np.arange(N), 3)
+    dst = rng.integers(0, N, 3 * N)
+    deg = np.bincount(src, minlength=N).astype(np.float32)
+    iters = 40
+
+    # Oracle ranks first; put the threshold in the middle of the largest
+    # gap so float-order differences cannot flip the hot set.
+    adj = np.zeros((N, N), np.float32)
+    adj[src, dst] = 1.0  # duplicate edges collapse on the grid, as in Datalog
+    r = np.full(N, 1.0 / N, np.float32)
+    for _ in range(iters):
+        r = (0.85 * (adj.T @ (r / np.maximum(deg, 1.0)))
+             + 0.15 / N).astype(np.float32)
+    srt = np.sort(r)
+    gaps = np.diff(srt)
+    gi = int(np.argmax(gaps))
+    tau = float((srt[gi] + srt[gi + 1]) / 2)
+    assert gaps[gi] > 1e-4
+
+    ex = compile_program(
+        pagerank_threshold_program(tau=tau),
+        {
+            "edge": Relation.from_columns(N, src, dst),
+            "node": Relation.from_columns(
+                N, np.arange(N),
+                np.full(N, 1.0 / N, np.float32),
+                deg,
+                np.full(N, 0.15 / N, np.float32),
+            ),
+        },
+    )
+    res = ex.run(max_iters=iters)
+    assert len(res.phase_iterations) == 2
+    assert res.phase_iterations[0] == iters  # PageRank runs its budget
+    assert res.phase_iterations[1] < iters   # reach converges
+
+    rank = np.asarray(res.state["rank"].values[1])
+    assert np.abs(rank - r).max() < 1e-6
+
+    hot = r > tau
+    assert (np.asarray(res.state["hot"].present) == hot).all()
+
+    reach = hot.copy()
+    while True:
+        new = reach | ((((adj > 0).T @ reach) > 0) & hot)
+        if (new == reach).all():
+            break
+        reach = new
+    assert (np.asarray(res.state["reach"].present) == reach).all()
+
+
+def test_plan_records_phases_and_groupby_connectors():
+    src, dst = _edges()
+    deg = np.bincount(src, minlength=N).astype(np.float32)
+    ex = compile_program(
+        pagerank_threshold_program(),
+        {
+            "edge": Relation.from_columns(N, src, dst),
+            "node": Relation.from_columns(
+                N, np.arange(N), np.full(N, 1.0 / N, np.float32), deg,
+                np.full(N, 0.15 / N, np.float32),
+            ),
+        },
+    )
+    assert "fixpoint-phases(rank -> reach)" in ex.plan.notes
+    assert f"groupby(P2: sum via dense-reduce, {N * N} rows -> {N})" \
+        in ex.plan.notes
+    assert ex.plan.connectors["P2"] == "dense-reduce"
+
+
+# ---------------------------------------------------------------------------
+# Listings 1/2 through compile_program vs the specialized front-ends
+# ---------------------------------------------------------------------------
+
+
+def _pagerank_vp():
+    return VertexProgram(
+        init_vertex=lambda ids, vd: jnp.stack(
+            [jnp.full((N,), 1.0 / N), vd], axis=1),
+        message=lambda j, s, ed: s[:, 0] / jnp.maximum(s[:, 1], 1.0),
+        apply=lambda j, s, inbox, got: (
+            jnp.stack([0.15 / N + 0.85 * inbox, s[:, 1]], axis=1),
+            jnp.ones(s.shape[0], jnp.bool_)),
+        combine="sum",
+    )
+
+
+def _sssp_vp():
+    inf = jnp.float32(1e9)
+    return VertexProgram(
+        init_vertex=lambda ids, vd: jnp.where(ids == 0, 0.0, inf),
+        message=lambda j, s, ed: s + 1.0,
+        apply=lambda j, s, inbox, got: (
+            jnp.minimum(s, inbox), jnp.minimum(s, inbox) < s),
+        combine="min",
+    )
+
+
+def _graph(seed=5):
+    rng = np.random.default_rng(seed)
+    src = np.repeat(np.arange(N), 4).astype(np.int32)
+    dst = rng.integers(0, N, 4 * N).astype(np.int32)
+    outdeg = np.bincount(src, minlength=N).astype(np.float32)
+    return Graph(N, jnp.asarray(src), jnp.asarray(dst), jnp.asarray(outdeg))
+
+
+@pytest.mark.parametrize("connector", CONNECTORS)
+@pytest.mark.parametrize("make_vp,iters", [(_pagerank_vp, 12), (_sssp_vp, 40)])
+def test_listing1_via_compile_program_matches_compile_pregel(
+    connector, make_vp, iters
+):
+    vp, g = make_vp(), _graph()
+    spec = compile_pregel(vp, g, force_connector=connector)
+    gen = compile_program(
+        vp.program(), {"data": g}, binding=vp, force_connector=connector
+    )
+    assert type(gen).__name__ == "PregelExecutable"
+    assert gen.plan.notes == spec.plan.notes  # refactor leaves notes alone
+    a = spec.run(max_iters=iters)
+    b = gen.run(max_iters=iters)
+    assert a.iterations == b.iterations
+    err = float(jnp.max(jnp.abs(a.state[0] - b.state[0])))
+    assert err <= 1e-8
+
+
+@pytest.mark.parametrize("connector", CONNECTORS)
+def test_listing1_semi_naive_via_compile_program(connector):
+    vp, g = _sssp_vp(), _graph(seed=6)
+    spec = compile_pregel(vp, g, force_connector=connector, semi_naive=True)
+    gen = compile_program(
+        vp.program(), {"data": g}, binding=vp, force_connector=connector,
+        semi_naive=True,
+    )
+    assert gen.plan.notes == spec.plan.notes
+    a = spec.run(max_iters=60)
+    b = gen.run(max_iters=60)
+    assert a.converged and b.converged
+    err = float(jnp.max(jnp.abs(a.state[0] - b.state[0])))
+    assert err <= 1e-8
+
+
+def test_listing2_via_compile_program_matches_compile_imru():
+    rng = np.random.default_rng(7)
+    X = rng.normal(size=(256, 8)).astype(np.float32)
+    w = rng.normal(size=8).astype(np.float32)
+    y = X @ w
+    task = IMRUTask(
+        init_model=lambda: jnp.zeros(8, jnp.float32),
+        map=lambda rec, m: (rec["x"] @ m - rec["y"]) @ rec["x"],
+        update=lambda j, m, g: m - 1e-3 * g,
+        tol=1e-9,
+    )
+    recs = {"x": jnp.asarray(X), "y": jnp.asarray(y)}
+    spec = compile_imru(task, recs)
+    gen = compile_program(
+        task.program(), {"training_data": recs}, binding=task
+    )
+    assert type(gen).__name__ == "IMRUExecutable"
+    assert gen.plan.notes == spec.plan.notes
+    a = spec.run(max_iters=80)
+    b = gen.run(max_iters=80)
+    assert a.iterations == b.iterations
+    err = float(jnp.max(jnp.abs(a.state - b.state)))
+    assert err <= 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Fail-closed surfaces
+# ---------------------------------------------------------------------------
+
+
+def test_listing_program_without_binding_is_rejected():
+    vp = _pagerank_vp()
+    with pytest.raises(ExecutorError, match="binding"):
+        compile_program(vp.program(), {"data": _graph()})
+
+
+def test_missing_edb_relation_is_rejected():
+    with pytest.raises(ExecutorError, match="edge"):
+        compile_program(transitive_closure_program(), {}, domain=N)
+
+
+def test_unregistered_aggregate_is_rejected():
+    from repro.core.datalog import Aggregate
+    import dataclasses
+
+    prog = connected_components_program()
+    bogus = Aggregate("mystery", zero=lambda: 0.0, combine=min)
+    rules = tuple(
+        dataclasses.replace(
+            r,
+            head=dataclasses.replace(
+                r.head,
+                args=tuple(
+                    dataclasses.replace(a, agg="mystery")
+                    if hasattr(a, "agg") else a
+                    for a in r.head.args
+                ),
+            ),
+        )
+        for r in prog.rules
+    )
+    prog = dataclasses.replace(
+        prog, rules=rules, aggregates={"mystery": bogus}
+    )
+    src, dst = _edges()
+    with pytest.raises(ExecutorError, match="monoid"):
+        ex = compile_program(
+            prog,
+            {
+                "edge": Relation.from_columns(N, src, dst),
+                "node": Relation.from_columns(
+                    N, np.arange(N), np.arange(N, dtype=np.float32)
+                ),
+            },
+        )
+        ex.run(max_iters=2)
+
+
+def test_relation_from_columns_splits_keys_and_values():
+    rel = Relation.from_columns(
+        8, np.array([1, 3]), np.array([0.5, 2.5], np.float32)
+    )
+    assert rel.key_positions == (0,)
+    assert rel.arity == 2
+    assert rel.count() == 2
+    assert float(rel.values[1][3]) == 2.5
+    assert rel.tuples().tolist() == [[1], [3]]

@@ -210,3 +210,122 @@ def test_pregel_sparse_cap_floor_scales_down_for_small_shards():
     assert small.sparse_cap_floor == 8
     assert small.sparse_cap_for(3) == 8
     assert small.sparse_cap_for(100) == 128
+
+
+# ---------------------------------------------------------------------------
+# Generic-program plans (the unified executor)
+# ---------------------------------------------------------------------------
+#
+# The listing snapshots above double as the refactor guard: compile_pregel /
+# compile_imru now lower through repro.core.executor, and their plan.notes
+# must stay byte-identical (tests/test_executor.py additionally asserts the
+# compile_program-dispatched plans carry the same notes).  The snapshots
+# below pin the NEW generic-program plans: dense-grid storage, fixpoint
+# phases, and the per-GroupBy Fig.-9 connector selection.
+
+GENERIC_N = 64
+
+GENERIC_GOLDEN = {
+    ("transitive-closure", False): (
+        "storage-selection(dense-grid[n=64])",
+        "loop-invariant-caching(edb-grids)",
+    ),
+    ("connected-components", False): (
+        "storage-selection(dense-grid[n=64])",
+        "loop-invariant-caching(edb-grids)",
+        "groupby(C2: min via dense-reduce, 4096 rows -> 64)",
+    ),
+    ("connected-components", True): (
+        "storage-selection(dense-grid[n=64])",
+        "loop-invariant-caching(edb-grids)",
+        "groupby(C2: min via dense-reduce, 4096 rows -> 64)",
+        "semi-naive(C2: cc -> Δcc)",
+    ),
+    ("same-generation", False): (
+        "storage-selection(dense-grid[n=64])",
+        "loop-invariant-caching(edb-grids)",
+    ),
+    ("pagerank-threshold", False): (
+        "storage-selection(dense-grid[n=64])",
+        "loop-invariant-caching(edb-grids)",
+        "fixpoint-phases(rank -> reach)",
+        "groupby(P2: sum via dense-reduce, 4096 rows -> 64)",
+    ),
+}
+
+GENERIC_STRUCTURE = {
+    # Operator skeletons of the recursive rules — the logical plan is the
+    # execution contract now, so its shape is pinned alongside the notes.
+    "transitive-closure": {
+        "T2": ("T2", "tc", ("Project", ("Join", ("ScanState",), ("ScanEDB",)))),
+    },
+    "connected-components": {
+        "C2": ("C2", "cc", ("GroupBy", ("Join", ("ScanState",), ("ScanEDB",)))),
+    },
+    "pagerank-threshold": {
+        "P4": ("P4", "rankF", ("Frontier",)),
+        "H2": ("H2", "reach",
+               ("Project",
+                ("Join",
+                 ("Join", ("ScanState",), ("ScanEDB",)),
+                 ("ScanState",)))),
+    },
+}
+
+
+def _generic_executables():
+    import numpy as np
+
+    from repro.core.executor import Relation, compile_program
+    from repro.core.listings import (
+        connected_components_program,
+        pagerank_threshold_program,
+        same_generation_program,
+        transitive_closure_program,
+    )
+
+    n = GENERIC_N
+    rng = np.random.default_rng(0)
+    src, dst = rng.integers(0, n, 96), rng.integers(0, n, 96)
+    edge = Relation.from_columns(n, src, dst)
+    node2 = Relation.from_columns(
+        n, np.arange(n), np.arange(n, dtype=np.float32)
+    )
+    deg = np.bincount(src, minlength=n).astype(np.float32)
+    node4 = Relation.from_columns(
+        n, np.arange(n), np.full(n, 1.0 / n, np.float32), deg,
+        np.full(n, 0.15 / n, np.float32),
+    )
+    out = {}
+    for (name, semi_naive), prog, rels in (
+        (("transitive-closure", False), transitive_closure_program(),
+         {"edge": edge}),
+        (("connected-components", False), connected_components_program(),
+         {"edge": edge, "node": node2}),
+        (("connected-components", True), connected_components_program(),
+         {"edge": edge, "node": node2}),
+        (("same-generation", False), same_generation_program(),
+         {"parent": edge}),
+        (("pagerank-threshold", False), pagerank_threshold_program(),
+         {"edge": edge, "node": node4}),
+    ):
+        out[(name, semi_naive)] = compile_program(
+            prog, rels, semi_naive=semi_naive
+        )
+    return out
+
+
+def test_generic_program_plan_notes_golden():
+    for key, ex in _generic_executables().items():
+        assert ex.plan.notes == GENERIC_GOLDEN[key], (key, ex.plan.notes)
+
+
+def test_generic_program_logical_structure_golden():
+    for key, ex in _generic_executables().items():
+        name, semi_naive = key
+        want = GENERIC_STRUCTURE.get(name)
+        if want is None or semi_naive:
+            continue
+        got = {df.label: df.structure() for df in ex.logical.body}
+        for label, structure in want.items():
+            assert got[label] == structure, (name, label, got[label])

@@ -1,0 +1,27 @@
+"""Unified-executor SPMD conformance (8 virtual devices, subprocess).
+
+See tests/spmd_executor_program.py for the properties defended; this
+launcher asserts on its RESULTS_JSON (shared _spmd_subprocess runner, so the
+main pytest process keeps seeing 1 device)."""
+
+from tests._spmd_subprocess import run_spmd_program
+
+
+def test_unified_executor_spmd_conformance():
+    results = run_spmd_program("spmd_executor_program.py")
+
+    for name, err in results["generic_errs"].items():
+        assert err <= 1e-8, (name, err)
+
+    # Both layouts run the same fixpoint lengths.
+    assert results["tc_iters"][0] == results["tc_iters"][1]
+    assert len(results["pipeline_phases"]) == 2
+
+    for name, err in results["listing1_errs"].items():
+        if name.endswith("_notes_equal"):
+            assert err is True, name
+        else:
+            assert err <= 1e-8, (name, err)
+
+    assert results["listing2_err"] <= 1e-8
+    assert results["listing2_notes_equal"] is True
