@@ -1,0 +1,189 @@
+"""Fig. 12 (new) — the price of fault tolerance on the host fixpoint driver.
+
+Measured rows, each defending one claim of the elastic-FT design:
+
+* ``fig12/checkpoint_overhead`` — per-iteration wall time of a REAL
+  host-driven PageRank fixpoint with durable checkpointing every 8
+  iterations vs the same loop without it.  The async
+  :class:`~repro.checkpoint.CheckpointStore` moves serialization + IO off
+  the driver thread (only the device->host copy is synchronous), so the
+  overhead bar is <= 10% — ``--check`` enforces it (with one re-measure
+  retry: the CPU container's scheduler can smear a single 24-iteration
+  sample).
+* ``fig12/recovery_replay`` — crash injected at iteration 21 with
+  ``checkpoint_every=8``: the driver must restore from the step-16
+  checkpoint and replay at most ``checkpoint_every`` iterations (here 5),
+  and the recovered fixpoint must match the uninterrupted run to <= 1e-8.
+* ``fig12/stale_aggregate_max`` — one bounded-staleness reduce under the
+  ``max`` monoid (8 shards x 64k lanes): the straggler-mitigation combine
+  is a couple of fused elementwise ops, not a new collective.
+
+``--json <path>`` writes the rows as a ``repro-bench-v1`` snapshot; the
+overhead row rides the CI ``bench-trend`` gate like every measured row.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks._hw import row, timeit
+
+N = 16384
+DEG = 8
+ITERS = 24
+CKPT_EVERY = 8
+OVERHEAD_BAR_PCT = 10.0
+
+
+def _pagerank_ex():
+    from repro.core.pregel import Graph, VertexProgram, compile_pregel
+
+    rng = np.random.default_rng(0)
+    src = np.repeat(np.arange(N), DEG).astype(np.int32)
+    dst = rng.integers(0, N, N * DEG).astype(np.int32)
+    outdeg = np.bincount(src, minlength=N).astype(np.float32)
+    g = Graph(N, jnp.asarray(src), jnp.asarray(dst), jnp.asarray(outdeg))
+    vp = VertexProgram(
+        init_vertex=lambda ids, vd: jnp.stack(
+            [jnp.full((N,), 1.0 / N), vd], axis=1),
+        message=lambda j, s, ed: s[:, 0] / jnp.maximum(s[:, 1], 1.0),
+        apply=lambda j, s, inbox, got: (
+            jnp.stack([0.15 / N + 0.85 * inbox, s[:, 1]], axis=1),
+            jnp.ones(s.shape[0], jnp.bool_)),
+        combine="sum",
+    )
+    return compile_pregel(vp, g)
+
+
+def _median_run_us(ex, reps=3, **kw):
+    """Median per-iteration wall time (us) over ``reps`` host-driver runs."""
+
+    times = []
+    for r in range(reps):
+        if "checkpoint_every" in kw:
+            d = tempfile.mkdtemp(prefix="fig12_ckpt_")
+            res = ex.run(max_iters=ITERS, checkpoint_dir=d, **kw)
+        else:
+            res = ex.run(max_iters=ITERS, on_device=False, **kw)
+        times.append(res.seconds / max(res.iterations, 1))
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def _checkpoint_overhead(emit) -> bool:
+    ex = _pagerank_ex()
+    ex.run(max_iters=2, on_device=False)  # compile outside the timed runs
+    ok = False
+    for attempt in (1, 2):  # one re-measure retry on a noisy sample
+        us_base = _median_run_us(ex)
+        us_ckpt = _median_run_us(ex, checkpoint_every=CKPT_EVERY)
+        pct = 100.0 * (us_ckpt - us_base) / us_base
+        ok = pct <= OVERHEAD_BAR_PCT
+        if ok:
+            break
+    emit(row(
+        "fig12/checkpoint_overhead", us_ckpt,
+        f"measured: {pct:+.1f}% vs {us_base:.0f}us/iter uncheckpointed, "
+        f"N={N} E={N * DEG}, checkpoint_every={CKPT_EVERY} "
+        f"(async store; bar <= {OVERHEAD_BAR_PCT:g}%)",
+    ))
+    return ok
+
+
+def _recovery_replay(emit) -> bool:
+    from repro.checkpoint import CheckpointStore
+    from repro.core.fixpoint import DriverConfig
+    from repro.ft import FailureInjector
+
+    ex = _pagerank_ex()
+    clean = ex.run(max_iters=32, on_device=False)
+
+    d = tempfile.mkdtemp(prefix="fig12_recovery_")
+    store = CheckpointStore(d, keep=3)
+    executed = []
+
+    def save(carry, j):
+        store.save(j, carry)
+
+    def restore():
+        carry, j, _ = store.restore(like=ex.init())
+        return ex._place_carry(carry), int(j)
+
+    driver = ex.driver(
+        DriverConfig(max_iters=32, checkpoint_every=CKPT_EVERY),
+        adaptive=False,
+        save=save, restore=restore,
+        injector=FailureInjector(crashes=[21]),
+        on_iteration=lambda j, dt: executed.append(j),
+    )
+    res = driver.run(ex.init())
+    store.wait()
+    replayed = len(executed) - res.iterations  # crash@21 restores to 16
+    err = float(jnp.max(jnp.abs(res.state[0] - clean.state[0])))
+    ok = res.restarts == 1 and replayed <= CKPT_EVERY and err <= 1e-8
+    emit(row(
+        "fig12/recovery_replay", 0.0,
+        f"measured: crash@21 -> restored@16, replayed {replayed} iters "
+        f"(bar <= checkpoint_every={CKPT_EVERY}), recovered-vs-clean err "
+        f"{err:.1e} (bar <= 1e-8), restarts={res.restarts}",
+    ))
+    return ok
+
+
+def _stale_aggregate_row(emit) -> None:
+    from repro.ft.elastic import stale_aggregate
+
+    rng = np.random.default_rng(1)
+    partials = jnp.asarray(rng.normal(size=(8, 65536)).astype(np.float32))
+    arrived = jnp.asarray(np.array([1, 1, 1, 1, 1, 1, 0, 1], bool))
+    carry = jnp.full((65536,), -np.inf, jnp.float32)
+    fn = jax.jit(lambda p, a, c: stale_aggregate(p, a, c, monoid="max"))
+    us = timeit(fn, partials, arrived, carry)
+    emit(row(
+        "fig12/stale_aggregate_max", us,
+        "measured: bounded-staleness reduce, max monoid, 8 shards x 64k "
+        "lanes (1 straggler masked to identity, carried to next step)",
+    ))
+
+
+def main(emit=print) -> bool:
+    ok = _checkpoint_overhead(emit)
+    ok = _recovery_replay(emit) and ok
+    _stale_aggregate_row(emit)
+    return ok
+
+
+if __name__ == "__main__":
+    from benchmarks._json import parse_row, pop_json_arg, write_doc
+
+    check = "--check" in sys.argv
+    try:
+        json_path, _ = pop_json_arg(sys.argv[1:])
+    except ValueError as err:
+        print(err, file=sys.stderr)
+        sys.exit(2)
+    if json_path is not None:
+        rows = []
+
+        def emit(line):
+            parsed = parse_row(line)
+            if parsed is not None:
+                rows.append(parsed)
+            print(line)
+
+        ok = main(emit=emit)
+        write_doc(json_path, rows)
+        print(f"wrote {len(rows)} rows to {json_path}", file=sys.stderr)
+    else:
+        ok = main()
+    sys.exit(0 if (ok or not check) else 1)

@@ -93,12 +93,19 @@ def save_pytree(directory: str, step: int, tree: Any,
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
-    with open(os.path.join(directory, "LATEST.tmp"), "w") as f:
-        f.write(str(step))
-        f.flush()
-        os.fsync(f.fileno())
-    os.replace(os.path.join(directory, "LATEST.tmp"),
-               os.path.join(directory, "LATEST"))
+    # Unique temp name: a dangling writer from a crashed predecessor run
+    # must not race this commit on a shared LATEST.tmp.
+    fd, tmp_latest = tempfile.mkstemp(dir=directory, prefix=".LATEST.")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(str(step))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp_latest, os.path.join(directory, "LATEST"))
+    except BaseException:
+        if os.path.exists(tmp_latest):
+            os.unlink(tmp_latest)
+        raise
     return final
 
 
@@ -122,15 +129,31 @@ def restore_pytree(directory: str, like: Any,
     with open(os.path.join(d, "MANIFEST.json")) as f:
         manifest = json.load(f)
     leaves, treedef = jax.tree_util.tree_flatten(like)
-    assert manifest["n_leaves"] == len(leaves), (
-        f"checkpoint has {manifest['n_leaves']} leaves, "
-        f"expected {len(leaves)}"
-    )
+    want_paths = _leaf_paths(like)
+    have_paths = manifest.get("leaf_paths", [])
+    if manifest["n_leaves"] != len(leaves) or (
+        have_paths and have_paths != want_paths
+    ):
+        missing = [p for p in want_paths if p not in have_paths]
+        surplus = [p for p in have_paths if p not in want_paths]
+        raise ValueError(
+            f"checkpoint step {step} under {directory} does not match the "
+            f"restore target's tree structure: checkpoint has "
+            f"{manifest['n_leaves']} leaves, target expects {len(leaves)}"
+            + (f"; leaves only in target: {missing[:4]}" if missing else "")
+            + (f"; leaves only in checkpoint: {surplus[:4]}" if surplus else "")
+            + " — was this checkpoint written by a different program/model?"
+        )
     out = []
     for i, ref in enumerate(leaves):
         arr = np.load(os.path.join(d, f"leaf_{i}.npy"))
         arr = _from_serializable(arr, manifest["dtypes"][i])
-        assert list(arr.shape) == manifest["shapes"][i]
+        if list(arr.shape) != manifest["shapes"][i]:
+            raise ValueError(
+                f"checkpoint leaf_{i}.npy shape {list(arr.shape)} disagrees "
+                f"with its manifest entry {manifest['shapes'][i]} — "
+                f"checkpoint step {step} under {directory} is corrupt"
+            )
         if hasattr(ref, "shape") and tuple(arr.shape) != tuple(ref.shape):
             raise ValueError(
                 f"checkpoint leaf {manifest['leaf_paths'][i]} has shape "
@@ -148,7 +171,13 @@ def restore_pytree(directory: str, like: Any,
 
 
 class CheckpointStore:
-    """Async checkpointing with retention, for the host fixpoint driver."""
+    """Async checkpointing with retention, for the host fixpoint driver.
+
+    A background-save failure is never swallowed: it is re-raised on the
+    next ``wait()``, ``save()`` or ``restore()`` (each drains the writer
+    thread first), so a driver learns its last checkpoint is bad *before*
+    it overwrites the only good one or tries to restore garbage.
+    """
 
     def __init__(self, directory: str, keep: int = 3) -> None:
         self.directory = directory
@@ -166,7 +195,7 @@ class CheckpointStore:
         def work():
             try:
                 save_pytree(self.directory, step, host, extra)
-                self._gc()
+                self._gc(step)
             except BaseException as exc:  # surfaced on next wait()
                 self._error = exc
 
@@ -181,18 +210,35 @@ class CheckpointStore:
             err, self._error = self._error, None
             raise err
 
+    def quiesce(self) -> None:
+        """Join any in-flight background save *without* surfacing its error
+        (for abnormal exit paths where another exception is already
+        propagating; a stored error still re-raises on the next ``wait()``).
+        """
+
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
     def restore(self, like: Any, step: Optional[int] = None):
         self.wait()
         return restore_pytree(self.directory, like, step)
 
-    def _gc(self) -> None:
+    def _gc(self, step: int) -> None:
         if not os.path.isdir(self.directory):
             return
         steps = sorted(
             int(n[len("step_"):]) for n in os.listdir(self.directory)
             if n.startswith("step_")
         )
-        for s in steps[: -self.keep]:
+        # Steps above the one just committed are stale lineage: a fresh run
+        # reusing this directory restarted the step counter, so LATEST now
+        # points below them and they can never be restored.  They must not
+        # survive retention either — their higher numbers would shadow the
+        # live run's checkpoints and starve them out of the keep window.
+        live = [s for s in steps if s <= step]
+        stale = [s for s in steps if s > step]
+        for s in stale + live[: -self.keep]:
             shutil.rmtree(
                 os.path.join(self.directory, f"step_{s:08d}"),
                 ignore_errors=True,

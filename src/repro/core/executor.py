@@ -57,7 +57,7 @@ from __future__ import annotations
 import ast
 import functools
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
@@ -666,6 +666,21 @@ def _referenced_preds(op: algebra.LogicalOp) -> set:
 
 
 @dataclass
+class _ShiftedInjector:
+    """Adapter making a :class:`~repro.ft.elastic.FailureInjector` count in
+    *global* iterations across a multi-phase run (the driver hands it the
+    phase-local index): crash-at-iteration-N then targets the same step the
+    checkpoint numbering uses, so a chaos test can aim at a specific phase.
+    """
+
+    def __init__(self, inner: Any, base: int) -> None:
+        self.inner, self.base = inner, base
+
+    def maybe_fail(self, j: int) -> None:
+        self.inner.maybe_fail(self.base + j)
+
+
+@dataclass
 class GenericExecutable:
     """A compiled generic program: logical plan + grid backend + drivers."""
 
@@ -680,6 +695,11 @@ class GenericExecutable:
     mesh: Optional[Mesh]
     semi_naive: bool = False
     merge_monoids: Dict[str, Optional[str]] = field(default_factory=dict)
+    # Elastic fault tolerance: one note per remesh this executable's lineage
+    # went through (propagated into FixpointResult.remesh_events), plus the
+    # compile kwargs :meth:`remesh` needs to re-derive the physical plan.
+    remesh_events: Tuple[str, ...] = ()
+    _compile_kwargs: Dict[str, Any] = field(default_factory=dict, repr=False)
 
     # -- state plumbing -----------------------------------------------------
 
@@ -886,15 +906,132 @@ class GenericExecutable:
                 })
         return jax.jit(self._phase_step(phase, materialized)), state
 
+    # -- durable checkpoints (fault tolerance) ------------------------------
+
+    def _mat_targets(self) -> Tuple[str, ...]:
+        """Every predicate the run materializes outside the carried state,
+        in a deterministic order — the checkpoint's ``mat`` leaves.  The set
+        is a pure function of the compiled program, so the checkpoint tree
+        structure is constant across phases (targets a resumed run has not
+        reached yet are stored as zero grids and recomputed)."""
+
+        order: List[str] = []
+        groups = [self.prelude] + [
+            tuple(df for df in ph.body if not df.next_state)
+            + ph.finals + ph.post
+            for ph in self.phases
+        ]
+        for group in groups:
+            for df in group:
+                if df.target not in order:
+                    order.append(df.target)
+        return tuple(order)
+
+    def _zeros_view(self, pred: str) -> Dict[str, Any]:
+        keys, vals = self.sigs[pred]
+        shape = (self.domain,) * len(keys)
+        return {
+            "present": jnp.zeros(shape, jnp.bool_),
+            "values": {p: jnp.zeros(shape, jnp.float32) for p in vals},
+        }
+
+    def _ckpt_tree(self, state, materialized) -> Dict[str, Any]:
+        """The durable snapshot of an in-flight run: all carried state plus
+        every materialized view (zero-padded for targets not yet computed).
+        Leaves are written host-side/unsharded by the store, so a checkpoint
+        taken on one mesh restores onto any other (elastic remesh)."""
+
+        mat = {
+            t: (
+                {"present": e["present"], "values": dict(e["values"])}
+                if (e := materialized.get(t)) is not None
+                else self._zeros_view(t)
+            )
+            for t in self._mat_targets()
+        }
+        return {"state": {p: dict(e) for p, e in state.items()},
+                "mat": mat}
+
+    def _ckpt_like(self) -> Dict[str, Any]:
+        """Host-side zero template matching :meth:`_ckpt_tree`'s structure
+        (the ``like`` argument of :func:`repro.checkpoint.restore_pytree`)."""
+
+        state = {
+            pred: self._empty_entry(pred)
+            for ph in self.phases for pred in ph.carried
+        }
+        return self._ckpt_tree(state, {})
+
+    def remesh(self, mesh: Optional[Mesh]) -> "GenericExecutable":
+        """Recompile this program onto a new (typically shrunken) mesh after
+        device loss: the physical plan is re-derived for the surviving
+        topology (``plan_program`` re-invoked), the EDB grids are re-placed,
+        and the remesh is recorded in ``plan.notes`` and carried into
+        ``FixpointResult.remesh_events``.  Host-side checkpoints written by
+        the old executable restore directly into the new one."""
+
+        old_n = 1 if self.mesh is None else int(self.mesh.devices.size)
+        new = compile_program(
+            self.program, self.relations, mesh=mesh,
+            semi_naive=self.semi_naive, domain=self.domain,
+            **self._compile_kwargs,
+        )
+        if mesh is None:
+            shape, new_n = "1 device", 1
+        else:
+            shape = "x".join(
+                f"{n}={s}" for n, s in zip(mesh.axis_names, mesh.devices.shape)
+            )
+            new_n = int(mesh.devices.size)
+        note = f"remesh({old_n}->{new_n}: {shape})"
+        new.plan = replace(new.plan, notes=new.plan.notes + (note,))
+        new.remesh_events = self.remesh_events + (note,)
+        return new
+
     # -- fixpoint entry point ----------------------------------------------
 
-    def run(self, max_iters: int, on_device: bool = False) -> FixpointResult:
+    def run(
+        self,
+        max_iters: int,
+        on_device: bool = False,
+        *,
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_every: int = 0,
+        resume: bool = False,
+        injector: Optional[Any] = None,
+        max_restarts: int = 3,
+        keep_checkpoints: int = 3,
+    ) -> FixpointResult:
         """Run every fixpoint phase in sequence to the no-new-facts
         fixpoint (``max_iters`` bounds each phase).
+
+        Fault tolerance (host driver only): ``checkpoint_dir`` plugs a
+        :class:`~repro.checkpoint.CheckpointStore` into the driver's
+        save/restore hooks — carried state + materialized views are written
+        host-side every ``checkpoint_every`` iterations (default 8) along
+        with the phase cursor, so a crashed run restarts mid-phase and a
+        ``resume=True`` run continues from disk without re-running completed
+        phases.  ``injector`` threads a
+        :class:`~repro.ft.elastic.FailureInjector` into the step boundary.
 
         Returns a :class:`FixpointResult` whose ``state`` maps every
         materialized predicate to its final :class:`Relation`.
         """
+
+        if (checkpoint_dir or injector) and on_device:
+            raise ExecutorError(
+                "fault tolerance (checkpoint_dir/injector) needs the host "
+                "driver: pass on_device=False"
+            )
+        if resume and not checkpoint_dir:
+            raise ExecutorError("resume=True needs checkpoint_dir=")
+        store = None
+        if checkpoint_dir is not None:
+            from repro.checkpoint import CheckpointStore, latest_step
+
+            store = CheckpointStore(checkpoint_dir, keep=keep_checkpoints)
+            if checkpoint_every <= 0:
+                checkpoint_every = 8
 
         t0 = time.perf_counter()
         place = self._placer()
@@ -910,48 +1047,135 @@ class GenericExecutable:
         ).items():
             materialized[out] = entry
 
-        total, phase_iters, all_conv = 0, [], True
+        # Resume cursor: phase to continue in (1-based), iteration within it
+        # (checkpoints are written post-init, so a restored state never needs
+        # the init stratum re-fired), and completed phases' iteration counts.
+        start_phase, start_iter = 1, 0
+        done_iters: List[int] = []
+        restored_from_disk = False
+        if store is not None and resume and \
+                latest_step(checkpoint_dir) is not None:
+            restored_from_disk = True
+            tree, _, extra = store.restore(self._ckpt_like())
+            tree = jax.tree_util.tree_map(place, tree)
+            state = tree["state"]
+            start_phase = int(extra.get("phase", 1))
+            start_iter = int(extra.get("iteration", 0))
+            done_iters = [int(x) for x in extra.get("phase_iterations", [])]
+            # Materialized views of completed phases come from the
+            # checkpoint (their fixpoints are sealed); the current and later
+            # phases recompute theirs.
+            for ph in self.phases[: start_phase - 1]:
+                for df in (
+                    tuple(d for d in ph.body if not d.next_state)
+                    + ph.finals + ph.post
+                ):
+                    materialized[df.target] = tree["mat"][df.target]
+
+        total = sum(done_iters)
+        phase_iters, all_conv = list(done_iters), True
+        restarts_total = stragglers_total = 0
         for phase in self.phases:
-            inits = self._run_rules_once(
-                phase.init, state, materialized, jnp.int32(0)
-            )
-            for pred in phase.carried:
-                entry = inits.get(pred)
-                if entry is None:
-                    continue
-                state[pred] = jax.tree_util.tree_map(place, {
-                    "present": entry["present"],
-                    "values": entry["values"],
-                    "delta": entry["present"],  # everything is new at J=0
-                })
+            k = phase.index
+            if k < start_phase:
+                continue
+            resumed = restored_from_disk and k == start_phase
+            if not resumed:
+                inits = self._run_rules_once(
+                    phase.init, state, materialized, jnp.int32(0)
+                )
+                for pred in phase.carried:
+                    entry = inits.get(pred)
+                    if entry is None:
+                        continue
+                    state[pred] = jax.tree_util.tree_map(place, {
+                        "present": entry["present"],
+                        "values": entry["values"],
+                        "delta": entry["present"],  # everything new at J=0
+                    })
             step = self._phase_step(phase, materialized)
             conv = self._phase_converged(phase)
             if on_device:
                 res = device_fixpoint(step, conv, state, max_iters)
             else:
                 jitted = jax.jit(step)
+                save_hook = restore_hook = None
+                if store is not None:
+                    base = total  # global step counter offset for this phase
+                    completed = list(phase_iters)
+
+                    def save_hook(s, jj, _k=k, _b=base, _c=completed):
+                        store.save(
+                            _b + jj, self._ckpt_tree(s, materialized),
+                            extra={"phase": _k, "iteration": jj,
+                                   "phase_iterations": _c},
+                        )
+
+                    def restore_hook(_k=k):
+                        tr, _, ex = store.restore(self._ckpt_like())
+                        if int(ex.get("phase", -1)) != _k:
+                            raise RuntimeError(
+                                f"latest checkpoint belongs to phase "
+                                f"{ex.get('phase')}; cannot rewind into "
+                                f"phase {_k} mid-driver"
+                            )
+                        return (
+                            jax.tree_util.tree_map(place, tr["state"]),
+                            int(ex.get("iteration", 0)),
+                        )
+
+                    # Phase-entry restore point (post-init, iteration 0):
+                    # guarantees the current phase always has a checkpoint
+                    # a mid-phase crash can rewind to.
+                    if not resumed:
+                        save_hook(state, 0)
                 driver = HostFixpointDriver(
                     step=lambda s, jj: jitted(s, jnp.int32(jj)),
                     converged=conv,
-                    config=DriverConfig(max_iters=max_iters),
+                    config=DriverConfig(
+                        max_iters=max_iters,
+                        checkpoint_every=checkpoint_every if store else 0,
+                        max_restarts=max_restarts,
+                    ),
+                    save=save_hook,
+                    restore=restore_hook,
+                    injector=(
+                        None if injector is None
+                        else _ShiftedInjector(injector, total)
+                    ),
                 )
-                res = driver.run(state)
+                try:
+                    res = driver.run(
+                        state, start_iter=start_iter if resumed else 0
+                    )
+                except BaseException:
+                    # The failure is already propagating: drain the async
+                    # writer so it cannot race a successor run (or resume)
+                    # over the same checkpoint directory.
+                    if store is not None:
+                        store.quiesce()
+                    raise
+                restarts_total += res.restarts
+                stragglers_total += res.straggler_events
             state = res.state
+            it = (start_iter if resumed else 0) + res.iterations
             total += res.iterations
-            phase_iters.append(res.iterations)
+            phase_iters.append(it)
             all_conv = all_conv and res.converged
             # Final views of this phase (frontier reads at the fixpoint),
             # then the post-stratum rules gated on its convergence.
             finals = self._run_rules_once(
                 tuple(df for df in phase.body if not df.next_state)
                 + phase.finals,
-                state, materialized, jnp.int32(res.iterations),
+                state, materialized, jnp.int32(it),
             )
             materialized.update(finals)
             posts = self._run_rules_once(
-                phase.post, state, materialized, jnp.int32(res.iterations)
+                phase.post, state, materialized, jnp.int32(it)
             )
             materialized.update(posts)
+        if store is not None:
+            store.wait()  # surface any pending async-save failure
 
         out: Dict[str, Relation] = {}
         for pred, entry in list(materialized.items()) + [
@@ -969,7 +1193,10 @@ class GenericExecutable:
             iterations=total,
             converged=all_conv,
             seconds=time.perf_counter() - t0,
+            restarts=restarts_total,
             phase_iterations=tuple(phase_iters),
+            straggler_events=stragglers_total,
+            remesh_events=self.remesh_events,
         )
 
 
@@ -1199,6 +1426,7 @@ def compile_program(
         mesh=mesh,
         semi_naive=semi_naive,
         merge_monoids=merge_monoids,
+        _compile_kwargs={"hw": hw, "force_connector": force_connector},
     )
     # Device-place copies of the EDB grids (loop-invariant caching) — the
     # caller's Relation objects stay untouched, so one Relation can feed
@@ -1339,14 +1567,25 @@ class PregelStepBundle:
     sparse_step_factory: Callable[[int], Callable]
     shard_count_fn: Optional[Callable]
     local_edge_cap: int
+    # Failure injection threaded from the compile call: the executable hands
+    # this to its host driver, which fires ``maybe_fail(j)`` at the step
+    # boundary — the same boundary where a real pod's runtime surfaces a
+    # device failure (as an XLA error on the next dispatch).
+    injector: Optional[Any] = None
 
 
-def build_pregel_steps(prog, graph, plan, mesh) -> PregelStepBundle:
+def build_pregel_steps(prog, graph, plan, mesh,
+                       injector=None) -> PregelStepBundle:
     """Materialize the planned Listing-1 superstep pipeline (Fig. 4).
 
     One code path builds both layouts: single-shard (trivial axes) and SPMD
     ``shard_map`` with per-shard edge slabs, the planned connector exchange,
     and the frontier-compacted sparse variants the adaptive driver swaps in.
+
+    ``injector`` rides along on the bundle: failures cannot fire *inside*
+    the jitted step functions (host side effects are traced out), so the
+    chaos knob lives at the host step boundary between dispatches of the
+    sharded steps built here.
     """
 
     connector = _EXCHANGES[plan.connector]
@@ -1600,6 +1839,7 @@ def build_pregel_steps(prog, graph, plan, mesh) -> PregelStepBundle:
         sparse_step_factory=sparse_step_factory,
         shard_count_fn=shard_count_fn,
         local_edge_cap=slab_cap,
+        injector=injector,
     )
 
 

@@ -58,6 +58,10 @@ class FixpointResult:
     # Multi-stratum programs (the generic executor): iterations spent in each
     # sequential fixpoint phase, in phase order; empty for single-loop runs.
     phase_iterations: Tuple[int, ...] = ()
+    # Fault-tolerance accounting: slow-iteration detections, and one note per
+    # elastic remesh the executable went through (e.g. "remesh(8->4: ...)").
+    straggler_events: int = 0
+    remesh_events: Tuple[str, ...] = ()
 
 
 def device_fixpoint(
@@ -139,20 +143,33 @@ class HostFixpointDriver:
         self,
         step: Callable[[Any, int], Any],
         converged: Callable[[Any, Any], Any],
-        config: DriverConfig = DriverConfig(),
+        config: Optional[DriverConfig] = None,
         save: Optional[Callable[[Any, int], None]] = None,
         restore: Optional[Callable[[], Tuple[Any, int]]] = None,
         on_iteration: Optional[Callable[[int, float], None]] = None,
         select_step: Optional[
             Callable[[Any, int], Tuple[Callable[[Any, int], Any], str]]
         ] = None,
+        injector: Optional[Any] = None,
+        on_straggler: Optional[Callable[[int, float], None]] = None,
     ) -> None:
         self.step = step
         self.converged = converged
-        self.config = config
+        # A fresh config per driver: a shared default instance would leak
+        # config mutations across drivers.
+        self.config = DriverConfig() if config is None else config
         self.save = save
         self.restore = restore
         self.on_iteration = on_iteration
+        # Failure injection at the step boundary (chaos tests / benchmarks):
+        # an ``ft.elastic.FailureInjector`` whose ``maybe_fail(j)`` raises
+        # (crash — handled by the restore path below) or sleeps (straggle —
+        # inflates this iteration's wall time so detection fires).
+        self.injector = injector
+        # Straggler-mitigation hook: called as ``on_straggler(j, dt)`` when
+        # an iteration exceeds the straggler threshold.  IMRU uses it to fall
+        # back to the k-ary aggregation tree (fewer synchronous neighbors).
+        self.on_straggler = on_straggler
         # Adaptive execution (semi-naive Pregel): ``select_step(state, j)``
         # inspects the carried state (e.g. measures the active frontier
         # density) and returns ``(step_fn, mode_label)`` for this iteration —
@@ -167,10 +184,10 @@ class HostFixpointDriver:
         # restart are excluded from the trailing mean (their times belong to
         # the failed attempt and would pollute the baseline).
         self._window_start = 0
-
-    # -- fault injection hook for tests ------------------------------------
-    fail_at: Optional[int] = None  # raise once at iteration index (testing)
-    _failed_once: bool = False
+        # Single-shot fault injection (testing) — instance state, so one
+        # driver's injected failure can never leak into another.
+        self.fail_at: Optional[int] = None
+        self._failed_once = False
 
     def run(self, init_state: Any, start_iter: int = 0) -> FixpointResult:
         state, j = init_state, start_iter
@@ -184,6 +201,8 @@ class HostFixpointDriver:
                         and not self._failed_once:
                     self._failed_once = True
                     raise RuntimeError(f"injected failure at iteration {j}")
+                if self.injector is not None:
+                    self.injector.maybe_fail(j)
                 step_fn = self.step
                 if self.select_step is not None:
                     step_fn, mode = self.select_step(state, j)
@@ -220,6 +239,8 @@ class HostFixpointDriver:
                         "straggler: iteration %d took %.3fs (%.1fx trailing "
                         "mean %.3fs)", j, dt, dt / trailing, trailing,
                     )
+                    if self.on_straggler is not None:
+                        self.on_straggler(j, dt)
 
             done = bool(self.converged(state, new_state))
             state = new_state
@@ -241,4 +262,5 @@ class HostFixpointDriver:
             seconds=time.perf_counter() - t_start,
             restarts=self.restarts,
             modes=tuple(self.mode_history),
+            straggler_events=self.straggler_events,
         )

@@ -31,13 +31,13 @@ Convergence is rule G3's ``M != NewM`` test: the fixpoint is reached when
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core import algebra, stratify
 from repro.core.datalog import Aggregate, Program
@@ -103,6 +103,13 @@ class IMRUExecutable:
     step: Callable[[Any, Any], Any]          # (model, j) -> model
     records: Any                              # device-resident cached EDB
     mesh: Optional[Mesh]
+    # Straggler mitigation: what the re-planning fallback needs (the stats
+    # that fed ``plan_imru``, the pure mesh description, the hardware model)
+    # plus one note per fallback taken.
+    mesh_spec: Optional[MeshSpec] = None
+    stats: Optional[IMRUStats] = None
+    hw: HardwareSpec = TPU_V5E
+    straggler_fallbacks: Tuple[str, ...] = ()
 
     def init(self) -> Any:
         return self.task.init_model()
@@ -119,21 +126,127 @@ class IMRUExecutable:
 
     # -- drivers ------------------------------------------------------------
 
-    def run(self, max_iters: int, on_device: bool = True) -> FixpointResult:
+    def run(
+        self,
+        max_iters: int,
+        on_device: bool = True,
+        *,
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_every: int = 0,
+        resume: bool = False,
+        injector: Optional[Any] = None,
+        max_restarts: int = 3,
+        keep_checkpoints: int = 3,
+        straggler_fallback: bool = True,
+    ) -> FixpointResult:
+        """Run the IMRU fixpoint.
+
+        Fault tolerance (host driver): ``checkpoint_dir`` checkpoints the
+        model host-side every ``checkpoint_every`` iterations (default 8);
+        ``injector`` fires crashes/straggles at the step boundary.  A
+        detected straggler switches the reduce to the planner's k-ary
+        aggregation tree (fewer synchronous ring neighbors — the §4 cross-
+        pod fallback) when ``straggler_fallback`` is on; fallbacks taken
+        are recorded in ``straggler_fallbacks`` and ``plan.notes``.
+        """
+
+        ft = checkpoint_dir is not None or injector is not None
+        if resume and checkpoint_dir is None:
+            raise ValueError("resume=True needs checkpoint_dir=")
         model = self.init()
-        if on_device:
+        if on_device and not ft:
             return device_fixpoint(
                 lambda m, j: self.step(m, j),
                 self.converged,
                 model,
                 max_iters,
             )
-        driver = HostFixpointDriver(
-            step=lambda m, j: self.step(m, jnp.int32(j)),
-            converged=self.converged,
-            config=DriverConfig(max_iters=max_iters),
+        store, start_iter = None, 0
+        save_hook = restore_hook = None
+        if checkpoint_dir is not None:
+            from repro.checkpoint import CheckpointStore, latest_step
+
+            store = CheckpointStore(checkpoint_dir, keep=keep_checkpoints)
+            if checkpoint_every <= 0:
+                checkpoint_every = 8
+
+            def save_hook(m, j):
+                store.save(j, m, extra={"iteration": j})
+
+            def restore_hook():
+                m, j, _ = store.restore(like=self.init())
+                return self._place_model(m), int(j)
+
+            if resume and latest_step(checkpoint_dir) is not None:
+                model, start_iter, _ = store.restore(like=self.init())
+                model = self._place_model(model)
+                start_iter = int(start_iter)
+        driver = self.driver(
+            DriverConfig(
+                max_iters=max_iters,
+                checkpoint_every=checkpoint_every if store else 0,
+                max_restarts=max_restarts,
+            ),
+            save=save_hook, restore=restore_hook, injector=injector,
         )
-        return driver.run(model)
+        if straggler_fallback:
+            driver.on_straggler = self._kary_fallback(driver)
+        if store is not None and start_iter == 0:
+            save_hook(model, 0)
+        try:
+            res = driver.run(model, start_iter=start_iter)
+        except BaseException:
+            # drain the async writer before the failure propagates, so it
+            # cannot race a successor run over the same checkpoint directory
+            if store is not None:
+                store.quiesce()
+            raise
+        if store is not None:
+            store.wait()  # surface any pending async-save failure
+        return res
+
+    def _place_model(self, model: Any) -> Any:
+        """Commit a restored host-side model onto this executable's device
+        set: a checkpoint restored single-device-committed cannot feed the
+        ``shard_map`` step spanning the mesh (replicated placement is always
+        valid; jit reshards on entry)."""
+
+        if self.mesh is None:
+            return model
+        sharding = NamedSharding(self.mesh, PartitionSpec())
+        return jax.tree_util.tree_map(
+            lambda a: jax.device_put(a, sharding), model
+        )
+
+    def _kary_fallback(self, driver: HostFixpointDriver) -> Callable:
+        """Straggler response: re-plan the reduce as the k-ary aggregation
+        tree (a straggling participant delays one tree edge, not the whole
+        synchronous ring), rebuild the step, and swap it into the live
+        driver — the remaining iterations run the new collective schedule.
+        """
+
+        def on_straggler(j: int, dt: float) -> None:
+            if self.plan.reduce.kind == "kary_tree" or self.stats is None:
+                return
+            new_plan = plan_imru(
+                self.stats,
+                self.mesh_spec or MeshSpec((("data", 1),)),
+                self.hw,
+                force_reduce="kary_tree",
+                codec=self.plan.reduce.codec,
+                microbatches=self.plan.microbatches,
+            )
+            step, _ = build_imru_step(
+                self.task, self.records, new_plan, self.mesh,
+                self.mesh_spec or MeshSpec((("data", 1),)),
+            )
+            note = f"straggler-fallback(kary_tree @ iteration {j})"
+            self.plan = replace(new_plan, notes=new_plan.notes + (note,))
+            self.step = step
+            self.straggler_fallbacks = self.straggler_fallbacks + (note,)
+            driver.step = lambda m, jj: step(m, jnp.int32(jj))
+
+        return on_straggler
 
     def driver(self, config: DriverConfig, **hooks) -> HostFixpointDriver:
         return HostFixpointDriver(
@@ -214,4 +327,7 @@ def compile_imru(
         step=step,
         records=records,
         mesh=mesh,
+        mesh_spec=mesh_spec,
+        stats=stats,
+        hw=hw,
     )

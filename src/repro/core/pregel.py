@@ -34,13 +34,13 @@ Supersteps run to the Appendix-B.2 fixpoint: no active vertices.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core import algebra, stratify
 from repro.core.datalog import Program
@@ -133,6 +133,13 @@ class PregelExecutable:
     _edge_count_fn: Optional[Callable] = field(default=None, repr=False)
     _jit_superstep: Optional[Callable] = field(default=None, repr=False)
     _halt_step: Optional[Callable] = field(default=None, repr=False)
+    # Elastic fault tolerance: the failure injector threaded from compile
+    # (honored at the host step boundary), one note per remesh in this
+    # executable's lineage, and the compile kwargs :meth:`remesh` needs to
+    # re-derive the physical plan for a surviving topology.
+    injector: Optional[Any] = None
+    remesh_events: Tuple[str, ...] = ()
+    _compile_kwargs: Dict[str, Any] = field(default_factory=dict, repr=False)
 
     @property
     def sparse_cap_floor(self) -> int:
@@ -146,6 +153,22 @@ class PregelExecutable:
         if self._jit_superstep is None:
             self._jit_superstep = jax.jit(self.superstep)
         return self._jit_superstep
+
+    def _place_carry(self, carry: Any) -> Any:
+        """Commit a restored host-side carry onto this executable's device
+        set.  Checkpoints are stored unsharded; ``restore`` commits the
+        arrays to the ``like`` tree's (single) device, and a single-device
+        committed array cannot feed the ``shard_map`` superstep spanning
+        the mesh.  Replicated placement is always valid — jit reshards to
+        the superstep's specs on entry — and is what lets an 8-shard run's
+        checkpoint resume on a 4-shard mesh after :meth:`remesh`."""
+
+        if self.mesh is None:
+            return carry
+        sharding = NamedSharding(self.mesh, PartitionSpec())
+        return jax.tree_util.tree_map(
+            lambda a: jax.device_put(a, sharding), carry
+        )
 
     def init(self) -> Tuple[Any, jax.Array]:
         ids = jnp.arange(self.graph.n_vertices, dtype=jnp.int32)
@@ -271,6 +294,13 @@ class PregelExecutable:
         max_iters: int,
         on_device: Optional[bool] = None,
         adaptive: Optional[bool] = None,
+        *,
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_every: int = 0,
+        resume: bool = False,
+        injector: Optional[Any] = None,
+        max_restarts: int = 3,
+        keep_checkpoints: int = 3,
     ) -> FixpointResult:
         """Run to the Appendix-B.2 fixpoint.
 
@@ -279,6 +309,15 @@ class PregelExecutable:
         live inside one ``lax.while_loop``); dense plans default on-device.
         An explicit ``on_device=True`` is honored — it disables adaptive
         selection (the two are mutually exclusive; requesting both raises).
+
+        Fault tolerance (host driver only): ``checkpoint_dir`` checkpoints
+        the ``(state, active)`` carry host-side every ``checkpoint_every``
+        supersteps (default 8) through a
+        :class:`~repro.checkpoint.CheckpointStore`; a crash restores and
+        replays, and ``resume=True`` continues a run from disk — including
+        onto a *different* mesh after :meth:`remesh`.  ``injector``
+        overrides the compile-time :class:`~repro.ft.elastic.
+        FailureInjector` at the step boundary.
         """
 
         if on_device and adaptive:
@@ -286,24 +325,76 @@ class PregelExecutable:
                 "on_device=True and adaptive=True are incompatible: "
                 "adaptive dense/sparse selection needs the host driver"
             )
+        injector = self.injector if injector is None else injector
+        ft = checkpoint_dir is not None or injector is not None
+        if on_device and ft:
+            raise ValueError(
+                "fault tolerance (checkpoint_dir/injector) needs the host "
+                "driver: pass on_device=False"
+            )
+        if resume and checkpoint_dir is None:
+            raise ValueError("resume=True needs checkpoint_dir=")
         if adaptive is None:
             adaptive = (
                 self.semi_naive and self.supports_sparse and not on_device
             )
         if on_device is None:
-            on_device = not adaptive
+            on_device = not adaptive and not ft
         init = self.init()
         if on_device and not adaptive:
             return device_fixpoint(
                 self.superstep, self.converged, init, max_iters
             )
+        store, start_iter = None, 0
+        save_hook = restore_hook = None
+        if checkpoint_dir is not None:
+            from repro.checkpoint import CheckpointStore, latest_step
+
+            store = CheckpointStore(checkpoint_dir, keep=keep_checkpoints)
+            if checkpoint_every <= 0:
+                checkpoint_every = 8
+
+            def save_hook(carry, j):
+                store.save(j, carry, extra={"iteration": j})
+
+            def restore_hook():
+                carry, j, _ = store.restore(like=self.init())
+                return self._place_carry(carry), int(j)
+
+            if resume and latest_step(checkpoint_dir) is not None:
+                init, start_iter, _ = store.restore(like=self.init())
+                init = self._place_carry(init)
+                start_iter = int(start_iter)
         driver = HostFixpointDriver(
             step=lambda s, j: self.jitted_superstep(s, jnp.int32(j)),
             converged=self.converged,
-            config=DriverConfig(max_iters=max_iters),
+            config=DriverConfig(
+                max_iters=max_iters,
+                checkpoint_every=checkpoint_every if store else 0,
+                max_restarts=max_restarts,
+            ),
+            save=save_hook,
+            restore=restore_hook,
             select_step=self.adaptive_select_step if adaptive else None,
+            injector=injector,
         )
-        return driver.run(init)
+        if store is not None and start_iter == 0:
+            # Entry restore point: a crash before the first periodic save
+            # must still have somewhere to rewind to.
+            save_hook(init, 0)
+        try:
+            res = driver.run(init, start_iter=start_iter)
+        except BaseException:
+            # drain the async writer before the failure propagates, so it
+            # cannot race a successor run over the same checkpoint directory
+            if store is not None:
+                store.quiesce()
+            raise
+        if store is not None:
+            store.wait()  # surface any pending async-save failure
+        if self.remesh_events:
+            res = replace(res, remesh_events=self.remesh_events)
+        return res
 
     def driver(
         self,
@@ -313,6 +404,7 @@ class PregelExecutable:
     ) -> HostFixpointDriver:
         if adaptive is None:
             adaptive = self.semi_naive and self.supports_sparse
+        hooks.setdefault("injector", self.injector)
         return HostFixpointDriver(
             step=lambda s, j: self.jitted_superstep(s, jnp.int32(j)),
             converged=self.converged,
@@ -320,6 +412,34 @@ class PregelExecutable:
             select_step=self.adaptive_select_step if adaptive else None,
             **hooks,
         )
+
+    def remesh(self, mesh: Optional[Mesh]) -> "PregelExecutable":
+        """Recompile this vertex program onto a new (typically shrunken)
+        mesh after device loss: ``plan_pregel`` re-derives the physical
+        plan for the surviving topology, the edge slabs are re-partitioned,
+        and the remesh is recorded in ``plan.notes`` and carried into
+        ``FixpointResult.remesh_events``.  Host-side checkpoints written by
+        the old executable restore directly into the new one (the carry is
+        stored unsharded)."""
+
+        old_n = 1 if self.mesh is None else int(self.mesh.devices.size)
+        new = compile_pregel(
+            self.prog, self.graph, mesh=mesh, semi_naive=self.semi_naive,
+            **self._compile_kwargs,
+        )
+        if mesh is None:
+            shape, new_n = "1 device", 1
+        else:
+            shape = "x".join(
+                f"{n}={s}"
+                for n, s in zip(mesh.axis_names, mesh.devices.shape)
+            )
+            new_n = int(mesh.devices.size)
+        note = f"remesh({old_n}->{new_n}: {shape})"
+        new.plan = replace(new.plan, notes=new.plan.notes + (note,))
+        new.remesh_events = self.remesh_events + (note,)
+        new.injector = self.injector
+        return new
 
 
 def compile_pregel(
@@ -332,6 +452,7 @@ def compile_pregel(
     force_connector: Optional[str] = None,
     payload_bytes: int = 4,
     semi_naive: bool = False,
+    injector: Optional[Any] = None,
 ) -> PregelExecutable:
     """Compile a vertex program through the declarative stack (Fig. 1).
 
@@ -437,7 +558,7 @@ def compile_pregel(
 
     # (5): the unified executor materializes the planned superstep pipeline
     # (dense shard_map step + frontier-compacted sparse variants).
-    bundle = build_pregel_steps(prog, graph, plan, mesh)
+    bundle = build_pregel_steps(prog, graph, plan, mesh, injector=injector)
 
     return PregelExecutable(
         prog=prog,
@@ -452,4 +573,9 @@ def compile_pregel(
         sparse_step_factory=bundle.sparse_step_factory,
         shard_count_fn=bundle.shard_count_fn,
         local_edge_cap=bundle.local_edge_cap,
+        injector=bundle.injector,
+        _compile_kwargs={
+            "hw": hw, "force_connector": force_connector,
+            "payload_bytes": payload_bytes,
+        },
     )

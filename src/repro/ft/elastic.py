@@ -100,15 +100,57 @@ def stale_aggregate(
     partials: jax.Array,          # (n_shards, ...) partial aggregates
     arrived: jax.Array,           # (n_shards,) bool — arrived in time
     carry: jax.Array,             # (...) late contributions from last step
+    monoid: str = "sum",
 ) -> Tuple[jax.Array, jax.Array]:
-    """Bounded-staleness reduce: sum the on-time shards plus last step's late
-    arrivals; stash this step's late shards for the next step.
+    """Bounded-staleness reduce under any eligible registered monoid:
+    combine the on-time shards with last step's late arrivals; stash this
+    step's late shards (pre-combined) for the next step.
 
-    With every shard on time this is exactly a full sum (property-tested);
+    With every shard on time this is exactly a full reduce (property-tested);
     under stragglers no contribution is ever dropped — only delayed one step.
+
+    Eligibility is decided by the monoid registry's flags and **fails
+    closed**: a late contribution is applied one step later than its peers,
+    which is only sound when re-ordering/late application cannot change the
+    fixpoint —
+
+    * ``sum`` — the original error-feedback path: addition is commutative
+      and each contribution is applied exactly once, so the running total is
+      unbiased (delayed, never lost);
+    * idempotent / delta-safe monoids (``max``, ``min``, ``argmin``, ...) —
+      folding a late partial next step is the same as folding it now
+      (monotone lattice join; re-application is a no-op);
+    * everything else (``topk``, ``mean``, ``logsumexp``, ...) raises
+      :class:`~repro.core.monoid.MonoidError` — a multiset-merge applied
+      late double-counts against fresh partials, silently corrupting the
+      aggregate.
     """
 
+    from repro.core.monoid import MonoidError, get_monoid
+
+    m = get_monoid(monoid)
+    if not (monoid == "sum" or m.idempotent or bool(m.is_delta_safe)):
+        raise MonoidError(
+            f"monoid {monoid!r} is not eligible for bounded-staleness "
+            "aggregation: it is neither idempotent nor delta-safe (and not "
+            "the error-feedback 'sum' path), so a delayed contribution "
+            "would corrupt the reduce — failing closed"
+        )
     mask = arrived.reshape((-1,) + (1,) * (partials.ndim - 1))
-    on_time = jnp.sum(jnp.where(mask, partials, 0), axis=0)
-    late = jnp.sum(jnp.where(mask, jnp.zeros_like(partials), partials), axis=0)
-    return on_time + carry, late
+    if monoid == "sum":
+        on_time = jnp.sum(jnp.where(mask, partials, 0), axis=0)
+        late = jnp.sum(
+            jnp.where(mask, jnp.zeros_like(partials), partials), axis=0
+        )
+        return on_time + carry, late
+    ident = m.identity_like(partials)
+    on_parts = jnp.where(mask, partials, ident)
+    late_parts = jnp.where(mask, ident, partials)
+
+    def _fold(slabs):
+        out = slabs[0]
+        for i in range(1, slabs.shape[0]):
+            out = m.combine(out, slabs[i])
+        return out
+
+    return m.combine(_fold(on_parts), carry), _fold(late_parts)

@@ -1,0 +1,202 @@
+"""Chaos/elasticity SPMD conformance program, run as a subprocess by
+test_spmd_ft.py (the XLA device-count flag must be set before jax imports,
+and the main test process must keep seeing 1 device).
+
+Property defended: on an 8-virtual-device mesh, a fixpoint that (a) crashes
+and restores from its durable checkpoint, or (b) loses half its devices and
+is remeshed 8->4 then resumed from the same checkpoints, converges to the
+same answer as the uninterrupted run — for transitive closure, semi-naive
+connected components, weighted SSSP (Pregel with edge_data), and the
+multi-stratum PageRank->reach pipeline.  Checkpoints are host-side and
+unsharded, so the 4-device executable restores state written by the
+8-device one; the remesh is recorded in ``plan.notes`` and
+``FixpointResult.remesh_events``.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import json
+import tempfile
+
+import numpy as np
+import jax.numpy as jnp
+
+N = 32
+
+
+def main() -> None:
+    from repro.core.executor import Relation, compile_program
+    from repro.core.listings import (
+        connected_components_program,
+        pagerank_threshold_program,
+        transitive_closure_program,
+    )
+    from repro.core.pregel import Graph, VertexProgram, compile_pregel
+    from repro.ft import FailureInjector
+    from repro.launch.mesh import make_data_mesh
+
+    mesh8 = make_data_mesh()
+    mesh4 = make_data_mesh(4)
+    assert mesh8.devices.size == 8 and mesh4.devices.size == 4
+    results = {}
+    rng = np.random.default_rng(11)
+
+    src = rng.integers(0, N, 64)
+    dst = rng.integers(0, N, 64)
+    edge = Relation.from_columns(N, src, dst)
+
+    def chaos_generic(name, program, relations, diff, semi_naive=False,
+                      iters=40):
+        """Uninterrupted vs crash+restore vs kill-4-devices+remesh+resume."""
+
+        out = {}
+        clean = compile_program(
+            program, dict(relations), mesh=mesh8, semi_naive=semi_naive
+        ).run(max_iters=iters)
+
+        d1 = tempfile.mkdtemp(prefix=f"ckpt_{name}_crash_")
+        res = compile_program(
+            program, dict(relations), mesh=mesh8, semi_naive=semi_naive
+        ).run(
+            max_iters=iters, checkpoint_dir=d1, checkpoint_every=4,
+            injector=FailureInjector(crashes=[3]),
+        )
+        out["crash_err"] = diff(clean, res)
+        out["crash_restarts"] = res.restarts
+        out["phases_equal"] = bool(
+            res.phase_iterations == clean.phase_iterations
+        )
+
+        d2 = tempfile.mkdtemp(prefix=f"ckpt_{name}_remesh_")
+        ex8 = compile_program(
+            program, dict(relations), mesh=mesh8, semi_naive=semi_naive
+        )
+        try:
+            ex8.run(
+                max_iters=iters, checkpoint_dir=d2, checkpoint_every=2,
+                injector=FailureInjector(crashes=[2, 3]), max_restarts=1,
+            )
+            out["remesh_crash_raised"] = False
+        except RuntimeError:
+            out["remesh_crash_raised"] = True
+        ex4 = ex8.remesh(mesh4)
+        res = ex4.run(max_iters=iters, checkpoint_dir=d2, resume=True)
+        out["remesh_err"] = diff(clean, res)
+        out["remesh_note"] = bool(
+            any(n.startswith("remesh(8->4:") for n in ex4.plan.notes)
+        )
+        out["remesh_events"] = len(res.remesh_events)
+        out["remesh_phases_equal"] = bool(
+            res.phase_iterations == clean.phase_iterations
+        )
+        results[name] = out
+
+    # --- transitive closure ------------------------------------------------
+    chaos_generic(
+        "tc", transitive_closure_program(), {"edge": edge},
+        lambda a, b: float(np.sum(
+            np.asarray(a.state["tc"].present)
+            != np.asarray(b.state["tc"].present)
+        )),
+    )
+
+    # --- connected components, semi-naive ----------------------------------
+    s2, d2 = np.concatenate([src, dst]), np.concatenate([dst, src])
+    cc_rels = {
+        "edge": Relation.from_columns(N, s2, d2),
+        "node": Relation.from_columns(
+            N, np.arange(N), np.arange(N, dtype=np.float32)
+        ),
+    }
+    chaos_generic(
+        "cc_semi_naive", connected_components_program(), cc_rels,
+        lambda a, b: float(np.max(np.abs(
+            np.asarray(a.state["cc"].values[1])
+            - np.asarray(b.state["cc"].values[1])
+        ))),
+        semi_naive=True,
+    )
+
+    # --- multi-stratum PageRank -> threshold -> reach pipeline --------------
+    deg = np.bincount(src, minlength=N).astype(np.float32)
+    pr_rels = {
+        "edge": edge,
+        "node": Relation.from_columns(
+            N, np.arange(N), np.full(N, 1.0 / N, np.float32), deg,
+            np.full(N, 0.15 / N, np.float32),
+        ),
+    }
+    chaos_generic(
+        "pipeline", pagerank_threshold_program(tau=0.04), pr_rels,
+        lambda a, b: max(
+            float(np.max(np.abs(
+                np.asarray(a.state["rank"].values[1])
+                - np.asarray(b.state["rank"].values[1])
+            ))),
+            float(np.sum(
+                np.asarray(a.state["reach"].present)
+                != np.asarray(b.state["reach"].present)
+            )),
+        ),
+        iters=20,
+    )
+
+    # --- weighted SSSP: Pregel with edge_data -------------------------------
+    gsrc = np.repeat(np.arange(N), 4).astype(np.int32)
+    gdst = rng.integers(0, N, 4 * N).astype(np.int32)
+    weights = rng.uniform(0.5, 2.0, 4 * N).astype(np.float32)
+    g = Graph(
+        N, jnp.asarray(gsrc), jnp.asarray(gdst),
+        jnp.zeros(N, jnp.float32), edge_data=jnp.asarray(weights),
+    )
+    inf = jnp.float32(1e9)
+    vp = VertexProgram(
+        init_vertex=lambda ids, vd: jnp.where(ids == 0, 0.0, inf),
+        message=lambda j, s, ed: s + ed,
+        apply=lambda j, s, inbox, got: (
+            jnp.minimum(s, inbox), jnp.minimum(s, inbox) < s),
+        combine="min",
+    )
+
+    def sssp_diff(a, b):
+        return float(np.max(np.abs(
+            np.asarray(a.state[0]) - np.asarray(b.state[0])
+        )))
+
+    out = {}
+    clean = compile_pregel(vp, g, mesh=mesh8).run(
+        max_iters=40, on_device=False
+    )
+    d1 = tempfile.mkdtemp(prefix="ckpt_sssp_crash_")
+    res = compile_pregel(vp, g, mesh=mesh8).run(
+        max_iters=40, checkpoint_dir=d1, checkpoint_every=4,
+        injector=FailureInjector(crashes=[3]),
+    )
+    out["crash_err"] = sssp_diff(clean, res)
+    out["crash_restarts"] = res.restarts
+
+    d2 = tempfile.mkdtemp(prefix="ckpt_sssp_remesh_")
+    ex8 = compile_pregel(vp, g, mesh=mesh8)
+    try:
+        ex8.run(
+            max_iters=40, checkpoint_dir=d2, checkpoint_every=2,
+            injector=FailureInjector(crashes=[2, 3]), max_restarts=1,
+        )
+        out["remesh_crash_raised"] = False
+    except RuntimeError:
+        out["remesh_crash_raised"] = True
+    ex4 = ex8.remesh(mesh4)
+    res = ex4.run(max_iters=40, checkpoint_dir=d2, resume=True)
+    out["remesh_err"] = sssp_diff(clean, res)
+    out["remesh_note"] = bool(
+        any(n.startswith("remesh(8->4:") for n in ex4.plan.notes)
+    )
+    out["remesh_events"] = len(res.remesh_events)
+    results["sssp_weighted"] = out
+
+    print("RESULTS_JSON:" + json.dumps(results))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,514 @@
+"""Fault-tolerance tests: driver hygiene, failure injection, durable
+checkpoint/restore of in-flight fixpoints (incl. the multi-stratum phase
+cursor), elastic replanning, straggler fallback, and the monoid-generalized
+bounded-staleness aggregate."""
+
+import os
+import time
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal images: deterministic fallback shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointStore, save_pytree
+from repro.core.executor import (
+    ExecutorError,
+    Relation,
+    compile_program,
+)
+from repro.core.fixpoint import DriverConfig, HostFixpointDriver
+from repro.core.imru import IMRUTask, compile_imru
+from repro.core.listings import (
+    pagerank_threshold_program,
+    transitive_closure_program,
+)
+from repro.core.monoid import MonoidError, get_monoid, registered_monoids
+from repro.core.pregel import Graph, VertexProgram, compile_pregel
+from repro.ft import ElasticPlanner, FailureInjector
+from repro.ft.elastic import stale_aggregate
+
+RNG = np.random.default_rng(7)
+N = 24
+
+
+# ---------------------------------------------------------------------------
+# Driver hygiene (regressions for the shared-default / class-attribute bugs)
+# ---------------------------------------------------------------------------
+
+
+def _noop_driver(**kw):
+    return HostFixpointDriver(
+        step=lambda s, j: s, converged=lambda a, b: True, **kw
+    )
+
+
+def test_driver_config_default_is_fresh_per_instance():
+    d1 = _noop_driver()
+    d1.config.max_iters = 7
+    d1.config.checkpoint_every = 99
+    d2 = _noop_driver()
+    assert d2.config.max_iters == 1000
+    assert d2.config.checkpoint_every == 0
+
+
+def test_driver_fail_at_is_instance_state():
+    d1 = _noop_driver()
+    d1.fail_at = 3
+    d1._failed_once = True
+    d2 = _noop_driver()
+    assert d2.fail_at is None and d2._failed_once is False
+
+
+# ---------------------------------------------------------------------------
+# Failure injection at the step boundary
+# ---------------------------------------------------------------------------
+
+
+def test_injector_crash_without_restore_raises():
+    inj = FailureInjector(crashes=[2])
+    driver = HostFixpointDriver(
+        step=lambda s, j: s + 1.0,
+        converged=lambda a, b: False,
+        config=DriverConfig(max_iters=5),
+        injector=inj,
+    )
+    with pytest.raises(RuntimeError, match="injected device failure"):
+        driver.run(jnp.zeros(2))
+    assert inj.fired and inj.fired[0].kind == "crash"
+
+
+def test_injector_straggle_is_detected_and_hook_fires():
+    seen = []
+    inj = FailureInjector(straggles=[(6, 0.3)])
+    driver = HostFixpointDriver(
+        step=lambda s, j: s + 1.0,
+        converged=lambda a, b: False,
+        config=DriverConfig(max_iters=10, straggler_factor=3.0),
+        injector=inj,
+        on_straggler=lambda j, dt: seen.append(j),
+    )
+    res = driver.run(jnp.zeros(2))
+    assert res.straggler_events >= 1
+    assert 6 in seen
+    assert any(e.kind == "straggle" for e in inj.fired)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint store: error surfacing + structure mismatch
+# ---------------------------------------------------------------------------
+
+
+def test_store_background_failure_surfaces_on_wait_and_next_save(tmp_path):
+    blocker = tmp_path / "not_a_dir"
+    blocker.write_text("x")
+    store = CheckpointStore(str(blocker))
+    store.save(1, {"a": jnp.zeros(2)})
+    with pytest.raises(OSError):
+        store.wait()
+    # the error is consumed once; a save into the same broken dir re-fails
+    store.save(2, {"a": jnp.zeros(2)})
+    with pytest.raises(OSError):
+        store.save(3, {"a": jnp.zeros(2)})
+
+
+def test_store_gc_drops_stale_lineage_from_reused_directory(tmp_path):
+    """A fresh run reusing a checkpoint dir restarts the step counter; the
+    previous lineage's higher-numbered steps must not starve the live run's
+    checkpoints out of the retention window."""
+
+    d = str(tmp_path)
+    tree = {"a": jnp.zeros(2)}
+    first = CheckpointStore(d, keep=3)
+    for s in (16, 20, 24):
+        first.save(s, tree)
+    first.wait()
+    second = CheckpointStore(d, keep=3)
+    for s in (0, 4, 8):
+        second.save(s, tree)
+    second.wait()
+    _, step, _ = second.restore(like=tree)
+    assert step == 8
+    left = sorted(n for n in os.listdir(d) if n.startswith("step_"))
+    assert left == ["step_00000000", "step_00000004", "step_00000008"]
+
+
+def test_restore_treedef_mismatch_raises_clear_error(tmp_path):
+    save_pytree(str(tmp_path), 1, {"a": np.zeros(3, np.float32)})
+    store = CheckpointStore(str(tmp_path))
+    with pytest.raises(ValueError, match="tree structure"):
+        store.restore(
+            like={"a": jnp.zeros(3), "b": jnp.zeros(2)}
+        )
+
+
+# ---------------------------------------------------------------------------
+# Elastic replanning edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_elastic_replan_single_replica_boundary():
+    ep = ElasticPlanner(model_axis=16)
+    mesh, stranded = ep.replan(16)
+    assert mesh.n_devices == 16 and stranded == 0
+    assert mesh.size("data") == 1 and mesh.size("model") == 16
+    with pytest.raises(RuntimeError, match="cannot host one model replica"):
+        ep.replan(15)
+    with pytest.raises(RuntimeError):
+        ep.replan(0)
+
+
+def test_elastic_replan_stranded_accounting():
+    ep = ElasticPlanner(model_axis=16)
+    mesh, stranded = ep.replan(67)
+    assert mesh.n_devices == 64 and stranded == 3
+    assert mesh.size("data") == 4
+
+
+def test_elastic_replan_multi_pod_split():
+    ep = ElasticPlanner(model_axis=16)
+    mesh, stranded = ep.replan(64, multi_pod=True)
+    assert mesh.size("pod") == 2 and mesh.size("data") == 2
+    assert mesh.n_devices == 64 and stranded == 0
+    # an odd replica count cannot split into two pods: falls back flat
+    mesh, stranded = ep.replan(48, multi_pod=True)
+    assert mesh.size("pod") == 1 and mesh.size("data") == 3
+
+
+# ---------------------------------------------------------------------------
+# Bounded-staleness aggregation over the monoid registry
+# ---------------------------------------------------------------------------
+
+
+def _slabs(m, n_shards, seed):
+    rng = np.random.default_rng(seed)
+    if m.structured:
+        return jnp.asarray(rng.normal(size=(n_shards, 5, 2)), jnp.float32)
+    return jnp.asarray(rng.normal(size=(n_shards, 5)), jnp.float32)
+
+
+def _fold(m, slabs):
+    out = slabs[0]
+    for i in range(1, slabs.shape[0]):
+        out = m.combine(out, slabs[i])
+    return out
+
+
+def _eligible(name):
+    m = get_monoid(name)
+    return name == "sum" or m.idempotent or bool(m.is_delta_safe)
+
+
+@pytest.mark.parametrize("name", registered_monoids())
+def test_stale_aggregate_eligibility_fails_closed(name):
+    m = get_monoid(name)
+    partials = _slabs(m, 4, 0)
+    carry = m.identity_like(partials[0])
+    if _eligible(name):
+        out, late = stale_aggregate(
+            partials, jnp.ones(4, bool), carry, monoid=name
+        )
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(_fold(m, partials)),
+            rtol=1e-5, atol=1e-6,
+        )
+    else:
+        with pytest.raises(MonoidError, match="failing closed"):
+            stale_aggregate(partials, jnp.ones(4, bool), carry, monoid=name)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), steps=st.integers(2, 5))
+def test_stale_aggregate_never_drops_contributions(seed, steps):
+    """Fold of the emitted aggregates + the final carry == full reduce over
+    every partial ever produced, under random arrival masks — for every
+    eligible registered monoid."""
+
+    rng = np.random.default_rng(seed)
+    for name in registered_monoids():
+        if not _eligible(name):
+            continue
+        m = get_monoid(name)
+        n_shards = 4
+        carry = m.identity_like(_slabs(m, n_shards, 0)[0])
+        outs, all_partials = [], []
+        for t in range(steps):
+            p = _slabs(m, n_shards, rng.integers(0, 2**31))
+            mask = jnp.asarray(
+                rng.integers(0, 2, n_shards).astype(bool)
+            )
+            out, carry = stale_aggregate(p, mask, carry, monoid=name)
+            outs.append(out)
+            all_partials.append(p)
+        if name == "sum":
+            total = sum(np.asarray(o, np.float64) for o in outs) \
+                + np.asarray(carry, np.float64)
+            want = np.asarray(
+                jnp.concatenate(all_partials, axis=0), np.float64
+            ).sum(0)
+            np.testing.assert_allclose(total, want, rtol=1e-4, atol=1e-5)
+        else:
+            total = outs[0]
+            for o in outs[1:]:
+                total = m.combine(total, o)
+            total = m.combine(total, carry)
+            want = _fold(m, jnp.concatenate(all_partials, axis=0))
+            np.testing.assert_allclose(
+                np.asarray(total), np.asarray(want), rtol=1e-5, atol=1e-6
+            )
+
+
+# ---------------------------------------------------------------------------
+# Generic executor: durable checkpoint/restore + phase cursor
+# ---------------------------------------------------------------------------
+
+
+def _tc_fixture():
+    rng = np.random.default_rng(0)
+    src, dst = rng.integers(0, N, 40), rng.integers(0, N, 40)
+    return compile_program(
+        transitive_closure_program(),
+        {"edge": Relation.from_columns(N, src, dst)},
+    )
+
+
+def _pipeline_fixture():
+    rng = np.random.default_rng(0)
+    src, dst = rng.integers(0, N, 40), rng.integers(0, N, 40)
+    deg = np.maximum(np.bincount(src, minlength=N), 1).astype(np.float32)
+    rels = {
+        "edge": Relation.from_columns(N, src, dst),
+        "node": Relation.from_columns(
+            N, np.arange(N), np.full(N, 1.0 / N, np.float32), deg,
+            np.full(N, 0.15 / N, np.float32),
+        ),
+    }
+    return lambda: compile_program(pagerank_threshold_program(tau=0.04), rels)
+
+
+def _assert_states_equal(a, b, atol=1e-8):
+    assert set(a) == set(b)
+    for k in a:
+        assert (np.asarray(a[k].present) == np.asarray(b[k].present)).all(), k
+        for p in a[k].values:
+            np.testing.assert_allclose(
+                np.asarray(a[k].values[p]), np.asarray(b[k].values[p]),
+                atol=atol,
+            )
+
+
+def test_executor_crash_restore_matches_uninterrupted(tmp_path):
+    ex = _tc_fixture()
+    clean = ex.run(max_iters=64)
+    res = ex.run(
+        max_iters=64, checkpoint_dir=str(tmp_path), checkpoint_every=2,
+        injector=FailureInjector(crashes=[3]),
+    )
+    assert res.restarts == 1 and res.converged
+    _assert_states_equal(clean.state, res.state)
+
+
+def test_executor_ft_requires_host_driver(tmp_path):
+    ex = _tc_fixture()
+    with pytest.raises(ExecutorError, match="host"):
+        ex.run(max_iters=8, on_device=True, checkpoint_dir=str(tmp_path))
+    with pytest.raises(ExecutorError, match="resume"):
+        ex.run(max_iters=8, resume=True)
+
+
+def test_executor_phase_cursor_resume_skips_completed_phase(tmp_path):
+    """Kill the pipeline inside the *reach* phase; the resumed run continues
+    in that phase without re-running the 20-iteration *rank* phase — proven
+    by arming a crash at a rank-phase global step that never fires."""
+
+    make = _pipeline_fixture()
+    clean = make().run(max_iters=20)
+    assert len(clean.phase_iterations) == 2
+    rank_iters = clean.phase_iterations[0]
+    d = str(tmp_path)
+    with pytest.raises(RuntimeError, match="injected device failure"):
+        # crash at the first reach-phase step, with no restart budget
+        make().run(
+            max_iters=20, checkpoint_dir=d, checkpoint_every=4,
+            injector=FailureInjector(crashes=[rank_iters]), max_restarts=0,
+        )
+    trap = FailureInjector(crashes=[2])  # global step 2 lives in rank
+    res = make().run(
+        max_iters=20, checkpoint_dir=d, checkpoint_every=4, resume=True,
+        injector=trap,
+    )
+    assert res.restarts == 0          # the rank-phase trap never fired
+    assert trap.fired == []
+    assert res.phase_iterations == clean.phase_iterations
+    _assert_states_equal(clean.state, res.state)
+
+
+def test_executor_mid_phase_resume_matches_uninterrupted(tmp_path):
+    ex = _tc_fixture()
+    clean = ex.run(max_iters=64)
+    d = str(tmp_path)
+    with pytest.raises(RuntimeError):
+        ex.run(
+            max_iters=64, checkpoint_dir=d, checkpoint_every=2,
+            injector=FailureInjector(crashes=[3, 4]), max_restarts=1,
+        )
+    res = _tc_fixture().run(max_iters=64, checkpoint_dir=d, resume=True)
+    assert res.converged
+    # the resumed run reports only its own iterations, but the phase cursor
+    # accounts for the replayed prefix
+    assert res.phase_iterations == clean.phase_iterations
+    _assert_states_equal(clean.state, res.state)
+
+
+def test_executor_remesh_records_note_and_events():
+    ex = _tc_fixture()
+    clean = ex.run(max_iters=64)
+    ex2 = ex.remesh(None)
+    assert any(n.startswith("remesh(1->1") for n in ex2.plan.notes)
+    res = ex2.run(max_iters=64)
+    assert res.remesh_events == ex2.remesh_events
+    assert len(res.remesh_events) == 1
+    _assert_states_equal(clean.state, res.state)
+
+
+# ---------------------------------------------------------------------------
+# Pregel executable: checkpoint/restore knobs
+# ---------------------------------------------------------------------------
+
+
+def _pagerank_ex():
+    n = 48
+    rng = np.random.default_rng(1)
+    src, dst = [], []
+    for v in range(n):
+        for _ in range(int(rng.integers(1, 4))):
+            src.append(v)
+            dst.append(int(rng.integers(0, n)))
+        src.append(int(rng.integers(0, n)))
+        dst.append(v)
+    src = np.array(src, np.int32)
+    dst = np.array(dst, np.int32)
+    outdeg = np.bincount(src, minlength=n).astype(np.float32)
+    g = Graph(n, jnp.asarray(src), jnp.asarray(dst), jnp.asarray(outdeg))
+    vp = VertexProgram(
+        init_vertex=lambda ids, vd: jnp.stack(
+            [jnp.full((n,), 1.0 / n), vd], axis=1
+        ),
+        message=lambda j, s, ed: s[:, 0] / jnp.maximum(s[:, 1], 1.0),
+        apply=lambda j, s, inbox, got: (
+            jnp.stack([0.15 / n + 0.85 * inbox, s[:, 1]], axis=1),
+            jnp.ones(s.shape[0], jnp.bool_),
+        ),
+        combine="sum",
+    )
+    return compile_pregel(vp, g)
+
+
+def test_pregel_crash_restore_and_resume(tmp_path):
+    ex = _pagerank_ex()
+    clean = ex.run(max_iters=25, on_device=False)
+    d = str(tmp_path)
+    res = ex.run(
+        max_iters=25, checkpoint_dir=d, checkpoint_every=4,
+        injector=FailureInjector(crashes=[9]),
+    )
+    assert res.restarts == 1
+    np.testing.assert_allclose(
+        np.asarray(res.state[0]), np.asarray(clean.state[0]), atol=1e-8
+    )
+    with pytest.raises(RuntimeError):
+        ex.run(
+            max_iters=25, checkpoint_dir=d, checkpoint_every=4,
+            injector=FailureInjector(crashes=[10, 11]), max_restarts=1,
+        )
+    res2 = ex.run(max_iters=25, checkpoint_dir=d, resume=True)
+    np.testing.assert_allclose(
+        np.asarray(res2.state[0]), np.asarray(clean.state[0]), atol=1e-8
+    )
+
+
+def test_pregel_compile_time_injector_rides_the_bundle(tmp_path):
+    ex = _pagerank_ex()
+    clean = ex.run(max_iters=25, on_device=False)
+    # injector threaded through compile_pregel -> build_pregel_steps
+    from repro.core.executor import build_pregel_steps
+
+    inj = FailureInjector(crashes=[5])
+    bundle = build_pregel_steps(ex.prog, ex.graph, ex.plan, None,
+                                injector=inj)
+    assert bundle.injector is inj
+    ex.injector = inj
+    res = ex.run(
+        max_iters=25, checkpoint_dir=str(tmp_path), checkpoint_every=2
+    )
+    assert res.restarts == 1 and inj.fired
+    np.testing.assert_allclose(
+        np.asarray(res.state[0]), np.asarray(clean.state[0]), atol=1e-8
+    )
+
+
+def test_pregel_remesh_records_note():
+    ex = _pagerank_ex()
+    ex2 = ex.remesh(None)
+    assert any(n.startswith("remesh(1->1") for n in ex2.plan.notes)
+    assert ex2.remesh_events and "remesh(1->1" in ex2.remesh_events[0]
+    res = ex2.run(max_iters=25, on_device=False)
+    assert res.remesh_events == ex2.remesh_events
+
+
+# ---------------------------------------------------------------------------
+# IMRU: straggler -> k-ary aggregation-tree fallback
+# ---------------------------------------------------------------------------
+
+
+def _bgd():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(128, 4)).astype(np.float32)
+    w = rng.normal(size=4).astype(np.float32)
+    y = X @ w
+    task = IMRUTask(
+        init_model=lambda: jnp.zeros(4, jnp.float32),
+        map=lambda rec, m: ((rec["x"] @ m - rec["y"]) @ rec["x"]),
+        update=lambda j, m, g: m - 1e-4 * g,
+        tol=1e-7,
+    )
+    return task, {"x": jnp.asarray(X), "y": jnp.asarray(y)}
+
+
+def test_imru_straggler_triggers_kary_fallback():
+    task, records = _bgd()
+    clean = compile_imru(task, records).run(max_iters=60, on_device=False)
+    ex = compile_imru(task, records)
+    res = ex.run(
+        max_iters=60, on_device=False,
+        injector=FailureInjector(straggles=[(8, 0.25)]),
+    )
+    assert res.straggler_events >= 1
+    assert ex.straggler_fallbacks
+    assert ex.plan.reduce.kind == "kary_tree"
+    assert any("straggler-fallback(kary_tree" in n for n in ex.plan.notes)
+    np.testing.assert_allclose(
+        np.asarray(res.state), np.asarray(clean.state), rtol=1e-5
+    )
+
+
+def test_imru_checkpoint_resume(tmp_path):
+    task, records = _bgd()
+    ex = compile_imru(task, records)
+    clean = ex.run(max_iters=60, on_device=False)
+    d = str(tmp_path)
+    with pytest.raises(RuntimeError):
+        ex.run(
+            max_iters=60, checkpoint_dir=d, checkpoint_every=10,
+            injector=FailureInjector(crashes=[25, 26]), max_restarts=1,
+            straggler_fallback=False,
+        )
+    res = ex.run(max_iters=60, checkpoint_dir=d, resume=True,
+                 straggler_fallback=False)
+    np.testing.assert_allclose(
+        np.asarray(res.state), np.asarray(clean.state), rtol=1e-5
+    )

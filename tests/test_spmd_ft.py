@@ -1,0 +1,42 @@
+"""Chaos differential conformance on 8 virtual devices (subprocess).
+
+Each workload in spmd_ft_program.py runs three ways on an 8-shard mesh:
+uninterrupted, crash+restore-from-checkpoint, and device-kill followed by
+an 8->4 remesh that resumes from the (host-side, unsharded) checkpoints.
+Both fault paths must land on the uninterrupted answer to <= 1e-8, report
+their restarts/remesh events, and record the new topology in plan notes.
+"""
+
+import pytest
+
+from _spmd_subprocess import run_spmd_program
+
+WORKLOADS = ("tc", "cc_semi_naive", "pipeline", "sssp_weighted")
+
+
+@pytest.fixture(scope="module")
+def results():
+    return run_spmd_program("spmd_ft_program.py")
+
+
+@pytest.mark.parametrize("name", WORKLOADS)
+def test_crash_restore_matches_uninterrupted(results, name):
+    out = results[name]
+    assert out["crash_err"] <= 1e-8, out
+    assert out["crash_restarts"] >= 1, out
+
+
+@pytest.mark.parametrize("name", WORKLOADS)
+def test_remesh_8_to_4_matches_uninterrupted(results, name):
+    out = results[name]
+    assert out["remesh_crash_raised"], out
+    assert out["remesh_err"] <= 1e-8, out
+    assert out["remesh_note"], out
+    assert out["remesh_events"] == 1, out
+
+
+@pytest.mark.parametrize("name", ("tc", "cc_semi_naive", "pipeline"))
+def test_resumed_phase_cursor_matches_uninterrupted(results, name):
+    out = results[name]
+    assert out["phases_equal"], out
+    assert out["remesh_phases_equal"], out
