@@ -30,6 +30,7 @@ def _modules(smoke: bool):
         fig10_semi_naive,
         fig11_generic_engine,
         fig12_fault_tolerance,
+        fig13_frontend,
         table1_pagerank_scaleup,
         roofline,
         microbench,
@@ -37,11 +38,12 @@ def _modules(smoke: bool):
 
     if smoke:
         return (fig10_semi_naive, fig11_generic_engine,
-                fig12_fault_tolerance, fig9_connector_plans, roofline)
+                fig12_fault_tolerance, fig13_frontend,
+                fig9_connector_plans, roofline)
     return (fig6_bgd_speedup, fig7_bgd_scaleup, fig8_pagerank_speedup,
             table1_pagerank_scaleup, fig9_connector_plans,
             fig10_semi_naive, fig11_generic_engine, fig12_fault_tolerance,
-            microbench, roofline)
+            fig13_frontend, microbench, roofline)
 
 
 def main(argv=None) -> int:

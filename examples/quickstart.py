@@ -9,9 +9,11 @@ turns them into the Listing-2 Datalog program, proves XY-stratification,
 derives the Figure-2 logical plan, cost-plans the physical dataflow, and
 runs the fixpoint.
 
-Part 2 — the unified executor runs programs NO front-end hardcodes: a plain
-Datalog transitive closure compiled by ``compile_program`` onto the same
-engine (dense-grid backend, fixpoint driver, planner notes).
+Part 2 — the unified executor runs programs NO front-end hardcodes: a
+transitive closure written as *Datalog text*, parsed by ``core.parser``,
+optimized by the ``core.rewrite`` pass (join reordering, select pushdown,
+CSE — see the ``rewrite(...)`` plan note), and compiled by
+``compile_program`` onto the same engine.
 """
 
 import numpy as np
@@ -19,25 +21,38 @@ import jax.numpy as jnp
 
 from repro.core.executor import Relation, compile_program
 from repro.core.imru import IMRUTask, compile_imru
-from repro.core.listings import transitive_closure_program
+from repro.core.parser import parse
+
+TC_TEXT = """
+% Transitive closure, straight from text to the unified engine.
+T1: tc(0, X, Y)   :- edge(X, Y).
+T2: tc(J+1, X, Y) :- tc(J, X, Z), edge(Z, Y).
+T3: tc(J+1, X, Y) :- tc(J, X, Y).
+"""
 
 
 def transitive_closure_demo() -> None:
-    """ANY XY-stratified program on the unified executor (no front-end)."""
+    """ANY XY-stratified program on the unified executor (no front-end),
+    written as Datalog text."""
 
     n = 64
     rng = np.random.default_rng(3)
     src = rng.integers(0, n, 2 * n)
     dst = rng.integers(0, n, 2 * n)
 
+    program = parse(TC_TEXT, name="transitive-closure")
     ex = compile_program(
-        transitive_closure_program(),
+        program,
         {"edge": Relation.from_columns(n, src, dst)},
+        rewrite=True,
     )
-    print("\n== generic program (transitive closure) ==")
+    print("\n== generic program (transitive closure, parsed from text) ==")
     print(ex.program.pretty())
     print("\n== generic physical plan ==")
     print(ex.plan.explain())
+    rewrite_notes = [x for x in ex.plan.notes if x.startswith("rewrite(")]
+    assert rewrite_notes, ex.plan.notes
+    print(f"\nrewrite pass: {rewrite_notes[0]}")
 
     res = ex.run(max_iters=2 * n)
     tc = np.asarray(res.state["tc"].present)

@@ -77,6 +77,7 @@ __all__ = [
     "LogicalPlan",
     "translate",
     "semi_naive_rewrite",
+    "rewrite_ops",
     "TranslationError",
 ]
 
@@ -691,6 +692,12 @@ def _rewrite_ops(op: LogicalOp, fn) -> LogicalOp:
     if changes:
         op = _dc.replace(op, **changes)
     return fn(op)
+
+
+#: Public bottom-up rewriter over operator trees — the primitive that
+#: :mod:`repro.core.rewrite` (the optimizer pass) and the semi-naive delta
+#: rewrite below are both built on.
+rewrite_ops = _rewrite_ops
 
 
 def semi_naive_rewrite(

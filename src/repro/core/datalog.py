@@ -40,6 +40,7 @@ __all__ = [
     "TempSucc",
     "TempZero",
     "Term",
+    "TemporalTerm",
     "SetTerm",
     "Atom",
     "FunctionAtom",
@@ -441,6 +442,18 @@ class Program:
         for rule in self.rules:
             lines.append(repr(rule))
         return "\n".join(lines)
+
+    def to_text(self) -> str:
+        """Render as parseable rule text (see :func:`repro.core.parser.parse`).
+
+        The inverse of the text frontend: ``parse(p.to_text(), name=p.name,
+        udfs=p.udfs, aggregates=p.aggregates)`` reproduces this program up to
+        fresh-variable renaming (anonymous variables print as ``_``).
+        """
+
+        from repro.core import parser  # local import to avoid cycle
+
+        return parser.to_text(self)
 
 
 # ---------------------------------------------------------------------------

@@ -58,7 +58,9 @@ import ast
 import functools
 import time
 from dataclasses import dataclass, field, replace
-from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import (
+    Any, Callable, Dict, FrozenSet, List, Mapping, Optional, Sequence, Tuple,
+)
 
 import numpy as np
 
@@ -266,6 +268,11 @@ class _Ctx:
     connectors: Mapping[str, str]
     j: Any
     label: str = ""
+    # CSE support: ids of canonical shared subtrees (from the rewrite pass)
+    # and the per-context memo of their evaluated grids.  Sound because only
+    # EDB-pure subtrees are shared — their inputs never change within a step.
+    shared: FrozenSet[int] = frozenset()
+    memo: Dict[int, _Inter] = field(default_factory=dict)
 
 
 def _read_pred(ctx: _Ctx, name: str) -> Dict[str, Any]:
@@ -342,6 +349,16 @@ def _join(l: _Inter, r: _Inter, keys: Tuple[str, ...], n: int) -> _Inter:
 
 
 def _eval(op: algebra.LogicalOp, ctx: _Ctx) -> _Inter:
+    if ctx.shared and id(op) in ctx.shared:
+        hit = ctx.memo.get(id(op))
+        if hit is None:
+            hit = _eval_inner(op, ctx)
+            ctx.memo[id(op)] = hit
+        return hit
+    return _eval_inner(op, ctx)
+
+
+def _eval_inner(op: algebra.LogicalOp, ctx: _Ctx) -> _Inter:
     n = ctx.n
     if isinstance(op, algebra.ScanEDB):
         if op.relation == "__unit__":
@@ -695,6 +712,9 @@ class GenericExecutable:
     mesh: Optional[Mesh]
     semi_naive: bool = False
     merge_monoids: Dict[str, Optional[str]] = field(default_factory=dict)
+    # Canonical shared-subtree ids from the rewrite pass (CSE): _eval
+    # memoizes these nodes once per evaluation context.
+    shared_ids: FrozenSet[int] = frozenset()
     # Elastic fault tolerance: one note per remesh this executable's lineage
     # went through (propagated into FixpointResult.remesh_events), plus the
     # compile kwargs :meth:`remesh` needs to re-derive the physical plan.
@@ -743,6 +763,7 @@ class GenericExecutable:
             connectors=self.plan.connectors,
             j=j,
             label=label,
+            shared=self.shared_ids,
         )
 
     def _materialize(self, df, inter: _Inter):
@@ -1226,6 +1247,7 @@ def compile_program(
     domain: Optional[int] = None,
     hw: HardwareSpec = TPU_V5E,
     force_connector: Optional[str] = None,
+    rewrite: bool = False,
     **frontend_kwargs,
 ):
     """Compile ANY XY-stratified program onto the unified executor.
@@ -1242,6 +1264,13 @@ def compile_program(
     supersteps, fused exchanges, reduce trees) as the operator
     implementation; everything else runs on the generic dense-grid
     interpreter with sequential fixpoint phases.
+
+    ``rewrite=True`` runs the :mod:`repro.core.rewrite` optimizer pass
+    (join reordering, select pushdown, cross-rule CSE) over the logical
+    plan before physical planning; the decisions are recorded in
+    ``plan.notes`` as a ``rewrite(...)`` entry.  Listing fast paths ignore
+    the flag (their plans are already specialized), keeping their plan
+    notes byte-identical with and without it.
     """
 
     shape = _listing_shape(program)
@@ -1288,6 +1317,19 @@ def compile_program(
     for name in program.edb:
         if name not in rels:
             raise ExecutorError(f"missing EDB relation {name!r}")
+
+    # Rewrite-rule optimizer pass (join reorder, select pushdown, CSE) —
+    # runs on the logical DAG before signatures/phases/planning so the
+    # rewritten operator trees are what the interpreter executes.
+    rw_notes: Tuple[str, ...] = ()
+    shared_ids: FrozenSet[int] = frozenset()
+    if rewrite:
+        from repro.core.rewrite import rewrite_plan
+
+        rewritten = rewrite_plan(logical, program, rels, domain)
+        logical = rewritten.plan
+        rw_notes = rewritten.notes
+        shared_ids = rewritten.shared_ids
 
     sigs = _infer_signatures(
         tuple(logical.init) + tuple(logical.body), rels
@@ -1411,7 +1453,7 @@ def compile_program(
     plan = plan_program(
         tuple(tuple(sorted(g)) for g in phase_groups),
         tuple(specs), domain, mesh_spec, hw,
-        semi_naive=semi_naive, extra_notes=sn_notes,
+        semi_naive=semi_naive, extra_notes=sn_notes + rw_notes,
     )
 
     ex = GenericExecutable(
@@ -1426,7 +1468,9 @@ def compile_program(
         mesh=mesh,
         semi_naive=semi_naive,
         merge_monoids=merge_monoids,
-        _compile_kwargs={"hw": hw, "force_connector": force_connector},
+        shared_ids=shared_ids,
+        _compile_kwargs={"hw": hw, "force_connector": force_connector,
+                         "rewrite": rewrite},
     )
     # Device-place copies of the EDB grids (loop-invariant caching) — the
     # caller's Relation objects stay untouched, so one Relation can feed

@@ -385,6 +385,13 @@ def plan_program(
     *merging* algorithm: keys-leading grid order makes the flattened segment
     ids presorted, so no sort is ever paid).  Both costs are estimated and
     the winner recorded.
+
+    ``extra_notes`` carries upstream logical-rewrite decisions, appended
+    last in a fixed order: the ``semi-naive(...)`` delta-rewrite entries,
+    then the optimizer's single ``rewrite(join-reorder: ..., pushdown: ...,
+    cse: n shared)`` entry from :func:`repro.core.rewrite.rewrite_plan`
+    (when ``compile_program(..., rewrite=True)``) — so golden tests pin
+    logical and physical decisions in one tuple.
     """
 
     notes: List[str] = [

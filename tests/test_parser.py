@@ -1,0 +1,346 @@
+"""Datalog text frontend: round-trip properties + fail-closed surfaces.
+
+Three properties are defended:
+
+1. **Round-trip** — for seed-generated programs with no anonymous
+   variables, ``parse(to_text(p))`` reproduces the exact rule tuple and
+   inferred EDB (property-tested; the hypothesis shim replays
+   deterministic samples when hypothesis is absent).  Listing programs
+   that DO use anonymous/fresh variables round-trip to a textual
+   fixpoint instead: ``to_text(parse(to_text(p))) == to_text(p)``.
+2. **Equivalence with the hand-built listings** — the ``listings.*_TEXT``
+   constants parse to rule-identical programs (TC / CC / SG /
+   negated-reach) or algebra-identical plans (pregel / imru / pagerank,
+   whose hand-built forms use fresh variables).
+3. **Fail closed** — unsafe rules (unbound head/negation/comparison
+   variables), unregistered aggregates and UDFs, bad temporal terms, and
+   recursion through negation all raise :class:`ParseError` carrying the
+   offending source span; nothing unsafe parses into a Program.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, strategies as st  # noqa: F401
+
+from repro.core import algebra
+from repro.core.datalog import (
+    AggExpr,
+    Aggregate,
+    Atom,
+    Comparison,
+    Const,
+    Negation,
+    Program,
+    Rule,
+    TempSucc,
+    TempVar,
+    TempZero,
+    Var,
+)
+from repro.core.listings import (
+    connected_components_program,
+    imru_program,
+    negated_reach_program,
+    pagerank_threshold_program,
+    parsed_connected_components_program,
+    parsed_imru_program,
+    parsed_negated_reach_program,
+    parsed_pagerank_threshold_program,
+    parsed_pregel_program,
+    parsed_same_generation_program,
+    parsed_transitive_closure_program,
+    pregel_program,
+    same_generation_program,
+    transitive_closure_program,
+)
+from repro.core.parser import ParseError, parse, to_text
+
+
+# ---------------------------------------------------------------------------
+# 1. Round-trip properties
+# ---------------------------------------------------------------------------
+
+
+def _random_program(seed: int) -> Program:
+    """A seed-deterministic XY-stratified program with no anonymous or
+    fresh variables, so ``parse(to_text(p))`` must reproduce the rules
+    exactly (anonymous variables print as ``_`` and re-parse to *new*
+    fresh names, which would break term-level equality)."""
+
+    rng = np.random.default_rng(seed)
+    J, Jp1, J0 = TempVar("J"), TempSucc("J"), TempZero()
+    X, Y, Z, L = Var("X"), Var("Y"), Var("Z"), Var("L")
+
+    body = [Atom("p", (J, X, Z), temporal=True), Atom("e", (Z, Y))]
+    edb = {"e": 2}
+    if rng.integers(2):
+        body.append(Atom("g", (Y,)))
+        edb["g"] = 1
+    if rng.integers(2):
+        body.append(Negation(Atom("blk", (Y,))))
+        edb["blk"] = 1
+    if rng.integers(2):
+        op = ["<", ">", "<=", ">=", "!=", "=="][int(rng.integers(6))]
+        body.append(Comparison(op, Y, Const(int(rng.integers(0, 9)))))
+
+    aggregated = bool(rng.integers(2))
+    aggregates = {}
+    if aggregated:
+        # min-aggregated head over a bound value column.
+        body.insert(1, Atom("w", (Y, L)))
+        edb["w"] = 2
+        head = Atom("p", (Jp1, X, AggExpr("min", L)), temporal=True)
+        from repro.core.monoid import get_monoid
+
+        aggregates = {"min": get_monoid("min").as_aggregate()}
+    else:
+        head = Atom("p", (Jp1, X, Y), temporal=True)
+
+    rules = (
+        Rule(Atom("p", (J0, X, Y), temporal=True),
+             (Atom("e", (X, Y)),), label="R1"),
+        Rule(head, tuple(body), label="R2"),
+        Rule(Atom("p", (Jp1, X, Y), temporal=True),
+             (Atom("p", (J, X, Y), temporal=True),), label="R3"),
+    )
+    return Program(rules=rules, edb=edb, aggregates=aggregates, name="prop")
+
+
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_roundtrip_random_programs(seed):
+    prog = _random_program(seed)
+    back = parse(to_text(prog), name=prog.name,
+                 aggregates=prog.aggregates)
+    assert back.rules == prog.rules
+    assert back.edb == prog.edb
+    # And the pretty-printer is a fixpoint from the first round on.
+    assert to_text(back) == to_text(prog)
+
+
+def _listing_programs():
+    combine = Aggregate("combine", zero=lambda: 0.0,
+                        combine=lambda a, b: a + b)
+    reduce_ = Aggregate("reduce", zero=lambda: 0.0,
+                        combine=lambda a, b: a + b)
+    return [
+        transitive_closure_program(),
+        connected_components_program(),
+        same_generation_program(),
+        negated_reach_program(),
+        pagerank_threshold_program(),
+        pregel_program(aggregates={"combine": combine}),
+        imru_program(aggregates={"reduce": reduce_}),
+    ]
+
+
+def test_to_text_parse_fixpoint_on_all_listings():
+    """Fresh/anonymous variables mean parse(to_text(p)) can't be
+    rule-identical for every listing, but the *text* must reach a
+    fixpoint after one round trip."""
+
+    for prog in _listing_programs():
+        text = to_text(prog)
+        back = parse(text, name=prog.name, udfs=prog.udfs,
+                     aggregates=prog.aggregates, edb=prog.edb)
+        assert to_text(back) == text, prog.name
+
+
+def test_roundtrip_preserves_rules_when_no_fresh_vars():
+    for prog in (transitive_closure_program(),
+                 connected_components_program(),
+                 same_generation_program(),
+                 negated_reach_program()):
+        back = parse(to_text(prog), name=prog.name, udfs=prog.udfs,
+                     aggregates=prog.aggregates, edb=prog.edb)
+        assert back.rules == prog.rules, prog.name
+
+
+# ---------------------------------------------------------------------------
+# 2. Text constants == hand-built listings
+# ---------------------------------------------------------------------------
+
+
+def test_parsed_text_forms_match_hand_built_rules():
+    for hand, parsed in (
+        (transitive_closure_program(), parsed_transitive_closure_program()),
+        (connected_components_program(),
+         parsed_connected_components_program()),
+        (same_generation_program(), parsed_same_generation_program()),
+        (negated_reach_program(), parsed_negated_reach_program()),
+    ):
+        assert parsed.rules == hand.rules, hand.name
+        assert parsed.edb == hand.edb, hand.name
+        assert parsed.name == hand.name
+
+
+def test_parsed_text_forms_match_hand_built_algebra():
+    """pregel / imru / pagerank hand-built forms use fresh variables, so
+    equivalence is pinned on the translated logical plan instead."""
+
+    combine = Aggregate("combine", zero=lambda: 0.0,
+                        combine=lambda a, b: a + b)
+    reduce_ = Aggregate("reduce", zero=lambda: 0.0,
+                        combine=lambda a, b: a + b)
+    for hand, parsed in (
+        (pregel_program(aggregates={"combine": combine}),
+         parsed_pregel_program(aggregates={"combine": combine})),
+        (imru_program(aggregates={"reduce": reduce_}),
+         parsed_imru_program(aggregates={"reduce": reduce_})),
+        (pagerank_threshold_program(), parsed_pagerank_threshold_program()),
+    ):
+        assert (algebra.translate(parsed).structure()
+                == algebra.translate(hand).structure()), hand.name
+
+
+def test_parsed_listing_constructors_fail_closed_like_hand_built():
+    with pytest.raises(ValueError, match="combine"):
+        parsed_pregel_program()
+    with pytest.raises(ValueError, match="reduce"):
+        parsed_imru_program()
+
+
+def test_program_to_text_method_delegates():
+    prog = transitive_closure_program()
+    assert prog.to_text() == to_text(prog)
+    assert "T2: tc(J+1, X, Y) :- tc(J, X, Z), edge(Z, Y)." in prog.to_text()
+
+
+# ---------------------------------------------------------------------------
+# 3. Fail-closed surfaces (ParseError + offending span)
+# ---------------------------------------------------------------------------
+
+
+def _err(text, **kw) -> ParseError:
+    with pytest.raises(ParseError) as ei:
+        parse(text, **kw)
+    return ei.value
+
+
+def test_unbound_head_variable_has_span():
+    err = _err("R1: p(0, X, Y) :- e(X).")
+    assert "head variable 'Y'" in str(err)
+    assert err.span is not None
+    assert (err.span.line, err.span.col) == (1, 13)  # points at Y
+    assert "R1: p(0, X, Y) :- e(X)." in str(err)  # source line rendered
+    assert "^" in str(err)  # caret
+
+
+def test_unbound_negation_variable_has_span():
+    err = _err("R1: p(0, X) :- e(X), !q(Y).\nR2: p(J+1, X) :- p(J, X).")
+    assert "appears only under negation" in str(err)
+    assert (err.span.line, err.span.col) == (1, 25)
+
+
+def test_unbound_comparison_variable_has_span():
+    err = _err("R1: p(0, X) :- e(X), Y > 1.\nR2: p(J+1, X) :- p(J, X).")
+    assert "comparison over unbound variable 'Y'" in str(err)
+    assert (err.span.line, err.span.col) == (1, 22)
+
+
+def test_anonymous_variable_rejected_in_head():
+    err = _err("R1: p(0, X, _) :- e(X).")
+    assert "anonymous variable" in str(err)
+    assert (err.span.line, err.span.col) == (1, 13)
+
+
+def test_unregistered_aggregate_names_registry():
+    err = _err(
+        "C1: cc(0, X, L) :- node(X, L).\n"
+        "C2: cc(J+1, X, frob<L>) :- cc(J, Y, L), edge(Y, X).\n"
+        "C3: cc(J+1, X, L) :- cc(J, X, L).\n"
+    )
+    assert "unregistered aggregate 'frob'" in str(err)
+    assert "CombineMonoid registry" in str(err)
+    assert err.span.line == 2
+
+
+def test_registered_monoids_resolve_without_explicit_aggregates():
+    prog = parse(
+        "C1: cc(0, X, L) :- node(X, L).\n"
+        "C2: cc(J+1, X, min<L>) :- cc(J, Y, L), edge(Y, X).\n"
+        "C3: cc(J+1, X, L) :- cc(J, X, L).\n",
+        name="cc",
+    )
+    assert "min" in prog.aggregates
+    assert prog.aggregates["min"].idempotent
+
+
+def test_unregistered_udf_has_span():
+    err = _err("R1: p(0, X, Y) :- e(X), f(X -> Y).\n"
+               "R2: p(J+1, X, Y) :- p(J, X, Y).")
+    assert "unregistered UDF 'f'" in str(err)
+    assert (err.span.line, err.span.col) == (1, 25)
+
+
+def test_bad_temporal_successor_rejected():
+    err = _err("R1: p(0, X) :- e(X).\nR2: p(J+2, X) :- p(J, X).")
+    assert "J+1" in str(err)
+    assert err.span.line == 2
+
+
+def test_temporal_predicate_never_derived():
+    err = _err("R1: p(0, X) :- q(J, X).")
+    assert "never derived" in str(err)
+
+
+def test_syntax_error_points_at_offending_token():
+    err = _err("R1: p(0 X) :- e(X).")
+    assert "expected ')'" in str(err)
+    assert (err.span.line, err.span.col) == (1, 9)
+
+
+def test_recursion_through_negation_fails_closed():
+    # Non-temporal mutual recursion through negation: there is no
+    # XY-schedule for this program and parse() must refuse it.
+    err = _err("B1: p(X) :- e(X), !q(X).\nB3: q(X) :- e(X), !p(X).")
+    assert "not XY-stratified" in str(err)
+    assert "recursive predicate" in str(err)
+    # The span names the offending rule, not just the program.
+    assert err.span.line == 1
+    assert "B1:" in str(err)
+
+
+def test_temporal_negation_of_sibling_stratum_fails_closed():
+    err = _err(
+        "A1: p(0, X) :- e(X).\n"
+        "A2: p(J+1, X) :- p(J, X), !q(X).\n"
+        "A3: q(X) :- p(J, X), marked(X).\n"
+    )
+    assert "not XY-stratified" in str(err)
+    assert err.span.line == 2  # A2, the rule with the offending negation
+
+
+def test_temporal_mutual_negation_at_prior_state_is_legal():
+    # Negating the *current* state of a sibling temporal predicate is
+    # XY-legal (both advance in lockstep) — the frontend must not
+    # over-reject.
+    prog = parse(
+        "A1: p(0, X) :- e(X).\n"
+        "A2: p(J+1, X) :- p(J, X), !q(J, X).\n"
+        "A3: q(0, X) :- e(X).\n"
+        "A4: q(J+1, X) :- q(J, X), !p(J, X).\n",
+        name="temporal-neg",
+    )
+    assert {r.label for r in prog.rules} == {"A1", "A2", "A3", "A4"}
+
+
+def test_comments_strings_and_annotations_parse():
+    prog = parse(
+        "% leading comment\n"
+        "R1: p(0, X, 'it\\'s') :- e(X).  % trailing\n"
+        "@frontier F1: q(X) :- p(J, X, S).\n"
+        "F2: @frontier r(X) :- p(J, X, S).\n",
+        name="syntax",
+    )
+    labels = {r.label: r for r in prog.rules}
+    assert labels["R1"].head.args[2] == Const("it's")
+    assert labels["F1"].frontier and labels["F2"].frontier
+
+
+def test_empty_program_rejected():
+    err = _err("% nothing but comments\n")
+    assert "empty program" in str(err)

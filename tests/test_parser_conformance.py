@@ -1,0 +1,194 @@
+"""Differential conformance: parsed-text programs == hand-built ASTs.
+
+The text frontend is only trustworthy if a parsed program *executes*
+identically to the hand-built listing it mirrors, so every shipped
+workload runs both forms through the same engine and compares converged
+state to <= 1e-8 — on the host driver and the jitted device driver, with
+the rewrite pass off AND on (rewrite-on must change plans, never
+results).  Listing 1/2 text forms additionally dispatch onto the
+specialized Pregel/IMRU fast paths with byte-identical plan notes.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.executor import Relation, compile_program
+from repro.core.imru import IMRUTask, compile_imru
+from repro.core.listings import (
+    connected_components_program,
+    negated_reach_program,
+    pagerank_threshold_program,
+    parsed_connected_components_program,
+    parsed_imru_program,
+    parsed_negated_reach_program,
+    parsed_pagerank_threshold_program,
+    parsed_pregel_program,
+    parsed_same_generation_program,
+    parsed_transitive_closure_program,
+    same_generation_program,
+    transitive_closure_program,
+)
+from repro.core.monoid import get_monoid
+from repro.core.pregel import Graph, VertexProgram, compile_pregel
+
+N = 64
+
+
+def _relations():
+    rng = np.random.default_rng(0)
+    src, dst = rng.integers(0, N, 96), rng.integers(0, N, 96)
+    edge = Relation.from_columns(N, src, dst)
+    node2 = Relation.from_columns(
+        N, np.arange(N), np.arange(N, dtype=np.float32))
+    deg = np.bincount(src, minlength=N).astype(np.float32)
+    node4 = Relation.from_columns(
+        N, np.arange(N), np.full(N, 1.0 / N, np.float32), deg,
+        np.full(N, 0.15 / N, np.float32))
+    source = Relation.from_columns(
+        N, np.arange(8), np.array([1, 0, 1, 1, 0, 1, 0, 1], np.float32))
+    blocked = Relation.from_columns(N, np.array([3, 9, 27]))
+    nodew = Relation.from_columns(
+        N, np.arange(N), (np.arange(N) % 5).astype(np.float32))
+    return {
+        "edge": edge, "node2": node2, "node4": node4,
+        "source": source, "blocked": blocked, "nodew": nodew,
+    }
+
+
+CASES = {
+    "transitive-closure": (
+        transitive_closure_program, parsed_transitive_closure_program,
+        lambda r: {"edge": r["edge"]}, False),
+    "connected-components": (
+        connected_components_program, parsed_connected_components_program,
+        lambda r: {"edge": r["edge"], "node": r["node2"]}, False),
+    "connected-components/semi-naive": (
+        connected_components_program, parsed_connected_components_program,
+        lambda r: {"edge": r["edge"], "node": r["node2"]}, True),
+    "same-generation": (
+        same_generation_program, parsed_same_generation_program,
+        lambda r: {"parent": r["edge"]}, False),
+    "pagerank-threshold": (
+        pagerank_threshold_program, parsed_pagerank_threshold_program,
+        lambda r: {"edge": r["edge"], "node": r["node4"]}, False),
+    "negated-reach": (
+        negated_reach_program, parsed_negated_reach_program,
+        lambda r: {"source": r["source"], "edge": r["edge"],
+                   "node": r["nodew"], "blocked": r["blocked"]}, False),
+}
+
+
+def _assert_states_match(a, b, tag):
+    assert a.converged and b.converged, tag
+    assert set(a.state) == set(b.state), tag
+    for pred, st in a.state.items():
+        st2 = b.state[pred]
+        assert (np.asarray(st.present) == np.asarray(st2.present)).all(), \
+            (tag, pred)
+        for i in st.values:
+            av = np.asarray(st.values[i])
+            bv = np.asarray(st2.values[i])
+            assert np.max(np.abs(av - bv)) <= 1e-8, (tag, pred, i)
+
+
+@pytest.mark.parametrize("rewrite", [False, True])
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_parsed_program_matches_hand_built_on_host(case, rewrite):
+    make_hand, make_parsed, pick, semi_naive = CASES[case]
+    rels = pick(_relations())
+    hand = compile_program(make_hand(), rels, semi_naive=semi_naive)
+    parsed = compile_program(make_parsed(), rels, semi_naive=semi_naive,
+                             rewrite=rewrite)
+    a = hand.run(max_iters=80)
+    b = parsed.run(max_iters=80)
+    _assert_states_match(a, b, (case, rewrite))
+    if rewrite:
+        assert any(n.startswith("rewrite(") for n in parsed.plan.notes)
+    else:
+        # rewrite-off parses must carry the exact hand-built plan notes.
+        assert parsed.plan.notes == hand.plan.notes
+
+
+@pytest.mark.parametrize("rewrite", [False, True])
+@pytest.mark.parametrize(
+    "case", ["transitive-closure", "pagerank-threshold", "negated-reach"])
+def test_parsed_program_matches_hand_built_on_device(case, rewrite):
+    make_hand, make_parsed, pick, semi_naive = CASES[case]
+    rels = pick(_relations())
+    hand = compile_program(make_hand(), rels, semi_naive=semi_naive)
+    parsed = compile_program(make_parsed(), rels, semi_naive=semi_naive,
+                             rewrite=rewrite)
+    a = hand.run(max_iters=80, on_device=True)
+    b = parsed.run(max_iters=80, on_device=True)
+    _assert_states_match(a, b, (case, rewrite, "device"))
+
+
+# ---------------------------------------------------------------------------
+# Listing 1/2 text forms ride the specialized fast paths
+# ---------------------------------------------------------------------------
+
+
+def _pagerank_vp():
+    return VertexProgram(
+        init_vertex=lambda ids, vd: jnp.stack(
+            [jnp.full((N,), 1.0 / N), vd], axis=1),
+        message=lambda j, s, ed: s[:, 0] / jnp.maximum(s[:, 1], 1.0),
+        apply=lambda j, s, inbox, got: (
+            jnp.stack([0.15 / N + 0.85 * inbox, s[:, 1]], axis=1),
+            jnp.ones(s.shape[0], jnp.bool_)),
+        combine="sum",
+    )
+
+
+def _graph(seed=5):
+    rng = np.random.default_rng(seed)
+    src = np.repeat(np.arange(N), 4).astype(np.int32)
+    dst = rng.integers(0, N, 4 * N).astype(np.int32)
+    outdeg = np.bincount(src, minlength=N).astype(np.float32)
+    return Graph(N, jnp.asarray(src), jnp.asarray(dst), jnp.asarray(outdeg))
+
+
+def test_parsed_pregel_text_rides_fast_path():
+    vp, g = _pagerank_vp(), _graph()
+    parsed = parsed_pregel_program(
+        udfs={"init_vertex": vp.init_vertex, "update": vp.apply},
+        aggregates={"combine":
+                    get_monoid("sum").as_aggregate(recomputable=True)},
+    )
+    spec = compile_pregel(vp, g)
+    gen = compile_program(parsed, {"data": g}, binding=vp)
+    assert type(gen).__name__ == "PregelExecutable"
+    assert gen.plan.notes == spec.plan.notes  # byte-identical
+    a = spec.run(max_iters=12)
+    b = gen.run(max_iters=12)
+    assert a.iterations == b.iterations
+    assert float(jnp.max(jnp.abs(a.state[0] - b.state[0]))) <= 1e-8
+
+
+def test_parsed_imru_text_rides_fast_path():
+    rng = np.random.default_rng(7)
+    X = rng.normal(size=(256, 8)).astype(np.float32)
+    w = rng.normal(size=8).astype(np.float32)
+    y = X @ w
+    task = IMRUTask(
+        init_model=lambda: jnp.zeros(8, jnp.float32),
+        map=lambda rec, m: (rec["x"] @ m - rec["y"]) @ rec["x"],
+        update=lambda j, m, g: m - 1e-3 * g,
+        tol=1e-9,
+    )
+    recs = {"x": jnp.asarray(X), "y": jnp.asarray(y)}
+    parsed = parsed_imru_program(
+        udfs={"init_model": task.init_model, "map": task.map,
+              "update": task.update},
+        aggregates={"reduce": task.reduce},
+    )
+    spec = compile_imru(task, recs)
+    gen = compile_program(parsed, {"training_data": recs}, binding=task)
+    assert type(gen).__name__ == "IMRUExecutable"
+    assert gen.plan.notes == spec.plan.notes  # byte-identical
+    a = spec.run(max_iters=80)
+    b = gen.run(max_iters=80)
+    assert a.iterations == b.iterations
+    assert float(jnp.max(jnp.abs(a.state - b.state))) <= 1e-8

@@ -329,3 +329,152 @@ def test_generic_program_logical_structure_golden():
         got = {df.label: df.structure() for df in ex.logical.body}
         for label, structure in want.items():
             assert got[label] == structure, (name, label, got[label])
+
+
+# ---------------------------------------------------------------------------
+# Parsed-text programs + the rewrite pass
+# ---------------------------------------------------------------------------
+#
+# The text frontend's plans are pinned twice: rewrite-off must reproduce
+# the hand-built GENERIC_GOLDEN notes byte-for-byte (the frontend adds no
+# planning surface of its own), and rewrite-on must append exactly one
+# rewrite(...) entry recording which of the three rewrites fired.  Each
+# rewrite demonstrably fires on at least one program: join-reorder on
+# TC/CC/pagerank, select-pushdown on negated-reach, CSE on same-generation.
+
+GENERIC_REWRITE_GOLDEN = {
+    ("transitive-closure", False): GENERIC_GOLDEN[
+        ("transitive-closure", False)] + (
+        "rewrite(join-reorder: T2, pushdown: none, cse: 0 shared)",
+    ),
+    ("connected-components", False): GENERIC_GOLDEN[
+        ("connected-components", False)] + (
+        "rewrite(join-reorder: C2, pushdown: none, cse: 0 shared)",
+    ),
+    # The rewrite entry lands after the semi-naive entries: the reorder
+    # still fires on the delta-read join (Δcc estimated at 1/8 density,
+    # still larger than the 96-row edge relation).
+    ("connected-components", True): GENERIC_GOLDEN[
+        ("connected-components", True)] + (
+        "rewrite(join-reorder: C2, pushdown: none, cse: 0 shared)",
+    ),
+    ("same-generation", False): GENERIC_GOLDEN[
+        ("same-generation", False)] + (
+        "rewrite(join-reorder: none, pushdown: none, cse: 1 shared)",
+    ),
+    ("pagerank-threshold", False): GENERIC_GOLDEN[
+        ("pagerank-threshold", False)] + (
+        "rewrite(join-reorder: P2+P3, pushdown: none, cse: 0 shared)",
+    ),
+    ("negated-reach", False): (
+        "storage-selection(dense-grid[n=64])",
+        "loop-invariant-caching(edb-grids)",
+        "rewrite(join-reorder: none, pushdown: 1 select, cse: 0 shared)",
+    ),
+}
+
+GENERIC_REWRITE_STRUCTURE = {
+    # Join-reorder flips T2 to scan the 96-row edge relation before the
+    # 4096-cell recursive state grid.
+    "transitive-closure": {
+        "T2": ("T2", "tc", ("Project", ("Join", ("ScanEDB",), ("ScanState",)))),
+    },
+    # Select-pushdown sinks the W < 3 guard below the AntiJoin into its
+    # positive side; the negated blocked(Y) scan is untouched.
+    "negated-reach": {
+        "N2": ("N2", "reach",
+               ("Project",
+                ("AntiJoin",
+                 ("Join",
+                  ("Join", ("ScanState",), ("ScanEDB",)),
+                  ("Select", ("ScanEDB",))),
+                 ("ScanEDB",)))),
+    },
+}
+
+
+def _parsed_executables(rewrite):
+    import numpy as np
+
+    from repro.core.executor import Relation, compile_program
+    from repro.core.listings import (
+        parsed_connected_components_program,
+        parsed_negated_reach_program,
+        parsed_pagerank_threshold_program,
+        parsed_same_generation_program,
+        parsed_transitive_closure_program,
+    )
+
+    n = GENERIC_N
+    rng = np.random.default_rng(0)
+    src, dst = rng.integers(0, n, 96), rng.integers(0, n, 96)
+    edge = Relation.from_columns(n, src, dst)
+    node2 = Relation.from_columns(
+        n, np.arange(n), np.arange(n, dtype=np.float32)
+    )
+    deg = np.bincount(src, minlength=n).astype(np.float32)
+    node4 = Relation.from_columns(
+        n, np.arange(n), np.full(n, 1.0 / n, np.float32), deg,
+        np.full(n, 0.15 / n, np.float32),
+    )
+    source = Relation.from_columns(
+        n, np.arange(8),
+        np.array([1, 0, 1, 1, 0, 1, 0, 1], np.float32),
+    )
+    blocked = Relation.from_columns(n, np.array([3, 9, 27]))
+    nodew = Relation.from_columns(
+        n, np.arange(n), (np.arange(n) % 5).astype(np.float32)
+    )
+    out = {}
+    for (name, semi_naive), prog, rels in (
+        (("transitive-closure", False),
+         parsed_transitive_closure_program(), {"edge": edge}),
+        (("connected-components", False),
+         parsed_connected_components_program(),
+         {"edge": edge, "node": node2}),
+        (("connected-components", True),
+         parsed_connected_components_program(),
+         {"edge": edge, "node": node2}),
+        (("same-generation", False),
+         parsed_same_generation_program(), {"parent": edge}),
+        (("pagerank-threshold", False),
+         parsed_pagerank_threshold_program(),
+         {"edge": edge, "node": node4}),
+        (("negated-reach", False),
+         parsed_negated_reach_program(),
+         {"source": source, "edge": edge, "node": nodew,
+          "blocked": blocked}),
+    ):
+        out[(name, semi_naive)] = compile_program(
+            prog, rels, semi_naive=semi_naive, rewrite=rewrite
+        )
+    return out
+
+
+def test_parsed_program_rewrite_off_matches_hand_built_notes():
+    """PR 5's hand-built golden notes ARE the parsed programs' notes when
+    the rewrite pass is off — the frontend adds zero planning surface."""
+
+    for key, ex in _parsed_executables(rewrite=False).items():
+        if key in GENERIC_GOLDEN:
+            assert ex.plan.notes == GENERIC_GOLDEN[key], (key, ex.plan.notes)
+        else:  # negated-reach is new in this PR; pin it directly.
+            assert ex.plan.notes == GENERIC_REWRITE_GOLDEN[key][:-1], (
+                key, ex.plan.notes)
+
+
+def test_parsed_program_rewrite_on_notes_golden():
+    for key, ex in _parsed_executables(rewrite=True).items():
+        assert ex.plan.notes == GENERIC_REWRITE_GOLDEN[key], (
+            key, ex.plan.notes)
+
+
+def test_parsed_program_rewrite_structure_golden():
+    for key, ex in _parsed_executables(rewrite=True).items():
+        name, semi_naive = key
+        want = GENERIC_REWRITE_STRUCTURE.get(name)
+        if want is None or semi_naive:
+            continue
+        got = {df.label: df.structure() for df in ex.logical.body}
+        for label, structure in want.items():
+            assert got[label] == structure, (name, label, got[label])

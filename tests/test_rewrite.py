@@ -1,0 +1,267 @@
+"""Rewrite-rule plan optimizer: units + the stratified-negation guard.
+
+Four properties are defended:
+
+1. **Fail closed at the AntiJoin boundary** — a Select whose columns
+   would have to cross into the negated (right) side of an AntiJoin
+   raises :class:`RewriteError` instead of silently filtering the
+   negation witness set, and the post-pass structural guard re-verifies
+   that no AntiJoin right subtree changed.
+2. **Pushdown preserves stratified negation** — on the negated-reach
+   listing the ``W < 3`` guard sinks into the AntiJoin's *positive*
+   side (pinned structurally) and the rewritten fixpoint is
+   bit-identical to the unrewritten one.
+3. **CSE shares by object identity** — the shared subtree appears as
+   one canonical node referenced from multiple rule dataflows, its id
+   lands in ``GenericExecutable.shared_ids``, and the executor memo
+   returns identical results.
+4. **Cost-model units** — cardinality estimates and the greedy
+   join order they induce are pinned on hand-made operator trees.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.algebra import (
+    AntiJoin,
+    Join,
+    LogicalPlan,
+    Project,
+    RuleDataflow,
+    ScanEDB,
+    ScanState,
+    Select,
+)
+from repro.core.datalog import Const
+from repro.core.executor import Relation, compile_program
+from repro.core.listings import (
+    negated_reach_program,
+    parsed_negated_reach_program,
+    same_generation_program,
+)
+from repro.core.rewrite import (
+    RewriteError,
+    _negation_right_signatures,
+    _pushdown_selects,
+    _reorder_joins,
+    estimate_cardinality,
+    plan_to_dot,
+    rewrite_plan,
+)
+
+
+class _FakeRel:
+    def __init__(self, n):
+        self.n = n
+
+    def count(self):
+        return self.n
+
+
+def _fixture(n=64, seed=0, edges=96):
+    rng = np.random.default_rng(seed)
+    src, dst = rng.integers(0, n, edges), rng.integers(0, n, edges)
+    edge = Relation.from_columns(n, src, dst)
+    source = Relation.from_columns(
+        n, np.arange(8), np.array([1, 0, 1, 1, 0, 1, 0, 1], np.float32))
+    blocked = Relation.from_columns(n, np.array([3, 9, 27]))
+    nodew = Relation.from_columns(
+        n, np.arange(n), (np.arange(n) % 5).astype(np.float32))
+    return {"source": source, "edge": edge, "node": nodew,
+            "blocked": blocked}
+
+
+# ---------------------------------------------------------------------------
+# 1. Fail closed at the AntiJoin boundary
+# ---------------------------------------------------------------------------
+
+
+def test_select_crossing_antijoin_boundary_raises():
+    # Synthetic mis-planned tree: the Select references 'W', a column that
+    # exists only in the negated side.  No translator output looks like
+    # this (AntiJoin.schema() == left.schema()), so reaching it means the
+    # plan is corrupt — the pass must refuse, not "fix" it.
+    aj = AntiJoin(
+        ScanEDB("e", ("X", "Y")),
+        ScanEDB("b", ("Y", "W")),
+        keys=("Y",),
+    )
+    sel = Select(aj, "<", "W", Const(3))
+    with pytest.raises(RewriteError, match="stratified-negation boundary"):
+        _pushdown_selects(sel)
+
+
+def test_guard_signatures_cover_nested_antijoins():
+    aj_inner = AntiJoin(ScanEDB("e", ("X", "Y")), ScanEDB("b", ("Y",)),
+                        keys=("Y",))
+    aj_outer = AntiJoin(aj_inner, ScanEDB("c", ("X",)), keys=("X",))
+    df = RuleDataflow("R", "p", Project(("X", "Y"), aj_outer), True)
+    sigs = _negation_right_signatures([df])
+    assert len(sigs) == 2
+    assert sigs[0] == ("X", ("ScanEDB",))
+    assert sigs[1] == ("Y", ("ScanEDB",))
+
+
+# ---------------------------------------------------------------------------
+# 2. Pushdown + stratified negation on the negated-reach listing
+# ---------------------------------------------------------------------------
+
+
+def test_negated_reach_pushdown_stays_on_positive_side():
+    prog = parsed_negated_reach_program()
+    rels = _fixture()
+    ex = compile_program(prog, rels, rewrite=True)
+    note = [n for n in ex.plan.notes if n.startswith("rewrite(")]
+    assert note == ["rewrite(join-reorder: none, pushdown: 1 select, "
+                    "cse: 0 shared)"]
+    (n2,) = [df for df in ex.logical.body if df.label == "N2"]
+    # The W < 3 guard sank below the AntiJoin into its positive side; the
+    # negated scan of blocked(Y) is byte-identical.
+    assert n2.structure() == (
+        "N2", "reach",
+        ("Project",
+         ("AntiJoin",
+          ("Join",
+           ("Join", ("ScanState",), ("ScanEDB",)),
+           ("Select", ("ScanEDB",))),
+          ("ScanEDB",))),
+    )
+
+    def find_antijoin(op):
+        if isinstance(op, AntiJoin):
+            return op
+        for c in op.children():
+            got = find_antijoin(c)
+            if got is not None:
+                return got
+        return None
+
+    aj = find_antijoin(n2.op)
+    assert isinstance(aj.right, ScanEDB) and aj.right.relation == "blocked"
+
+    def has_select(op):
+        return isinstance(op, Select) or any(
+            has_select(c) for c in op.children())
+
+    assert not has_select(aj.right)
+
+
+def test_negated_reach_rewrite_matches_unrewritten_fixpoint():
+    rels = _fixture()
+    res = {}
+    for rewrite in (False, True):
+        ex = compile_program(negated_reach_program(), rels, rewrite=rewrite)
+        res[rewrite] = ex.run(max_iters=80)
+    assert res[False].converged and res[True].converged
+    a = np.asarray(res[False].state["reach"].present)
+    b = np.asarray(res[True].state["reach"].present)
+    assert (a == b).all()
+
+
+# ---------------------------------------------------------------------------
+# 3. CSE identity sharing + the executor memo
+# ---------------------------------------------------------------------------
+
+
+def test_cse_shares_subtree_by_identity():
+    rels = {"parent": _fixture()["edge"]}
+    ex = compile_program(same_generation_program(), rels, rewrite=True)
+    assert any(n == "rewrite(join-reorder: none, pushdown: none, "
+               "cse: 1 shared)" for n in ex.plan.notes)
+    assert ex.shared_ids
+
+    def collect(op, acc):
+        acc.append(op)
+        for c in op.children():
+            collect(c, acc)
+
+    per_rule = {}
+    for df in list(ex.logical.init) + list(ex.logical.body):
+        acc = []
+        collect(df.op, acc)
+        per_rule[df.label] = {id(o) for o in acc}
+    # At least one canonical shared node is referenced from >= 2 rules.
+    shared_hits = [
+        sid for sid in ex.shared_ids
+        if sum(sid in ids for ids in per_rule.values()) >= 2
+    ]
+    assert shared_hits, per_rule
+
+    # The memoized engine still computes same-generation correctly.
+    plain = compile_program(same_generation_program(), rels)
+    a = plain.run(max_iters=80)
+    b = ex.run(max_iters=80)
+    assert (np.asarray(a.state["sg"].present)
+            == np.asarray(b.state["sg"].present)).all()
+
+
+# ---------------------------------------------------------------------------
+# 4. Cost-model units
+# ---------------------------------------------------------------------------
+
+
+def test_estimate_cardinality_units():
+    rels = {"edge": _FakeRel(96)}
+    edge = ScanEDB("edge", ("X", "Y"))
+    state = ScanState("tc", ("X", "Z"))
+    assert estimate_cardinality(edge, rels, 64) == 96.0
+    assert estimate_cardinality(state, rels, 64) == 64.0**2
+    # Unknown EDB falls back to the dense-grid worst case.
+    assert estimate_cardinality(ScanEDB("mystery", ("A",)), rels, 64) == 64.0
+    join = Join(state, edge, keys=("X",))
+    assert estimate_cardinality(join, rels, 64) == 96.0 * 64.0**2 / 64.0
+    sel = Select(edge, "<", "Y", Const(3))
+    assert estimate_cardinality(sel, rels, 64) == 48.0
+
+
+def test_reorder_puts_small_edb_scan_first():
+    rels = {"edge": _FakeRel(96)}
+    state = ScanState("tc", ("J", "X", "Z"))
+    edge = ScanEDB("edge", ("Z", "Y"))
+    tree = Join(state, edge, keys=("Z",))
+    new, fired = _reorder_joins(tree, rels, 64)
+    assert fired
+    assert isinstance(new.left, ScanEDB) and isinstance(new.right, ScanState)
+    # Schema-connected rebuild keeps the natural-join keys.
+    assert set(new.keys) == {"Z"}
+
+
+def test_reorder_never_enters_antijoin_right():
+    rels = {"edge": _FakeRel(96)}
+    inner = Join(ScanState("p", ("X",)), ScanEDB("edge", ("X", "Y")),
+                 keys=("X",))
+    aj = AntiJoin(ScanEDB("edge", ("X", "Y")), inner, keys=("X",))
+    new, fired = _reorder_joins(aj, rels, 64)
+    assert not fired
+    assert new.right is inner  # untouched, same object
+
+
+# ---------------------------------------------------------------------------
+# plan_to_dot
+# ---------------------------------------------------------------------------
+
+
+def test_plan_to_dot_renders_rules_and_shares_nodes():
+    rels = {"parent": _fixture()["edge"]}
+    ex = compile_program(same_generation_program(), rels, rewrite=True)
+    dot = plan_to_dot(ex.logical)
+    assert dot.startswith("digraph logical_plan {")
+    assert dot.rstrip().endswith("}")
+    for label in ("S1", "S2", "S3"):
+        assert f"rule_{label}" in dot
+    # The CSE'd parent(P, X) scan is emitted once but referenced from both
+    # S1 and S2: 3 ScanEDB[parent] node declarations for the 4 parent atoms
+    # in the program text.
+    assert dot.count('label="ScanEDB[parent]') == 3
+    assert dot.count('label="ScanEDB[parent](P, X)"') == 1
+
+
+def test_rewrite_plan_requires_no_relations():
+    # Estimates degrade to domain**k without materialized relations; the
+    # pass still runs and the note is still emitted.
+    from repro.core import algebra
+
+    prog = same_generation_program()
+    logical = algebra.translate(prog)
+    out = rewrite_plan(logical, prog)
+    assert len(out.notes) == 1 and out.notes[0].startswith("rewrite(")
