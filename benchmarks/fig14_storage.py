@@ -1,0 +1,118 @@
+"""Fig. 14 (new) — dense-grid vs row-table storage for the generic engine.
+
+Measured: one REAL compiled per-iteration rule firing of generic transitive
+closure under both physical storages at domains where both are feasible
+(the crossover the planner's ``storage-selection`` cost model navigates),
+plus a row-table-only firing at a domain whose dense ``n^2`` grid would be
+measured in gigabytes — the workload class the dense engine simply cannot
+run.  The absolute rows ride the CI ``bench-trend`` gate so a regressed
+row kernel (join pair-expansion, sort-merge, set-difference) shows up as a
+trajectory regression, not an anecdote.
+
+``--json <path>`` writes the rows as a ``repro-bench-v1`` snapshot.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks._hw import row, timeit
+
+BOTH_DOMAINS = (64, 256)
+ROW_ONLY_N = 8192
+DEG = 4
+
+
+def _edges(n: int, deg: int = DEG, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    src = np.repeat(np.arange(n), deg)
+    dst = rng.integers(0, n, n * deg)
+    return src, dst
+
+
+def _firing_us(program, rels, storage) -> float:
+    from repro.core.executor import compile_program
+
+    ex = compile_program(program, dict(rels), storage=storage)
+    step, state = ex.phase_step_fn()
+    return timeit(step, state, jnp.int32(0))
+
+
+def _crossover_rows(emit) -> None:
+    from repro.core.executor import Relation
+    from repro.core.listings import transitive_closure_program
+
+    for n in BOTH_DOMAINS:
+        src, dst = _edges(n, seed=n)
+        rels = {"edge": Relation.from_columns(n, src, dst)}
+        prog = transitive_closure_program()
+        us_dense = _firing_us(prog, rels, "dense-grid")
+        emit(row(
+            f"fig14/tc_dense_n{n}", us_dense,
+            f"measured: generic TC iteration on dense grids, "
+            f"n^2 = {n * n} cells",
+        ))
+        us_row = _firing_us(prog, rels, "row-table")
+        emit(row(
+            f"fig14/tc_row_n{n}", us_row,
+            f"measured: same firing on row tables, {n * DEG} edge rows "
+            f"-> {us_row / max(us_dense, 1e-9):.1f}x vs dense (the "
+            "storage-selection cost model keeps small domains dense)",
+        ))
+
+
+def _row_only_rows(emit) -> None:
+    from repro.core.executor import RowRelation, compile_program
+    from repro.core.listings import transitive_closure_program
+
+    n = ROW_ONLY_N
+    src, dst = _edges(n, seed=1)
+    ex = compile_program(
+        transitive_closure_program(),
+        {"edge": RowRelation.from_columns(n, src, dst)},
+    )
+    assert ex.storage["tc"] == "row-table", "planner must pick row tables"
+    step, state = ex.phase_step_fn()
+    us = timeit(step, state, jnp.int32(0))
+    emit(row(
+        f"fig14/tc_row_only_n{n}", us,
+        f"measured: planner-selected row tables, {n * DEG} edge rows "
+        f"(dense n^2 grid would be {n * n} cells — never materialized)",
+    ))
+
+
+def main(emit=print) -> None:
+    _crossover_rows(emit)
+    _row_only_rows(emit)
+
+
+if __name__ == "__main__":
+    from benchmarks._json import parse_row, pop_json_arg, write_doc
+
+    try:
+        json_path, _ = pop_json_arg(sys.argv[1:])
+    except ValueError as err:
+        print(err, file=sys.stderr)
+        sys.exit(2)
+    if json_path is not None:
+        rows = []
+
+        def emit(line):
+            parsed = parse_row(line)
+            if parsed is not None:
+                rows.append(parsed)
+            print(line)
+
+        main(emit=emit)
+        write_doc(json_path, rows)
+        print(f"wrote {len(rows)} rows to {json_path}", file=sys.stderr)
+    else:
+        main()

@@ -31,6 +31,7 @@ def _modules(smoke: bool):
         fig11_generic_engine,
         fig12_fault_tolerance,
         fig13_frontend,
+        fig14_storage,
         table1_pagerank_scaleup,
         roofline,
         microbench,
@@ -38,12 +39,12 @@ def _modules(smoke: bool):
 
     if smoke:
         return (fig10_semi_naive, fig11_generic_engine,
-                fig12_fault_tolerance, fig13_frontend,
+                fig12_fault_tolerance, fig13_frontend, fig14_storage,
                 fig9_connector_plans, roofline)
     return (fig6_bgd_speedup, fig7_bgd_scaleup, fig8_pagerank_speedup,
             table1_pagerank_scaleup, fig9_connector_plans,
             fig10_semi_naive, fig11_generic_engine, fig12_fault_tolerance,
-            fig13_frontend, microbench, roofline)
+            fig13_frontend, fig14_storage, microbench, roofline)
 
 
 def main(argv=None) -> int:

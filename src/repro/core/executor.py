@@ -81,19 +81,28 @@ from repro.core.monoid import MonoidError, get_monoid
 from repro.core.physical import (
     compact_active_edges,
     dense_psum_exchange,
+    difference_row_codes,
     fused_got_exchange,
+    grid_to_rows,
     hash_sort_exchange,
+    join_row_codes,
     merging_exchange,
     reduce_tree,
+    row_codes,
+    row_linear_index,
+    rows_to_grid,
     segment_combine_sorted,
+    sort_row_codes,
     sparse_hash_sort_exchange,
     sparse_merging_exchange,
+    unique_row_runs,
 )
 from repro.core.planner import GroupBySpec, plan_program
 
 __all__ = [
     "ExecutorError",
     "Relation",
+    "RowRelation",
     "GenericExecutable",
     "compile_program",
     "PregelStepBundle",
@@ -104,6 +113,11 @@ __all__ = [
 
 class ExecutorError(Exception):
     """A program cannot be executed by the generic dense-grid backend."""
+
+
+class _RowCapacityOverflow(Exception):
+    """A row-table slab overflowed its static capacity mid-run; the caller
+    falls back to the (lossless) dense-grid storage."""
 
 
 # ---------------------------------------------------------------------------
@@ -153,6 +167,7 @@ class Relation:
             if np.issubdtype(c.dtype, np.integer)
         )
         keys = [arrs[i].astype(np.int64) for i in key_positions]
+        _check_vertex_ids(n, key_positions, keys)
         k = len(keys)
         idx = tuple(keys)
         present = np.zeros((n,) * k, bool)
@@ -178,8 +193,114 @@ class Relation:
         )
 
 
-def _as_relation(name: str, value, domain: Optional[int]) -> Relation:
-    if isinstance(value, Relation):
+def _check_vertex_ids(n: int, key_positions, key_cols) -> None:
+    """Fail loudly on out-of-domain / negative vertex ids (they would
+    silently index-wrap into the dense grid or corrupt row codes)."""
+
+    for pos, col in zip(key_positions, key_cols):
+        if col.size == 0:
+            continue
+        lo, hi = int(col.min()), int(col.max())
+        if lo < 0 or hi >= n:
+            raise ExecutorError(
+                f"key column {pos}: vertex id {lo if lo < 0 else hi} is "
+                f"outside the domain [0, {n})"
+            )
+
+
+@dataclass
+class RowRelation:
+    """A sparse row-table relation: explicit key-tuple rows over ``[0, n)``.
+
+    The row-table counterpart of :class:`Relation` — used when the dense
+    ``n^k`` grid of an EDB would be infeasible (e.g. 64k-vertex sparse
+    edges).  ``rows`` holds the distinct key tuples ``int32 [count, k]`` in
+    lexicographic order; each value column is a ``float32 [count]`` array
+    aligned with ``rows``.  The planner forces ``row-table`` storage for
+    predicates bound to a ``RowRelation``.
+    """
+
+    n: int
+    key_positions: Tuple[int, ...]
+    rows: np.ndarray
+    values: Dict[int, np.ndarray] = field(default_factory=dict)
+
+    @property
+    def arity(self) -> int:
+        return len(self.key_positions) + len(self.values)
+
+    def count(self) -> int:
+        return int(self.rows.shape[0])
+
+    def tuples(self) -> np.ndarray:
+        """The key tuples as an int array [count, n_keys] (lex-sorted, the
+        same order :meth:`Relation.tuples` produces)."""
+
+        return np.array(self.rows, copy=True)
+
+    @classmethod
+    def from_columns(cls, n: int, *cols) -> "RowRelation":
+        """Build a row-table relation from positional tuple columns.
+
+        Same column typing as :meth:`Relation.from_columns` (integer dtype =
+        key, floating = value); rows are deduplicated (last value row wins)
+        and out-of-domain ids fail loudly.
+        """
+
+        arrs = [np.asarray(c) for c in cols]
+        key_positions = tuple(
+            i for i, c in enumerate(arrs)
+            if np.issubdtype(c.dtype, np.integer)
+        )
+        if not key_positions:
+            raise ExecutorError(
+                "RowRelation needs at least one integer key column (use "
+                "Relation for arity-0 / pure-value predicates)"
+            )
+        keys = [arrs[i].astype(np.int64) for i in key_positions]
+        _check_vertex_ids(n, key_positions, keys)
+        rows = np.stack(keys, axis=-1).astype(np.int32) if keys[0].size \
+            else np.zeros((0, len(keys)), np.int32)
+        # Keep-last dedupe: unique over the reversed rows keeps the last
+        # occurrence of each key tuple, then re-sorts lexicographically.
+        uniq, idx_rev = np.unique(rows[::-1], axis=0, return_index=True)
+        src = rows.shape[0] - 1 - idx_rev
+        values = {
+            i: np.asarray(arrs[i], np.float32)[src]
+            for i in range(len(arrs)) if i not in key_positions
+        }
+        return cls(n=n, key_positions=key_positions, rows=uniq,
+                   values=values)
+
+    def to_dense(self) -> Relation:
+        """Materialize onto the dense grid (differential-test helper; only
+        feasible for small domains)."""
+
+        k = self.rows.shape[1]
+        cols: List[np.ndarray] = []
+        j = 0
+        for i in range(self.arity):
+            if i in self.key_positions:
+                cols.append(self.rows[:, j].astype(np.int64))
+                j += 1
+            else:
+                cols.append(self.values[i])
+        return Relation.from_columns(self.n, *cols)
+
+
+# Raw tuple arrays whose dense grid would exceed this many cells route to
+# RowRelation automatically (the planner then keeps the predicate on
+# row-table storage).
+_DENSE_REL_CELL_LIMIT = 1 << 24
+
+# Row-table GroupBy lowers through the dense grid-reduce (bit-identical to
+# the dense engine) while the child's grid stays at most this many cells;
+# beyond it the segmented sorted-combine path runs instead.
+_GROUPBY_GRID_CELLS = 1 << 20
+
+
+def _as_relation(name: str, value, domain: Optional[int]):
+    if isinstance(value, (Relation, RowRelation)):
         return value
     arr = np.asarray(value)
     if domain is None:
@@ -188,7 +309,10 @@ def _as_relation(name: str, value, domain: Optional[int]) -> Relation:
             "domain= (or pass a Relation built with Relation.from_columns)"
         )
     if arr.ndim == 2 and np.issubdtype(arr.dtype, np.integer):
-        return Relation.from_columns(domain, *(arr[:, i] for i in range(arr.shape[1])))
+        cols = tuple(arr[:, i] for i in range(arr.shape[1]))
+        if arr.shape[1] and float(domain) ** arr.shape[1] > _DENSE_REL_CELL_LIMIT:
+            return RowRelation.from_columns(domain, *cols)
+        return Relation.from_columns(domain, *cols)
     raise ExecutorError(
         f"relation {name!r}: pass a Relation or an int tuple array [rows, arity]"
     )
@@ -272,7 +396,16 @@ class _Ctx:
     # and the per-context memo of their evaluated grids.  Sound because only
     # EDB-pure subtrees are shared — their inputs never change within a step.
     shared: FrozenSet[int] = frozenset()
-    memo: Dict[int, _Inter] = field(default_factory=dict)
+    memo: Dict[int, Any] = field(default_factory=dict)
+    # Row-table storage: per-predicate selection ("dense-grid"/"row-table"),
+    # per-predicate slab capacities, the shared intermediate capacity, the
+    # precomputed row-table EDB slabs, and the traced overflow flags this
+    # firing accumulated (checked by the overflow policy).
+    storage: Mapping[str, str] = field(default_factory=dict)
+    row_caps: Mapping[str, int] = field(default_factory=dict)
+    row_cap: int = 0
+    row_edb: Mapping[str, Dict[str, Any]] = field(default_factory=dict)
+    overflow: List[Any] = field(default_factory=list)
 
 
 def _read_pred(ctx: _Ctx, name: str) -> Dict[str, Any]:
@@ -294,6 +427,14 @@ def _scan_inter(columns, key_positions, present, values_by_pos) -> _Inter:
     for p, grid in values_by_pos.items():
         cols[columns[int(p)]] = grid
     return _Inter(dims, present, cols)
+
+
+def _scan_rows(columns, key_positions, ids, valid, values_by_pos):
+    dims = tuple(columns[p] for p in key_positions)
+    cols = {}
+    for p, col in values_by_pos.items():
+        cols[columns[int(p)]] = col
+    return _Rows(dims, ids, valid, cols)
 
 
 def _operand(inter: _Inter, x, n: int, j):
@@ -348,6 +489,268 @@ def _join(l: _Inter, r: _Inter, keys: Tuple[str, ...], n: int) -> _Inter:
     return _Inter(out_dims, present, cols)
 
 
+# ---------------------------------------------------------------------------
+# Row-table operators (the sparse storage backend)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Rows:
+    """A row-table intermediate: padded id columns ``int32[cap, k]`` (one
+    column per dim), a slot validity mask, and per-row value columns.
+    Invariant: valid rows are unique by their dim tuple (scans read deduped
+    tables; join/select/project preserve or restore uniqueness), so value
+    scatters and representative-first merges are exact."""
+
+    dims: Tuple[str, ...]
+    ids: Any
+    valid: Any
+    cols: Dict[str, Any]
+
+
+def _codes_for(rows: _Rows, dims: Tuple[str, ...], n: int):
+    """uint32 row codes of a dim subset (shared-key encoding for joins)."""
+
+    cap = rows.ids.shape[0]
+    if not dims:
+        return jnp.zeros((cap,), jnp.uint32)
+    sub = jnp.stack([rows.ids[:, rows.dims.index(d)] for d in dims], axis=-1)
+    try:
+        return row_codes(sub, n)
+    except ValueError as err:
+        raise ExecutorError(str(err)) from err
+
+
+def _operand_rows(rows: _Rows, x, ctx: _Ctx):
+    if isinstance(x, Const):
+        if not isinstance(x.value, (int, float, bool)):
+            raise ExecutorError(
+                f"non-numeric constant {x.value!r} is not executable on the "
+                "row-table backend"
+            )
+        return jnp.asarray(x.value)
+    if x in rows.cols:
+        return rows.cols[x]
+    if x in rows.dims:
+        return rows.ids[:, rows.dims.index(x)]
+    if x == "J":
+        return ctx.j
+    raise ExecutorError(f"unbound column {x!r} in comparison/UDF input")
+
+
+def _inter_to_rows(inter: _Inter, ctx: _Ctx) -> _Rows:
+    """``to_rows`` boundary converter: compact a dense intermediate into a
+    row table (inserted automatically where mixed-storage operators meet)."""
+
+    k = len(inter.dims)
+    cells = int(ctx.n) ** k
+    cap = cells if 0 < cells <= max(ctx.row_cap, 1) else max(ctx.row_cap, 1)
+    ids, valid, lin, ov = grid_to_rows(inter.present, cap)
+    ctx.overflow.append(ov)
+    cols = {
+        c: jnp.reshape(g, (-1,))[lin] for c, g in inter.cols.items()
+    }
+    return _Rows(inter.dims, ids, valid, cols)
+
+
+def _rows_to_inter(rows: _Rows, ctx: _Ctx) -> _Inter:
+    """``to_grid`` boundary converter: scatter a row table back onto the
+    dense vertex-domain grid (only at dense-stored materialization sites,
+    where the planner already approved the grid size)."""
+
+    n, k = ctx.n, len(rows.dims)
+    if k == 0:
+        pres = jnp.any(rows.valid)
+        cols = {
+            c: jnp.sum(jnp.where(rows.valid, g, jnp.zeros_like(g)))
+            for c, g in rows.cols.items()
+        }
+        return _Inter((), pres, cols)
+    size = n ** k
+    lin = row_linear_index(rows.ids, rows.valid, n)
+    present = jnp.zeros((size,), jnp.bool_).at[lin].set(
+        True, mode="drop"
+    ).reshape((n,) * k)
+    cols = {}
+    for c, g in rows.cols.items():
+        g = jnp.broadcast_to(g, (rows.ids.shape[0],))
+        cols[c] = jnp.zeros((size,), g.dtype).at[lin].set(
+            g, mode="drop"
+        ).reshape((n,) * k)
+    return _Inter(rows.dims, present, cols)
+
+
+def _coerce_pair(l, r, ctx: _Ctx):
+    """Promote a mixed dense/row operand pair to row tables (the converter
+    goes dense→rows: the row side may have no feasible grid)."""
+
+    if isinstance(l, _Rows) or isinstance(r, _Rows):
+        if not isinstance(l, _Rows):
+            l = _inter_to_rows(l, ctx)
+        if not isinstance(r, _Rows):
+            r = _inter_to_rows(r, ctx)
+        return l, r, True
+    return l, r, False
+
+
+def _residual_valid(l: _Rows, r: _Rows, keys, li, ri, valid):
+    """Apply the non-structural join key conditions (value-column equality)
+    per output slot — the row analogue of the dense `_join` masks."""
+
+    for key in keys:
+        l_dim, r_dim = key in l.dims, key in r.dims
+        if l_dim and r_dim:
+            continue  # shared id column: equality is in the row codes
+        lv, rv = l.cols.get(key), r.cols.get(key)
+        if l_dim and rv is not None:
+            valid = jnp.logical_and(
+                valid, rv[ri] == l.ids[:, l.dims.index(key)][li]
+            )
+        elif r_dim and lv is not None:
+            valid = jnp.logical_and(
+                valid, lv[li] == r.ids[:, r.dims.index(key)][ri]
+            )
+        elif lv is not None and rv is not None:
+            valid = jnp.logical_and(valid, lv[li] == rv[ri])
+    return valid
+
+
+def _join_rows(l: _Rows, r: _Rows, keys, ctx: _Ctx) -> _Rows:
+    """Sort-merge equi-join on the shared dims' row codes; pairs expand
+    into the plan's intermediate capacity (overflow-flagged)."""
+
+    n = ctx.n
+    shared = tuple(d for d in l.dims if d in r.dims)
+    out_dims = l.dims + tuple(d for d in r.dims if d not in l.dims)
+    li, ri, valid, ov = join_row_codes(
+        _codes_for(l, shared, n), l.valid,
+        _codes_for(r, shared, n), r.valid, max(ctx.row_cap, 1),
+    )
+    ctx.overflow.append(ov)
+    valid = _residual_valid(l, r, keys, li, ri, valid)
+    id_cols = []
+    for d in out_dims:
+        if d in l.dims:
+            id_cols.append(l.ids[:, l.dims.index(d)][li])
+        else:
+            id_cols.append(r.ids[:, r.dims.index(d)][ri])
+    ids = jnp.stack(id_cols, axis=-1) if id_cols else \
+        jnp.zeros((max(ctx.row_cap, 1), 0), jnp.int32)
+    cols: Dict[str, Any] = {}
+    for c, g in l.cols.items():
+        if c not in out_dims:
+            cols[c] = g[li]
+    for c, g in r.cols.items():
+        if c not in cols and c not in out_dims:
+            cols[c] = g[ri]
+    return _Rows(out_dims, ids, valid, cols)
+
+
+def _antijoin_rows(l: _Rows, r: _Rows, keys, ctx: _Ctx) -> _Rows:
+    """Exact set-difference on row tables: left rows whose shared-dim
+    projection (plus any residual key conditions) has NO right match keep
+    their slots; everything else is invalidated.  Replaces the dense
+    backend's ones-presence join + any-mask hack."""
+
+    n = ctx.n
+    shared = tuple(d for d in l.dims if d in r.dims)
+    residual = any(
+        not (key in l.dims and key in r.dims) for key in keys
+    )
+    lc, rc = _codes_for(l, shared, n), _codes_for(r, shared, n)
+    if not residual:
+        keep = difference_row_codes(lc, l.valid, rc, r.valid)
+        return _Rows(l.dims, l.ids, keep, l.cols)
+    # Residual value conditions: probe via the pair expansion, then mark
+    # left rows with any surviving match.
+    cap_l = lc.shape[0]
+    li, ri, valid, ov = join_row_codes(
+        lc, l.valid, rc, r.valid, max(ctx.row_cap, 1)
+    )
+    ctx.overflow.append(ov)
+    valid = _residual_valid(l, r, keys, li, ri, valid)
+    li_d = jnp.where(valid, li, cap_l)
+    matched = jnp.zeros((cap_l,), jnp.bool_).at[li_d].set(
+        True, mode="drop"
+    )
+    keep = jnp.logical_and(l.valid, jnp.logical_not(matched))
+    return _Rows(l.dims, l.ids, keep, l.cols)
+
+
+def _project_rows(op: algebra.Project, child: _Rows, ctx: _Ctx) -> _Rows:
+    cols = {c: child.cols[c] for c in op.columns if c in child.cols}
+    keep = tuple(d for d in child.dims if d in op.columns)
+    dropped = len(keep) != len(child.dims)
+    if not dropped:
+        return _Rows(child.dims, child.ids, child.valid, cols)
+    if cols:
+        raise ExecutorError(
+            f"rule {ctx.label or '?'}: projecting away grid dimensions "
+            "under value columns requires a head aggregate"
+        )
+    # Dropping dims can alias rows: dedupe by sorting the projected codes
+    # and keeping first occurrences (set semantics restored).
+    kept_ids = jnp.stack(
+        [child.ids[:, child.dims.index(d)] for d in keep], axis=-1
+    ) if keep else jnp.zeros((child.ids.shape[0], 0), jnp.int32)
+    codes = _codes_for(_Rows(keep, kept_ids, child.valid, {}), keep, ctx.n)
+    perm, skey, n_valid = sort_row_codes(codes, child.valid)
+    is_new, _ = unique_row_runs(skey, n_valid)
+    return _Rows(keep, kept_ids[perm], is_new, {})
+
+
+def _groupby_rows(op: algebra.GroupBy, child: _Rows, ctx: _Ctx) -> _Rows:
+    n = ctx.n
+    for k in op.keys:
+        if k not in child.dims:
+            raise ExecutorError(
+                f"rule {ctx.label or '?'}: group key {k!r} must be a "
+                "vertex-domain column"
+            )
+    monoid = _monoid_for(op.agg)
+    if monoid.structured:
+        raise ExecutorError(
+            f"structured monoid {op.agg!r} needs width-typed payload slabs; "
+            "the row-table backend aggregates scalar cells"
+        )
+    if monoid.finalize is not None:
+        raise ExecutorError(
+            f"monoid {op.agg!r} carries a finalize step; the row-table "
+            "backend only supports plain accumulator monoids"
+        )
+    cells = float(n) ** len(child.dims)
+    if 0 < cells <= _GROUPBY_GRID_CELLS:
+        # Lower through the dense grid-reduce when the child's grid is
+        # small: rows are unique-by-dims so the scatter is exact, and the
+        # reduction then performs the same adds in the same order as the
+        # dense engine — forced-row runs match dense bit-for-bit instead
+        # of drifting by summation-order ULPs.  Large domains take the
+        # segmented path below.
+        return _inter_to_rows(
+            _groupby(op, _rows_to_inter(child, ctx), ctx), ctx
+        )
+    cap = child.ids.shape[0]
+    vals = jnp.broadcast_to(_operand_rows(child, op.agg_col, ctx), (cap,))
+    if not jnp.issubdtype(vals.dtype, jnp.floating):
+        vals = vals.astype(jnp.float32)
+    key_ids = jnp.stack(
+        [child.ids[:, child.dims.index(k)] for k in op.keys], axis=-1
+    ) if op.keys else jnp.zeros((cap, 0), jnp.int32)
+    codes = _codes_for(_Rows(tuple(op.keys), key_ids, child.valid, {}),
+                       tuple(op.keys), n)
+    perm, skey, n_valid = sort_row_codes(codes, child.valid)
+    is_new, seg = unique_row_runs(skey, n_valid)
+    in_valid = jnp.arange(cap, dtype=jnp.int32) < n_valid
+    # Pre-clustered segmented path: rows arrive sorted by group code, so
+    # segment ids are sorted and the combine is one scan.
+    red = segment_combine_sorted(
+        vals[perm], seg, cap, op.agg, edge_active=in_valid
+    )
+    return _Rows(
+        tuple(op.keys), key_ids[perm], is_new, {op.out_col: red[seg]}
+    )
+
+
 def _eval(op: algebra.LogicalOp, ctx: _Ctx) -> _Inter:
     if ctx.shared and id(op) in ctx.shared:
         hit = ctx.memo.get(id(op))
@@ -358,16 +761,33 @@ def _eval(op: algebra.LogicalOp, ctx: _Ctx) -> _Inter:
     return _eval_inner(op, ctx)
 
 
-def _eval_inner(op: algebra.LogicalOp, ctx: _Ctx) -> _Inter:
+def _eval_inner(op: algebra.LogicalOp, ctx: _Ctx):
     n = ctx.n
     if isinstance(op, algebra.ScanEDB):
         if op.relation == "__unit__":
             return _Inter((), jnp.asarray(True), {})
+        if op.relation in ctx.row_edb:
+            tbl = ctx.row_edb[op.relation]
+            rel = ctx.relations[op.relation]
+            dims = tuple(op.columns[p] for p in rel.key_positions)
+            cols = {op.columns[int(p)]: g for p, g in tbl["values"].items()}
+            return _Rows(dims, tbl["ids"], tbl["valid"], cols)
         rel = ctx.relations[op.relation]
+        if isinstance(rel, RowRelation):
+            raise ExecutorError(
+                f"EDB {op.relation!r} is a RowRelation but was planned onto "
+                "dense-grid storage (its grid is infeasible) — leave its "
+                "storage selection to the planner"
+            )
         return _scan_inter(op.columns, rel.key_positions, rel.present, rel.values)
     if isinstance(op, algebra.Delta):
         entry = _read_pred(ctx, op.relation)
         keys, _ = ctx.sigs[op.relation]
+        if "ids" in entry:
+            return _scan_rows(
+                op.columns, keys, entry["ids"],
+                entry.get("delta", entry["present"]), entry["values"],
+            )
         return _scan_inter(
             op.columns, keys, entry.get("delta", entry["present"]),
             entry["values"],
@@ -375,13 +795,32 @@ def _eval_inner(op: algebra.LogicalOp, ctx: _Ctx) -> _Inter:
     if isinstance(op, (algebra.ScanState, algebra.ScanView, algebra.Frontier)):
         entry = _read_pred(ctx, op.relation)
         keys, _ = ctx.sigs[op.relation]
+        if "ids" in entry:
+            return _scan_rows(
+                op.columns, keys, entry["ids"], entry["present"],
+                entry["values"],
+            )
         return _scan_inter(op.columns, keys, entry["present"], entry["values"])
     if isinstance(op, algebra.Join):
-        return _join(_eval(op.left, ctx), _eval(op.right, ctx), op.keys, n)
+        l, r, rowmode = _coerce_pair(
+            _eval(op.left, ctx), _eval(op.right, ctx), ctx
+        )
+        if rowmode:
+            return _join_rows(l, r, op.keys, ctx)
+        return _join(l, r, op.keys, n)
     if isinstance(op, algebra.Cross):
-        return _join(_eval(op.left, ctx), _eval(op.right, ctx), (), n)
+        l, r, rowmode = _coerce_pair(
+            _eval(op.left, ctx), _eval(op.right, ctx), ctx
+        )
+        if rowmode:
+            return _join_rows(l, r, (), ctx)
+        return _join(l, r, (), n)
     if isinstance(op, algebra.AntiJoin):
-        l, r = _eval(op.left, ctx), _eval(op.right, ctx)
+        l, r, rowmode = _coerce_pair(
+            _eval(op.left, ctx), _eval(op.right, ctx), ctx
+        )
+        if rowmode:
+            return _antijoin_rows(l, r, op.keys, ctx)
         joined = _join(
             _Inter(l.dims, jnp.ones_like(l.present), l.cols), r, op.keys, n
         )
@@ -392,6 +831,14 @@ def _eval_inner(op: algebra.LogicalOp, ctx: _Ctx) -> _Inter:
         return _Inter(l.dims, jnp.logical_and(l.present, ~match), l.cols)
     if isinstance(op, algebra.Select):
         child = _eval(op.child, ctx)
+        if isinstance(child, _Rows):
+            lhs = _operand_rows(child, op.lhs, ctx)
+            rhs = _operand_rows(child, op.rhs, ctx)
+            mask = _CMP[op.op](lhs, rhs)
+            return _Rows(
+                child.dims, child.ids,
+                jnp.logical_and(child.valid, mask), child.cols,
+            )
         lhs = _operand(child, op.lhs, n, ctx.j)
         rhs = _operand(child, op.rhs, n, ctx.j)
         mask = _CMP[op.op](lhs, rhs)
@@ -400,6 +847,8 @@ def _eval_inner(op: algebra.LogicalOp, ctx: _Ctx) -> _Inter:
         )
     if isinstance(op, algebra.Project):
         child = _eval(op.child, ctx)
+        if isinstance(child, _Rows):
+            return _project_rows(op, child, ctx)
         cols = {c: child.cols[c] for c in op.columns if c in child.cols}
         keep = tuple(d for d in child.dims if d in op.columns)
         drop = tuple(child.dims.index(d) for d in child.dims if d not in keep)
@@ -419,6 +868,12 @@ def _eval_inner(op: algebra.LogicalOp, ctx: _Ctx) -> _Inter:
                 f"non-numeric head constant {op.value!r} is not executable "
                 "on the dense-grid backend"
             )
+        if isinstance(child, _Rows):
+            cols = dict(child.cols)
+            cols[op.column] = jnp.full(
+                (child.ids.shape[0],), op.value, jnp.float32
+            )
+            return _Rows(child.dims, child.ids, child.valid, cols)
         shape = (n,) * len(child.dims)
         cols = dict(child.cols)
         cols[op.column] = jnp.broadcast_to(
@@ -430,10 +885,13 @@ def _eval_inner(op: algebra.LogicalOp, ctx: _Ctx) -> _Inter:
         udf = ctx.program.udfs.get(op.fn)
         if udf is None or udf.fn is None:
             raise ExecutorError(f"UDF {op.fn!r} has no bound implementation")
+        rowmode = isinstance(child, _Rows)
         args = []
         for c in op.in_cols:
             if isinstance(c, str) and c.startswith("lit:"):
                 args.append(ast.literal_eval(c[4:]))
+            elif rowmode:
+                args.append(_operand_rows(child, c, ctx))
             else:
                 args.append(_operand(child, c, n, ctx.j))
         outs = udf.fn(*args)
@@ -444,6 +902,13 @@ def _eval_inner(op: algebra.LogicalOp, ctx: _Ctx) -> _Inter:
                 f"UDF {op.fn!r} returned {len(outs)} outputs, rule binds "
                 f"{len(op.out_cols)}"
             )
+        if rowmode:
+            cols = dict(child.cols)
+            for name, o in zip(op.out_cols, outs):
+                cols[name] = jnp.broadcast_to(
+                    jnp.asarray(o), (child.ids.shape[0],)
+                )
+            return _Rows(child.dims, child.ids, child.valid, cols)
         shape = (n,) * len(child.dims)
         cols = dict(child.cols)
         for name, o in zip(op.out_cols, outs):
@@ -451,6 +916,8 @@ def _eval_inner(op: algebra.LogicalOp, ctx: _Ctx) -> _Inter:
         return _Inter(child.dims, child.present, cols)
     if isinstance(op, algebra.GroupBy):
         child = _eval(op.child, ctx)
+        if isinstance(child, _Rows):
+            return _groupby_rows(op, child, ctx)
         return _groupby(op, child, ctx)
     if isinstance(op, algebra.Unnest):
         raise ExecutorError(
@@ -720,17 +1187,47 @@ class GenericExecutable:
     # compile kwargs :meth:`remesh` needs to re-derive the physical plan.
     remesh_events: Tuple[str, ...] = ()
     _compile_kwargs: Dict[str, Any] = field(default_factory=dict, repr=False)
+    # Physical storage per predicate ("dense-grid" / "row-table"), the
+    # row-table slab capacities, the shared intermediate capacity, and the
+    # precomputed row-table EDB slabs (planner storage selection).
+    storage: Dict[str, str] = field(default_factory=dict)
+    row_caps: Dict[str, int] = field(default_factory=dict)
+    row_cap: int = 0
+    row_edb: Dict[str, Dict[str, Any]] = field(default_factory=dict)
 
     # -- state plumbing -----------------------------------------------------
 
-    def _empty_entry(self, pred: str) -> Dict[str, Any]:
+    @property
+    def _any_row(self) -> bool:
+        return any(s == "row-table" for s in self.storage.values())
+
+    def _is_row(self, pred: str) -> bool:
+        return self.storage.get(pred) == "row-table"
+
+    def _empty_out(self, pred: str) -> Dict[str, Any]:
         keys, vals = self.sigs[pred]
+        if self._is_row(pred):
+            cap = self.row_caps[pred]
+            return {
+                "ids": jnp.zeros((cap, len(keys)), jnp.int32),
+                "present": jnp.zeros((cap,), jnp.bool_),
+                "values": {p: jnp.zeros((cap,), jnp.float32) for p in vals},
+            }
         shape = (self.domain,) * len(keys)
         return {
             "present": jnp.zeros(shape, jnp.bool_),
             "values": {p: jnp.zeros(shape, jnp.float32) for p in vals},
-            "delta": jnp.zeros(shape, jnp.bool_),
         }
+
+    def _empty_entry(self, pred: str) -> Dict[str, Any]:
+        entry = self._empty_out(pred)
+        entry["delta"] = jnp.zeros_like(entry["present"])
+        if self._any_row:
+            # Every carried entry gets the traced overflow leaf (ORed each
+            # step) so capacity flags always have a home, even when this
+            # particular predicate is dense in a mixed-storage plan.
+            entry["overflow"] = jnp.asarray(False)
+        return entry
 
     def _placer(self):
         if self.mesh is None:
@@ -764,9 +1261,25 @@ class GenericExecutable:
             j=j,
             label=label,
             shared=self.shared_ids,
+            storage=self.storage,
+            row_caps=self.row_caps,
+            row_cap=self.row_cap,
+            row_edb=self.row_edb,
         )
 
-    def _materialize(self, df, inter: _Inter):
+    def _materialize(self, df, inter, ctx: _Ctx) -> Dict[str, Any]:
+        """Lower a rule-body intermediate into the head predicate's storage
+        (dense grid or row table), inserting the boundary converter when the
+        body evaluated on the other representation.  Returns an *out* dict:
+        ``{present, values}`` (dense) or ``{ids, present, values}`` (rows,
+        ``present`` doubling as the slot validity mask)."""
+
+        if self._is_row(df.target):
+            rows = inter if isinstance(inter, _Rows) \
+                else _inter_to_rows(inter, ctx)
+            return self._materialize_rows(df, rows, ctx)
+        if isinstance(inter, _Rows):
+            inter = _rows_to_inter(inter, ctx)
         schema = df.op.schema()
         keys, vals = self.sigs[df.target]
         key_dims = tuple(schema[p] for p in keys)
@@ -790,18 +1303,76 @@ class GenericExecutable:
                 )
             g = jnp.transpose(inter.cols[col], perm)
             values[p] = jnp.broadcast_to(g.astype(jnp.float32), shape)
-        return present, values
+        return {"present": present, "values": values}
 
-    def _merge(self, pred: str, outs):
+    def _materialize_rows(self, df, rows: _Rows, ctx: _Ctx) -> Dict[str, Any]:
+        schema = df.op.schema()
+        keys, vals = self.sigs[df.target]
+        key_dims = tuple(schema[p] for p in keys)
+        for d in key_dims:
+            if d not in rows.dims:
+                raise ExecutorError(
+                    f"rule {df.label}: key column {d!r} of {df.target!r} is "
+                    "not a grid dimension of the rule body"
+                )
+        cap = rows.ids.shape[0]
+        ids = jnp.stack(
+            [rows.ids[:, rows.dims.index(d)] for d in key_dims], axis=-1
+        ) if key_dims else jnp.zeros((cap, 0), jnp.int32)
+        values = {}
+        for p in vals:
+            col = schema[p]
+            if col not in rows.cols:
+                raise ExecutorError(
+                    f"rule {df.label}: value column {col!r} missing"
+                )
+            values[p] = jnp.broadcast_to(
+                rows.cols[col], (cap,)
+            ).astype(jnp.float32)
+        return self._resize_rows(
+            {"ids": ids, "present": rows.valid, "values": values},
+            self.row_caps[df.target], ctx,
+        )
+
+    def _resize_rows(self, out, new_cap: int, ctx: _Ctx) -> Dict[str, Any]:
+        """Re-slab a row out to the predicate's capacity: pad when growing,
+        compact (overflow-flagged) when shrinking."""
+
+        cap = out["ids"].shape[0]
+        if cap == new_cap:
+            return out
+        if cap < new_cap:
+            pad = new_cap - cap
+            return {
+                "ids": jnp.pad(out["ids"], ((0, pad), (0, 0))),
+                "present": jnp.pad(out["present"], (0, pad)),
+                "values": {
+                    p: jnp.pad(v, (0, pad))
+                    for p, v in out["values"].items()
+                },
+            }
+        idx, valid = compact_active_edges(out["present"], new_cap)
+        ctx.overflow.append(
+            jnp.sum(out["present"].astype(jnp.int32)) > new_cap
+        )
+        take = jnp.minimum(idx, cap - 1)
+        return {
+            "ids": out["ids"][take],
+            "present": valid,
+            "values": {p: v[take] for p, v in out["values"].items()},
+        }
+
+    def _merge(self, pred: str, outs, ctx: _Ctx) -> Dict[str, Any]:
         if not outs:
-            entry = self._empty_entry(pred)
-            return entry["present"], entry["values"]
+            return self._empty_out(pred)
+        if self._is_row(pred):
+            return self._merge_rows(pred, outs, ctx)
         present = functools.reduce(
-            jnp.logical_or, [p for p, _ in outs]
+            jnp.logical_or, [o["present"] for o in outs]
         )
         _, vals = self.sigs[pred]
         if not vals:
-            return present, {}
+            return {"present": present, "values": {}}
         agg = self.merge_monoids.get(pred)
         if agg is None:
             if len(outs) > 1:
@@ -809,16 +1380,55 @@ class GenericExecutable:
                     f"predicate {pred!r}: multiple rules derive value "
                     "columns without a combining head aggregate"
                 )
-            return present, dict(outs[0][1])
+            return {"present": present, "values": dict(outs[0]["values"])}
         monoid = _monoid_for(agg)
         ident = jnp.asarray(float(monoid.identity), jnp.float32)
         values = {}
         for p in vals:
             parts = [
-                jnp.where(pr, v[p], ident) for pr, v in outs
+                jnp.where(o["present"], o["values"][p], ident) for o in outs
             ]
             values[p] = functools.reduce(monoid.combine, parts)
-        return present, values
+        return {"present": present, "values": values}
+
+    def _merge_rows(self, pred: str, outs, ctx: _Ctx) -> Dict[str, Any]:
+        """Union-merge row outs: concatenate the slabs, dedupe by row code
+        (representative-first), and fold duplicate values through the merge
+        monoid — then re-slab to the predicate capacity."""
+
+        if len(outs) == 1:
+            return outs[0]
+        _, vals = self.sigs[pred]
+        agg = self.merge_monoids.get(pred)
+        if vals and agg is None:
+            raise ExecutorError(
+                f"predicate {pred!r}: multiple rules derive value "
+                "columns without a combining head aggregate"
+            )
+        ids = jnp.concatenate([o["ids"] for o in outs], axis=0)
+        valid = jnp.concatenate([o["present"] for o in outs], axis=0)
+        cat_vals = {
+            p: jnp.concatenate([o["values"][p] for o in outs], axis=0)
+            for p in vals
+        }
+        cap = ids.shape[0]
+        try:
+            codes = row_codes(ids, self.domain)
+        except ValueError as err:
+            raise ExecutorError(str(err)) from err
+        perm, skey, n_valid = sort_row_codes(codes, valid)
+        is_new, seg = unique_row_runs(skey, n_valid)
+        in_valid = jnp.arange(cap, dtype=jnp.int32) < n_valid
+        values = {}
+        if vals:
+            monoid = _monoid_for(agg)
+            for p in vals:
+                red = segment_combine_sorted(
+                    cat_vals[p][perm], seg, cap, agg, edge_active=in_valid
+                )
+                values[p] = red[seg]
+        merged = {"ids": ids[perm], "present": is_new, "values": values}
+        return self._resize_rows(merged, self.row_caps[pred], ctx)
 
     @staticmethod
     def _diff(old, present, values):
@@ -830,6 +1440,56 @@ class GenericExecutable:
             )
         return diff
 
+    def _diff_rows(self, old, new):
+        """Row-diff: ``(delta_mask_over_new, changed_scalar)`` — a new row
+        is delta when its key tuple is absent from the old table or any
+        value column changed; ``changed`` additionally catches rows that
+        disappeared (the presence-count check)."""
+
+        try:
+            old_codes = row_codes(old["ids"], self.domain)
+            new_codes = row_codes(new["ids"], self.domain)
+        except ValueError as err:
+            raise ExecutorError(str(err)) from err
+        operm, oskey, onv = sort_row_codes(old_codes, old["present"])
+        cap_o = oskey.shape[0]
+        pos = jnp.searchsorted(oskey, new_codes, side="left").astype(jnp.int32)
+        posc = jnp.minimum(pos, cap_o - 1)
+        member = jnp.logical_and(pos < onv, oskey[posc] == new_codes)
+        changed_val = jnp.zeros_like(member)
+        for p, v in new["values"].items():
+            old_v = old["values"][p][operm][posc]
+            changed_val = jnp.logical_or(changed_val, old_v != v)
+        delta = jnp.logical_and(
+            new["present"],
+            jnp.logical_or(~member, jnp.logical_and(member, changed_val)),
+        )
+        shrunk = jnp.sum(old["present"].astype(jnp.int32)) != jnp.sum(
+            new["present"].astype(jnp.int32)
+        )
+        changed = jnp.logical_or(jnp.any(delta), shrunk)
+        return delta, changed
+
+    def _rows_to_relation(self, pred: str, entry) -> RowRelation:
+        """Host-side: pack a row entry into a lex-sorted RowRelation (the
+        same tuple order :meth:`Relation.tuples` produces)."""
+
+        keys, vals = self.sigs[pred]
+        ids = np.asarray(entry["ids"])
+        present = np.asarray(entry["present"])
+        rows = ids[present].astype(np.int32)
+        order = np.lexsort(rows.T[::-1]) if rows.shape[0] else \
+            np.arange(0, dtype=np.int64)
+        return RowRelation(
+            n=self.domain,
+            key_positions=keys,
+            rows=rows[order],
+            values={
+                p: np.asarray(entry["values"][p])[present][order]
+                for p in vals
+            },
+        )
+
     # -- per-phase step -----------------------------------------------------
 
     def _phase_step(self, phase: _Phase, materialized) -> Callable:
@@ -839,30 +1499,41 @@ class GenericExecutable:
             ctx = self._ctx(state, views, materialized, j)
             for df in phase.body:
                 ctx.label = df.label
-                pres, vals = self._materialize(df, _eval(df.op, ctx))
+                out = self._materialize(df, _eval(df.op, ctx), ctx)
                 if df.next_state:
-                    acc.setdefault(df.target, []).append((pres, vals))
+                    acc.setdefault(df.target, []).append(out)
                 else:
                     if df.target in views:
-                        prev = views[df.target]
-                        merged_p, merged_v = self._merge(
-                            df.target,
-                            [(prev["present"], prev["values"]), (pres, vals)],
+                        views[df.target] = self._merge(
+                            df.target, [views[df.target], out], ctx
                         )
-                        views[df.target] = {
-                            "present": merged_p, "values": merged_v
-                        }
                     else:
-                        views[df.target] = {"present": pres, "values": vals}
+                        views[df.target] = out
             new_state = dict(state)
+            step_of = functools.reduce(
+                jnp.logical_or, ctx.overflow, jnp.asarray(False)
+            )
             for pred in phase.carried:
-                pres, vals = self._merge(pred, acc.get(pred, []))
-                delta = jnp.logical_and(
-                    pres, self._diff(state[pred], pres, vals)
-                )
-                new_state[pred] = {
-                    "present": pres, "values": vals, "delta": delta
-                }
+                out = self._merge(pred, acc.get(pred, []), ctx)
+                if self._is_row(pred):
+                    delta, _ = self._diff_rows(state[pred], out)
+                else:
+                    delta = jnp.logical_and(
+                        out["present"],
+                        self._diff(state[pred], out["present"], out["values"]),
+                    )
+                entry = dict(out)
+                entry["delta"] = delta
+                if self._any_row:
+                    # Fold every capacity flag this step raised (including
+                    # the merges above) into the carried overflow leaf.
+                    step_of = functools.reduce(
+                        jnp.logical_or, ctx.overflow, jnp.asarray(False)
+                    )
+                    entry["overflow"] = jnp.logical_or(
+                        state[pred].get("overflow", False), step_of
+                    )
+                new_state[pred] = entry
             return new_state
 
         return step
@@ -871,13 +1542,26 @@ class GenericExecutable:
         def conv(prev, new):
             same = jnp.asarray(True)
             for pred in phase.carried:
-                diff = self._diff(
-                    prev[pred], new[pred]["present"], new[pred]["values"]
-                )
-                same = jnp.logical_and(same, ~jnp.any(diff))
+                if self._is_row(pred):
+                    _, changed = self._diff_rows(prev[pred], new[pred])
+                    same = jnp.logical_and(same, ~changed)
+                else:
+                    diff = self._diff(
+                        prev[pred], new[pred]["present"], new[pred]["values"]
+                    )
+                    same = jnp.logical_and(same, ~jnp.any(diff))
             return same
 
         return conv
+
+    def _raise_on_overflow(self, ctx: _Ctx) -> None:
+        """Host-side eager overflow check (prelude/init/final rule groups
+        run untraced, so their flags are checked immediately)."""
+
+        if ctx.overflow and bool(
+            functools.reduce(jnp.logical_or, ctx.overflow)
+        ):
+            raise _RowCapacityOverflow()
 
     def _run_rules_once(self, dataflows, state, materialized, j):
         """Fire a rule group once (init / final-view / post rules), merging
@@ -889,13 +1573,13 @@ class GenericExecutable:
         ctx = self._ctx(state, views, materialized, j)
         for df in dataflows:
             ctx.label = df.label
-            pres, vals = self._materialize(df, _eval(df.op, ctx))
+            out = self._materialize(df, _eval(df.op, ctx), ctx)
             if df.target not in acc:
                 order.append(df.target)
-            acc.setdefault(df.target, []).append((pres, vals))
+            acc.setdefault(df.target, []).append(out)
             # make the target readable by later rules in this group
-            merged_p, merged_v = self._merge(df.target, acc[df.target])
-            views[df.target] = {"present": merged_p, "values": merged_v}
+            views[df.target] = self._merge(df.target, acc[df.target], ctx)
+        self._raise_on_overflow(ctx)
         return {t: views[t] for t in order}
 
     def phase_step_fn(self) -> Tuple[Callable, Dict[str, Dict[str, Any]]]:
@@ -920,12 +1604,20 @@ class GenericExecutable:
         for pred in phase.carried:
             entry = inits.get(pred)
             if entry is not None:
-                state[pred] = jax.tree_util.tree_map(place, {
-                    "present": entry["present"],
-                    "values": entry["values"],
-                    "delta": entry["present"],
-                })
+                state[pred] = jax.tree_util.tree_map(
+                    place, self._init_entry(entry)
+                )
         return jax.jit(self._phase_step(phase, materialized)), state
+
+    def _init_entry(self, out: Dict[str, Any]) -> Dict[str, Any]:
+        """Promote a materialized out into a carried entry: everything is
+        new at J=0, so the delta mask starts as the presence mask."""
+
+        entry = dict(out)
+        entry["delta"] = out["present"]
+        if self._any_row:
+            entry["overflow"] = jnp.asarray(False)
+        return entry
 
     # -- durable checkpoints (fault tolerance) ------------------------------
 
@@ -949,12 +1641,7 @@ class GenericExecutable:
         return tuple(order)
 
     def _zeros_view(self, pred: str) -> Dict[str, Any]:
-        keys, vals = self.sigs[pred]
-        shape = (self.domain,) * len(keys)
-        return {
-            "present": jnp.zeros(shape, jnp.bool_),
-            "values": {p: jnp.zeros(shape, jnp.float32) for p in vals},
-        }
+        return self._empty_out(pred)
 
     def _ckpt_tree(self, state, materialized) -> Dict[str, Any]:
         """The durable snapshot of an in-flight run: all carried state plus
@@ -964,7 +1651,7 @@ class GenericExecutable:
 
         mat = {
             t: (
-                {"present": e["present"], "values": dict(e["values"])}
+                dict(e, values=dict(e["values"]))
                 if (e := materialized.get(t)) is not None
                 else self._zeros_view(t)
             )
@@ -1036,9 +1723,62 @@ class GenericExecutable:
         :class:`~repro.ft.elastic.FailureInjector` into the step boundary.
 
         Returns a :class:`FixpointResult` whose ``state`` maps every
-        materialized predicate to its final :class:`Relation`.
+        materialized predicate to its final :class:`Relation` (or
+        :class:`RowRelation` for row-table-stored predicates).
+
+        Overflow policy (lossless): when any row-table slab overflows its
+        static capacity mid-run, the run is abandoned and transparently
+        re-executed on dense-grid storage (``storage_fallback=True`` on the
+        result).  The fallback run does not checkpoint — its tree structure
+        differs from the row run's — so overflow-prone programs that need
+        durability should pre-size ``row_cap=`` or force dense storage.
         """
 
+        try:
+            return self._run_phases(
+                max_iters, on_device,
+                checkpoint_dir=checkpoint_dir,
+                checkpoint_every=checkpoint_every, resume=resume,
+                injector=injector, max_restarts=max_restarts,
+                keep_checkpoints=keep_checkpoints,
+            )
+        except _RowCapacityOverflow:
+            return self._dense_fallback_run(max_iters, on_device)
+
+    def _dense_fallback_run(
+        self, max_iters: int, on_device: bool
+    ) -> FixpointResult:
+        for name, rel in self.relations.items():
+            if isinstance(rel, RowRelation):
+                raise ExecutorError(
+                    f"row-table capacity overflow, and EDB {name!r} is a "
+                    "RowRelation whose dense grid is infeasible — raise "
+                    "compile_program(row_cap=) instead"
+                )
+        kwargs = {
+            k: v for k, v in self._compile_kwargs.items()
+            if k not in ("storage", "row_cap")
+        }
+        dense = compile_program(
+            self.program, self.relations, mesh=self.mesh,
+            semi_naive=self.semi_naive, domain=self.domain,
+            storage="dense-grid", **kwargs,
+        )
+        res = dense.run(max_iters, on_device)
+        return replace(res, storage_fallback=True)
+
+    def _run_phases(
+        self,
+        max_iters: int,
+        on_device: bool = False,
+        *,
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_every: int = 0,
+        resume: bool = False,
+        injector: Optional[Any] = None,
+        max_restarts: int = 3,
+        keep_checkpoints: int = 3,
+    ) -> FixpointResult:
         if (checkpoint_dir or injector) and on_device:
             raise ExecutorError(
                 "fault tolerance (checkpoint_dir/injector) needs the host "
@@ -1109,11 +1849,9 @@ class GenericExecutable:
                     entry = inits.get(pred)
                     if entry is None:
                         continue
-                    state[pred] = jax.tree_util.tree_map(place, {
-                        "present": entry["present"],
-                        "values": entry["values"],
-                        "delta": entry["present"],  # everything new at J=0
-                    })
+                    state[pred] = jax.tree_util.tree_map(
+                        place, self._init_entry(entry)
+                    )
             step = self._phase_step(phase, materialized)
             conv = self._phase_converged(phase)
             if on_device:
@@ -1179,6 +1917,13 @@ class GenericExecutable:
                 restarts_total += res.restarts
                 stragglers_total += res.straggler_events
             state = res.state
+            # Lossless overflow policy: any capacity flag raised inside the
+            # (jitted) fixpoint surfaces here, before the phase's results
+            # are consumed.
+            for pred in phase.carried:
+                of = state[pred].get("overflow")
+                if of is not None and bool(of):
+                    raise _RowCapacityOverflow()
             it = (start_iter if resumed else 0) + res.iterations
             total += res.iterations
             phase_iters.append(it)
@@ -1198,17 +1943,20 @@ class GenericExecutable:
         if store is not None:
             store.wait()  # surface any pending async-save failure
 
-        out: Dict[str, Relation] = {}
+        out: Dict[str, Any] = {}
         for pred, entry in list(materialized.items()) + [
             (p, state[p]) for ph in self.phases for p in ph.carried
         ]:
             keys, _ = self.sigs[pred]
-            out[pred] = Relation(
-                n=self.domain,
-                key_positions=keys,
-                present=entry["present"],
-                values=dict(entry["values"]),
-            )
+            if self._is_row(pred):
+                out[pred] = self._rows_to_relation(pred, entry)
+            else:
+                out[pred] = Relation(
+                    n=self.domain,
+                    key_positions=keys,
+                    present=entry["present"],
+                    values=dict(entry["values"]),
+                )
         return FixpointResult(
             state=out,
             iterations=total,
@@ -1248,6 +1996,8 @@ def compile_program(
     hw: HardwareSpec = TPU_V5E,
     force_connector: Optional[str] = None,
     rewrite: bool = False,
+    storage: Any = None,
+    row_cap: Optional[int] = None,
     **frontend_kwargs,
 ):
     """Compile ANY XY-stratified program onto the unified executor.
@@ -1271,6 +2021,14 @@ def compile_program(
     ``plan.notes`` as a ``rewrite(...)`` entry.  Listing fast paths ignore
     the flag (their plans are already specialized), keeping their plan
     notes byte-identical with and without it.
+
+    ``storage=`` overrides the planner's per-predicate physical storage
+    selection: a string (``"dense-grid"`` / ``"row-table"``) forces every
+    predicate, a mapping forces individual predicates (the rest stay
+    cost-selected).  Predicates bound to a :class:`RowRelation` EDB are
+    always row-table (their dense grid is infeasible).  ``row_cap=`` pins
+    the row-table intermediate slab capacity.  The selection is recorded in
+    ``plan.notes`` as the ``storage-selection(...)`` entry.
     """
 
     shape = _listing_shape(program)
@@ -1450,10 +2208,41 @@ def compile_program(
         ))
     else:
         mesh_spec = MeshSpec((("data", 1),))
+
+    # Storage selection inputs: (key arity, estimated row count) for every
+    # predicate — EDB counts are exact, derived predicates come from the
+    # optimizer's iterated cardinality model.
+    from repro.core.rewrite import estimate_program_cardinalities
+
+    ests = estimate_program_cardinalities(
+        tuple(logical.init) + tuple(logical.body), rels, domain
+    )
+    predicates: Dict[str, Tuple[int, float]] = {}
+    for name, rel in rels.items():
+        predicates[name] = (len(rel.key_positions), float(rel.count()))
+    for pred, (keys_pos, _) in sigs.items():
+        predicates[pred] = (
+            len(keys_pos), float(ests.get(pred, float(domain) ** len(keys_pos)))
+        )
+    forced: Dict[str, str] = {}
+    if isinstance(storage, str):
+        forced = {p: storage for p in predicates}
+    elif storage:
+        forced = dict(storage)
+    for name, rel in rels.items():
+        if isinstance(rel, RowRelation):
+            if forced.get(name, "row-table") != "row-table":
+                raise ExecutorError(
+                    f"EDB {name!r} is a RowRelation: its dense grid is "
+                    "infeasible, storage cannot be forced to dense-grid"
+                )
+            forced[name] = "row-table"
+
     plan = plan_program(
         tuple(tuple(sorted(g)) for g in phase_groups),
         tuple(specs), domain, mesh_spec, hw,
         semi_naive=semi_naive, extra_notes=sn_notes + rw_notes,
+        predicates=predicates, storage=forced or None, row_cap=row_cap,
     )
 
     ex = GenericExecutable(
@@ -1470,21 +2259,64 @@ def compile_program(
         merge_monoids=merge_monoids,
         shared_ids=shared_ids,
         _compile_kwargs={"hw": hw, "force_connector": force_connector,
-                         "rewrite": rewrite},
+                         "rewrite": rewrite, "storage": storage,
+                         "row_cap": row_cap},
+        storage=dict(plan.storage),
+        row_caps=dict(plan.row_caps),
+        row_cap=plan.row_cap,
     )
     # Device-place copies of the EDB grids (loop-invariant caching) — the
     # caller's Relation objects stay untouched, so one Relation can feed
-    # compiles on different meshes.
+    # compiles on different meshes.  RowRelations stay host-side numpy (the
+    # placed slabs below are what the interpreter reads).
     place = ex._placer()
     ex.relations = {
-        name: Relation(
-            n=rel.n,
-            key_positions=rel.key_positions,
-            present=place(rel.present),
-            values={p: place(g) for p, g in rel.values.items()},
+        name: (
+            rel if isinstance(rel, RowRelation) else Relation(
+                n=rel.n,
+                key_positions=rel.key_positions,
+                present=place(rel.present),
+                values={p: place(g) for p, g in rel.values.items()},
+            )
         )
         for name, rel in rels.items()
     }
+    # Row-table EDB slabs (loop-invariant caching, sparse storage): compact
+    # the tuples host-side once, pad to the planned capacity, device-place.
+    for name, rel in rels.items():
+        if plan.storage.get(name) != "row-table":
+            continue
+        cap = plan.row_caps[name]
+        k = len(rel.key_positions)
+        if isinstance(rel, RowRelation):
+            rows = rel.rows
+            raw_vals = {p: np.asarray(v) for p, v in rel.values.items()}
+        else:
+            rows = np.argwhere(np.asarray(rel.present)).astype(np.int32)
+            raw_vals = {
+                p: np.asarray(g)[tuple(rows.T)]
+                for p, g in rel.values.items()
+            }
+        count = rows.shape[0]
+        if count > cap:
+            raise ExecutorError(
+                f"EDB {name!r}: {count} rows exceed its row-table "
+                f"capacity {cap}"
+            )
+        ids = np.zeros((cap, k), np.int32)
+        ids[:count] = rows
+        valid = np.zeros((cap,), bool)
+        valid[:count] = True
+        values = {}
+        for p, v in raw_vals.items():
+            col = np.zeros((cap,), np.float32)
+            col[:count] = v.astype(np.float32)
+            values[p] = place(jnp.asarray(col))
+        ex.row_edb[name] = {
+            "ids": place(jnp.asarray(ids)),
+            "valid": place(jnp.asarray(valid)),
+            "values": values,
+        }
     return ex
 
 

@@ -62,6 +62,9 @@ class FixpointResult:
     # elastic remesh the executable went through (e.g. "remesh(8->4: ...)").
     straggler_events: int = 0
     remesh_events: Tuple[str, ...] = ()
+    # True when a row-table run overflowed its static capacity and the
+    # executor transparently re-ran the program on dense-grid storage.
+    storage_fallback: bool = False
 
 
 def device_fixpoint(

@@ -25,6 +25,11 @@ Contents:
 * **Group-by / combine** primitives — sorted segment reduce and scatter-add,
   the two receiver-side grouping algorithms of Fig. 9.
 * **Index join** (Fig. 4 O7) — gather on dense vertex ids (the B-tree probe).
+* **Row-table primitives** — sorted uint32 row codes over padded
+  ``[cap, arity]`` id columns: sort-merge join / exact set-difference /
+  unique-run segmentation plus the ``grid_to_rows``/``rows_to_grid``
+  boundary converters for the executor's sparse storage
+  (planner ``storage-selection`` notes).
 
 Consumers: the unified executor (:mod:`repro.core.executor`) assembles
 these operators into both the Listing-1/2 fast-path pipelines
@@ -72,6 +77,14 @@ __all__ = [
     "sparse_hash_sort_exchange",
     "fused_got_exchange",
     "COMBINE_OPS",
+    "row_codes",
+    "sort_row_codes",
+    "unique_row_runs",
+    "join_row_codes",
+    "difference_row_codes",
+    "grid_to_rows",
+    "row_linear_index",
+    "rows_to_grid",
 ]
 
 
@@ -784,3 +797,200 @@ def hash_sort_exchange(dst_ids, payload, n_vertices, axes,
         dst_ids, payload, n_vertices, axes, op, cap, False,
         edge_active=edge_mask, flag_cols=flag_cols,
     )
+
+
+# ---------------------------------------------------------------------------
+# Row-table primitives (sparse storage for the generic executor)
+# ---------------------------------------------------------------------------
+#
+# A *row table* is the compacted sparse counterpart of the executor's dense
+# vertex-domain grids: a fixed-capacity slab of id columns ``int32[cap, k]``
+# plus a validity mask ``bool[cap]`` (value columns ride alongside as
+# ``[cap]`` arrays owned by the caller).  Every primitive below is
+# static-shape and jit/shard_map-safe; set semantics ride on *row codes* —
+# the lexicographic uint32 encoding of a row's id tuple — so Join is a
+# sort-merge over codes, AntiJoin is an exact searchsorted set-difference,
+# and GroupBy/dedupe are unique-run segment combines.
+#
+# Capacity discipline: joins expand into a caller-chosen ``out_cap`` and
+# report a traced ``overflow`` flag instead of silently dropping rows; the
+# executor accumulates those flags and falls back to the dense grids when
+# any fires (lossless overflow policy, see ``core/planner.plan_program``).
+
+# Invalid rows sort with this key.  A *valid* row may legitimately carry the
+# same code (the all-max id tuple when domain**k == 2**32): the sort places
+# valid rows first among equal keys, so the valid region is always a prefix
+# of length ``n_valid`` and membership tests stay exact.
+_ROW_SENTINEL = jnp.uint32(0xFFFFFFFF)
+
+
+def row_codes(ids: jax.Array, n: int) -> jax.Array:
+    """Lexicographic uint32 code of each id row: ``sum ids[:, i] * n**(k-1-i)``.
+
+    Requires ``n ** k <= 2**32`` (checked statically) so codes are unique;
+    the executor's planner refuses row-table storage beyond that.
+    """
+
+    cap, k = ids.shape
+    if k and float(n) ** k > 4294967296.0:
+        raise ValueError(
+            f"row_codes: domain**arity = {n}**{k} exceeds the 2^32 row-code "
+            "space (row-table storage caps key arity by domain size)"
+        )
+    code = jnp.zeros((cap,), jnp.uint32)
+    for i in range(k):
+        code = code * jnp.uint32(n) + ids[:, i].astype(jnp.uint32)
+    return code
+
+
+def sort_row_codes(
+    codes: jax.Array, valid: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sort a row table by code with valid rows first.
+
+    Returns ``(perm, sorted_key, n_valid)``: ``perm`` reorders any per-row
+    array into sorted order, ``sorted_key`` is monotone (valid rows'
+    ascending codes, then ``_ROW_SENTINEL`` for the invalid suffix), and the
+    first ``n_valid`` sorted slots are exactly the valid rows.
+    """
+
+    skey = jnp.where(valid, codes, _ROW_SENTINEL)
+    # Secondary key puts valid rows before invalid ones among equal codes
+    # (lexsort: last key is primary).
+    perm = jnp.lexsort(((~valid).astype(jnp.uint8), skey)).astype(jnp.int32)
+    sorted_key = jnp.where(
+        valid[perm], codes[perm], _ROW_SENTINEL
+    )
+    return perm, sorted_key, jnp.sum(valid.astype(jnp.int32))
+
+
+def unique_row_runs(
+    sorted_key: jax.Array, n_valid: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """First-occurrence mask and segment ids of the unique runs in a sorted
+    key array (valid prefix only).  ``seg[i]`` numbers the run row ``i``
+    belongs to; rows past ``n_valid`` alias the last run and must be masked
+    by the caller (``edge_active``)."""
+
+    cap = sorted_key.shape[0]
+    ar = jnp.arange(cap, dtype=jnp.int32)
+    prev = jnp.concatenate([sorted_key[:1], sorted_key[:-1]])
+    in_valid = ar < n_valid
+    is_new = in_valid & ((ar == 0) | (sorted_key != prev))
+    seg = jnp.maximum(jnp.cumsum(is_new.astype(jnp.int32)) - 1, 0)
+    return is_new, seg
+
+
+def join_row_codes(
+    l_codes: jax.Array,
+    l_valid: jax.Array,
+    r_codes: jax.Array,
+    r_valid: jax.Array,
+    out_cap: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Sort-merge equi-join of two row tables on their codes.
+
+    The right table is sorted once; each left row finds its matching run by
+    binary search, and a prefix sum over per-row match counts lays the pairs
+    out densely into ``out_cap`` slots (the static-shape pair expansion).
+    Returns ``(li, ri, valid, overflow)``: left/right row indices per output
+    slot, the slot validity mask, and a traced flag set when the true pair
+    count exceeds ``out_cap`` (pairs beyond the cap are dropped — the caller
+    must honor the flag).
+    """
+
+    cap_l, cap_r = l_codes.shape[0], r_codes.shape[0]
+    perm_r, r_skey, r_nv = sort_row_codes(r_codes, r_valid)
+    start = jnp.searchsorted(r_skey, l_codes, side="left").astype(jnp.int32)
+    end = jnp.searchsorted(r_skey, l_codes, side="right").astype(jnp.int32)
+    # Clamp to the valid prefix: a left code equal to the sentinel would
+    # otherwise also "match" the invalid suffix.
+    end = jnp.minimum(end, r_nv)
+    cnt = jnp.where(l_valid, jnp.maximum(end - start, 0), 0)
+    offs = jnp.cumsum(cnt)
+    total = offs[-1]
+    overflow = jnp.logical_or(total > out_cap, total < 0)
+    t = jnp.arange(out_cap, dtype=jnp.int32)
+    li = jnp.searchsorted(offs, t, side="right").astype(jnp.int32)
+    li = jnp.minimum(li, cap_l - 1)
+    before = offs[li] - cnt[li]
+    rpos = start[li] + (t - before)
+    ri = perm_r[jnp.clip(rpos, 0, cap_r - 1)]
+    valid = t < total
+    return li, ri, valid, overflow
+
+
+def difference_row_codes(
+    l_codes: jax.Array,
+    l_valid: jax.Array,
+    r_codes: jax.Array,
+    r_valid: jax.Array,
+) -> jax.Array:
+    """Exact set-difference membership mask: True for valid left rows whose
+    code has NO valid right row (the AntiJoin keep-mask).  Capacity-free —
+    the left table is returned in place, only the mask changes."""
+
+    _, r_skey, r_nv = sort_row_codes(r_codes, r_valid)
+    cap_r = r_skey.shape[0]
+    pos = jnp.searchsorted(r_skey, l_codes, side="left").astype(jnp.int32)
+    posc = jnp.minimum(pos, cap_r - 1)
+    member = jnp.logical_and(pos < r_nv, r_skey[posc] == l_codes)
+    return jnp.logical_and(l_valid, jnp.logical_not(member))
+
+
+def grid_to_rows(
+    present: jax.Array, cap: int
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Compact a dense presence grid into a row table (``to_rows`` boundary
+    converter).  Returns ``(ids, valid, lin, overflow)``: id columns
+    ``int32[cap, k]``, slot validity, the clamped linear cell index per slot
+    (for gathering value grids via ``grid.reshape(-1)[lin]``), and the
+    traced overflow flag (more present cells than ``cap``)."""
+
+    shape = present.shape
+    k = len(shape)
+    if k == 0:
+        valid = jnp.zeros((cap,), jnp.bool_).at[0].set(
+            jnp.asarray(present, jnp.bool_)
+        )
+        return (
+            jnp.zeros((cap, 0), jnp.int32),
+            valid,
+            jnp.zeros((cap,), jnp.int32),
+            jnp.asarray(False),
+        )
+    flat = present.reshape((-1,))
+    size = flat.shape[0]
+    idx, valid = compact_active_edges(flat, cap)
+    overflow = jnp.sum(flat.astype(jnp.int32)) > cap
+    lin = jnp.minimum(idx, size - 1)
+    unr = jnp.unravel_index(lin, shape)
+    ids = jnp.stack([u.astype(jnp.int32) for u in unr], axis=-1)
+    return ids, valid, lin, overflow
+
+
+def row_linear_index(ids: jax.Array, valid: jax.Array, n: int) -> jax.Array:
+    """Linear dense-grid cell index of each row (``int32[cap]``); invalid
+    rows get the out-of-range sentinel ``n**k`` so ``mode='drop'`` scatters
+    ignore them.  Only meaningful when the dense grid is materializable
+    (``n**k`` within int32)."""
+
+    cap, k = ids.shape
+    size = int(n) ** k
+    lin = jnp.zeros((cap,), jnp.int32)
+    for i in range(k):
+        lin = lin * jnp.int32(n) + ids[:, i].astype(jnp.int32)
+    return jnp.where(valid, lin, jnp.int32(size))
+
+
+def rows_to_grid(ids: jax.Array, valid: jax.Array, n: int) -> jax.Array:
+    """Scatter a row table back onto the dense presence grid (``to_grid``
+    boundary converter)."""
+
+    k = ids.shape[1]
+    if k == 0:
+        return jnp.any(valid)
+    size = int(n) ** k
+    lin = row_linear_index(ids, valid, n)
+    flat = jnp.zeros((size,), jnp.bool_).at[lin].set(True, mode="drop")
+    return flat.reshape((n,) * k)

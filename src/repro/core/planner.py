@@ -348,6 +348,12 @@ class ProgramPlan:
     semi_naive: bool = False
     notes: Tuple[str, ...] = ()
     est_iteration_seconds: float = 0.0
+    # Physical storage selection: predicate -> "dense-grid" | "row-table",
+    # the row-table slab capacity per row predicate, and the shared
+    # intermediate slab capacity (0 when no predicate is row-stored).
+    storage: Mapping[str, str] = field(default_factory=dict)
+    row_caps: Mapping[str, int] = field(default_factory=dict)
+    row_cap: int = 0
 
     def explain(self) -> str:
         lines = [
@@ -362,6 +368,65 @@ class ProgramPlan:
         return "\n".join(lines)
 
 
+# Storage-selection cost model (see docs/optimizations.md):
+# - a predicate's dense grid above _ROW_FORCE_CELLS cells is infeasible to
+#   materialize per iteration -> always row-table;
+# - between _ROW_MIN_CELLS and the force threshold, row-table wins when the
+#   estimated cardinality leaves the grid at least _ROW_EST_FACTOR-x empty
+#   (row ops pay sort-merge log factors, so mild sparsity keeps dense);
+# - below _ROW_MIN_CELLS the dense masked tensor ops always win.
+_ROW_FORCE_CELLS = 1 << 24
+_ROW_MIN_CELLS = 1 << 21
+_ROW_EST_FACTOR = 16
+# Row-table slab capacities: 8x estimate headroom rounded to a power of
+# two, never above _ROW_CAP_MAX (the lossless overflow fallback catches
+# underestimates); intermediates get 4x the largest predicate slab.
+_ROW_CAP_MAX = 1 << 20
+_ROW_INTER_CAP_MAX = 1 << 22
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def _select_storage(
+    domain: int,
+    predicates: Mapping[str, Tuple[int, float]],
+    forced: Optional[Mapping[str, str]],
+) -> Tuple[Dict[str, str], Dict[str, int]]:
+    storage: Dict[str, str] = {}
+    row_caps: Dict[str, int] = {}
+    for pred, (arity, est) in predicates.items():
+        cells = float(domain) ** arity
+        choice = (forced or {}).get(pred)
+        if choice is None:
+            if arity == 0:
+                choice = "dense-grid"
+            elif cells > _ROW_FORCE_CELLS:
+                choice = "row-table"
+            elif cells >= _ROW_MIN_CELLS and est * _ROW_EST_FACTOR <= cells:
+                choice = "row-table"
+            else:
+                choice = "dense-grid"
+        elif choice not in ("dense-grid", "row-table"):
+            raise ValueError(
+                f"unknown storage {choice!r} for predicate {pred!r} "
+                "(expected 'dense-grid' or 'row-table')"
+            )
+        if arity == 0:
+            choice = "dense-grid"  # scalar facts have no row encoding
+        storage[pred] = choice
+        if choice == "row-table":
+            cap = min(_next_pow2(max(64, int(8 * est))), _ROW_CAP_MAX)
+            if cells <= _ROW_CAP_MAX:
+                # Universe bound: the slab never needs more rows than the
+                # whole domain grid has cells (small forced-row domains
+                # become overflow-free).
+                cap = min(cap, _next_pow2(int(cells)))
+            row_caps[pred] = cap
+    return storage, row_caps
+
+
 def plan_program(
     phases: Tuple[Tuple[str, ...], ...],
     groupbys: Sequence[GroupBySpec],
@@ -371,6 +436,9 @@ def plan_program(
     *,
     semi_naive: bool = False,
     extra_notes: Tuple[str, ...] = (),
+    predicates: Optional[Mapping[str, Tuple[int, float]]] = None,
+    storage: Optional[Mapping[str, str]] = None,
+    row_cap: Optional[int] = None,
 ) -> ProgramPlan:
     """Cost-based lowering of a generic logical plan onto the dense-grid
     executor.
@@ -386,6 +454,14 @@ def plan_program(
     ids presorted, so no sort is ever paid).  Both costs are estimated and
     the winner recorded.
 
+    ``predicates`` maps each predicate to ``(key arity, estimated rows)``
+    and drives the per-predicate **storage selection** (``dense-grid`` vs
+    ``row-table`` — see the ``_ROW_*`` cost constants); ``storage`` forces
+    individual predicates, ``row_cap`` pins the intermediate slab size.
+    The selection is recorded as the leading ``storage-selection(...)``
+    note (byte-identical to the historical all-dense note when nothing is
+    row-stored).
+
     ``extra_notes`` carries upstream logical-rewrite decisions, appended
     last in a fixed order: the ``semi-naive(...)`` delta-rewrite entries,
     then the optimizer's single ``rewrite(join-reorder: ..., pushdown: ...,
@@ -394,8 +470,29 @@ def plan_program(
     logical and physical decisions in one tuple.
     """
 
+    pred_storage, row_caps = _select_storage(
+        domain, predicates or {}, storage
+    )
+    row_preds = sorted(p for p, s in pred_storage.items() if s == "row-table")
+    if row_preds:
+        n_dense = sum(1 for s in pred_storage.values() if s == "dense-grid")
+        parts = [f"n={domain}"] + [
+            f"{p}=row-table[cap={row_caps[p]}]" for p in row_preds
+        ]
+        if n_dense:
+            parts.append(f"dense-grid x{n_dense}")
+        storage_note = "storage-selection(" + ", ".join(parts) + ")"
+        inter_cap = row_cap if row_cap is not None else min(
+            max(4 * max(row_caps.values()), 256), _ROW_INTER_CAP_MAX
+        )
+    else:
+        # No row-stored predicate: the note stays byte-identical to the
+        # all-dense plans golden tests pin.
+        storage_note = f"storage-selection(dense-grid[n={domain}])"
+        inter_cap = 0
+
     notes: List[str] = [
-        f"storage-selection(dense-grid[n={domain}])",
+        storage_note,
         "loop-invariant-caching(edb-grids)",
     ]
     dp = mesh.data_parallel_size
@@ -439,6 +536,9 @@ def plan_program(
         semi_naive=semi_naive,
         notes=tuple(notes),
         est_iteration_seconds=est,
+        storage=pred_storage,
+        row_caps=row_caps,
+        row_cap=inter_cap,
     )
 
 

@@ -43,7 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Dict, FrozenSet, List, Mapping, Optional, Tuple
+from typing import Dict, FrozenSet, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.algebra import (
     AntiJoin,
@@ -72,6 +72,7 @@ __all__ = [
     "RewriteResult",
     "rewrite_plan",
     "estimate_cardinality",
+    "estimate_program_cardinalities",
     "plan_to_dot",
 ]
 
@@ -90,12 +91,18 @@ DELTA_DENSITY = 0.125
 
 
 def estimate_cardinality(
-    op: LogicalOp, relations: Mapping[str, object], domain: int
+    op: LogicalOp,
+    relations: Mapping[str, object],
+    domain: int,
+    state_estimates: Optional[Mapping[str, float]] = None,
 ) -> float:
     """Estimated output rows of ``op`` under the dense-grid model.
 
     EDB scans use the real materialized row count; recursive-state reads
-    assume a full ``domain**k`` grid (the dense backend's worst case); joins
+    assume a full ``domain**k`` grid (the dense backend's worst case) unless
+    ``state_estimates`` supplies real per-predicate row counts (from
+    :func:`estimate_program_cardinalities` — predicates absent from the map
+    are treated as empty, the fixpoint iteration's starting point); joins
     divide by ``domain`` per shared key (uniform-independence, the textbook
     System-R estimate).
     """
@@ -112,8 +119,15 @@ def estimate_cardinality(
                     pass
             return float(domain) ** len(node.columns)
         if isinstance(node, Delta):
+            if state_estimates is not None:
+                return max(
+                    1.0,
+                    state_estimates.get(node.relation, 0.0) * DELTA_DENSITY,
+                )
             return max(1.0, (float(domain) ** len(node.columns)) * DELTA_DENSITY)
         if isinstance(node, (ScanState, ScanView, Frontier)):
+            if state_estimates is not None:
+                return max(1.0, state_estimates.get(node.relation, 0.0))
             return float(domain) ** len(node.columns)
         if isinstance(node, Select):
             return 0.5 * est(node.child)
@@ -137,6 +151,41 @@ def estimate_cardinality(
     return est(op)
 
 
+def estimate_program_cardinalities(
+    dataflows: Sequence[RuleDataflow],
+    relations: Mapping[str, object],
+    domain: int,
+    rounds: int = 4,
+) -> Dict[str, float]:
+    """Iterated per-predicate row-count estimates (real cardinalities).
+
+    Starts every derived predicate at zero rows and replays the rule set
+    ``rounds`` times: each round re-estimates every rule body against the
+    current per-predicate counts (recursive reads no longer assume the full
+    ``domain**k`` grid) and folds rule outputs into their targets
+    monotonically.  Estimates are capped at the predicate's schema universe.
+    The result feeds the planner's storage selection and gives join
+    reordering real row counts on recursive predicates.
+    """
+
+    ests: Dict[str, float] = {}
+    schema_cap: Dict[str, float] = {}
+    for df in dataflows:
+        schema_cap[df.target] = float(domain) ** len(df.op.schema())
+    for _ in range(max(1, rounds)):
+        totals: Dict[str, float] = {}
+        for df in dataflows:
+            e = estimate_cardinality(
+                df.op, relations, domain, state_estimates=ests
+            )
+            totals[df.target] = totals.get(df.target, 0.0) + e
+        for target, total in totals.items():
+            ests[target] = min(
+                max(ests.get(target, 0.0), total), schema_cap[target]
+            )
+    return ests
+
+
 # ---------------------------------------------------------------------------
 # Join reordering
 # ---------------------------------------------------------------------------
@@ -149,11 +198,15 @@ def _flatten_join_region(op: LogicalOp) -> List[LogicalOp]:
 
 
 def _greedy_order(
-    leaves: List[LogicalOp], relations: Mapping[str, object], domain: int
+    leaves: List[LogicalOp], relations: Mapping[str, object], domain: int,
+    state_estimates: Optional[Mapping[str, float]] = None,
 ) -> List[int]:
     """Greedy smallest-intermediate join order (ties keep source order)."""
 
-    ests = [estimate_cardinality(l, relations, domain) for l in leaves]
+    ests = [
+        estimate_cardinality(l, relations, domain, state_estimates)
+        for l in leaves
+    ]
     schemas = [set(l.schema()) for l in leaves]
     remaining = list(range(len(leaves)))
     start = min(remaining, key=lambda i: (ests[i], i))
@@ -187,7 +240,8 @@ def _rebuild_left_deep(leaves: List[LogicalOp], order: List[int]) -> LogicalOp:
 
 
 def _reorder_joins(
-    op: LogicalOp, relations: Mapping[str, object], domain: int
+    op: LogicalOp, relations: Mapping[str, object], domain: int,
+    state_estimates: Optional[Mapping[str, float]] = None,
 ) -> Tuple[LogicalOp, bool]:
     """Reorder every maximal Join/Cross region below ``op`` (top-down).
 
@@ -200,16 +254,18 @@ def _reorder_joins(
         fired = False
         leaves = []
         for leaf in raw_leaves:
-            new_leaf, f = _reorder_joins(leaf, relations, domain)
+            new_leaf, f = _reorder_joins(leaf, relations, domain,
+                                         state_estimates)
             fired = fired or f
             leaves.append(new_leaf)
-        order = _greedy_order(leaves, relations, domain)
+        order = _greedy_order(leaves, relations, domain, state_estimates)
         if order == list(range(len(leaves))) and not fired:
             return op, False
         reordered = order != list(range(len(leaves)))
         return _rebuild_left_deep(leaves, order), fired or reordered
     if isinstance(op, AntiJoin):
-        new_left, fired = _reorder_joins(op.left, relations, domain)
+        new_left, fired = _reorder_joins(op.left, relations, domain,
+                                         state_estimates)
         if fired:
             return dataclasses.replace(op, left=new_left), True
         return op, False
@@ -220,12 +276,13 @@ def _reorder_joins(
     for f in dataclasses.fields(op):
         v = getattr(op, f.name)
         if isinstance(v, LogicalOp):
-            nv, fv = _reorder_joins(v, relations, domain)
+            nv, fv = _reorder_joins(v, relations, domain, state_estimates)
             if fv:
                 changes[f.name] = nv
                 fired = True
         elif isinstance(v, tuple) and v and all(isinstance(x, LogicalOp) for x in v):
-            nvs = [_reorder_joins(x, relations, domain) for x in v]
+            nvs = [_reorder_joins(x, relations, domain, state_estimates)
+                   for x in v]
             if any(fv for _, fv in nvs):
                 changes[f.name] = tuple(nv for nv, _ in nvs)
                 fired = True
@@ -470,11 +527,18 @@ def rewrite_plan(
     dataflows = list(plan.init) + list(plan.body)
     guard_before = _negation_right_signatures(dataflows)
 
+    # Real row counts for recursive predicates (iterated fixpoint of the
+    # estimate equations) — join reordering sees actual cardinalities
+    # instead of full-grid worst cases.
+    state_estimates = estimate_program_cardinalities(
+        dataflows, relations, domain
+    )
+
     reordered: List[str] = []
     pushed = 0
     new_dataflows: List[RuleDataflow] = []
     for df in dataflows:
-        op, fired = _reorder_joins(df.op, relations, domain)
+        op, fired = _reorder_joins(df.op, relations, domain, state_estimates)
         if fired:
             reordered.append(df.label)
         op, n_moved = _pushdown_selects(op)
@@ -513,12 +577,22 @@ def rewrite_plan(
 # ---------------------------------------------------------------------------
 
 
-def plan_to_dot(plan: LogicalPlan) -> str:
+def plan_to_dot(
+    plan: LogicalPlan, storage: Optional[Mapping[str, str]] = None
+) -> str:
     """Render a LogicalPlan as graphviz dot text (one cluster per rule).
 
     Shared (CSE'd) subtrees appear once with fan-in edges, because node
-    identity follows Python object identity.
+    identity follows Python object identity.  When ``storage`` is given (a
+    predicate -> {"dense-grid", "row-table"} map, e.g.
+    ``ProgramPlan.storage``), nodes that read or write a row-table predicate
+    are drawn filled (``box3d``/filled ellipse) so mixed-storage plans are
+    visually auditable; ``storage=None`` output is byte-identical to before.
     """
+
+    storage = storage or {}
+    _ROW_SCAN_ATTRS = ", shape=box3d, style=filled, fillcolor=lightsteelblue"
+    _ROW_SINK_ATTRS = ", style=filled, fillcolor=lightsteelblue"
 
     lines = [
         "digraph logical_plan {",
@@ -536,13 +610,19 @@ def plan_to_dot(plan: LogicalPlan) -> str:
             counter[0] += 1
         return node_ids[key]
 
+    def _node_storage_attrs(op: LogicalOp) -> str:
+        if isinstance(op, (ScanEDB, ScanState, ScanView, Delta, Frontier)):
+            if storage.get(op.relation) == "row-table":
+                return _ROW_SCAN_ATTRS
+        return ""
+
     def emit(op: LogicalOp) -> str:
         nid = node_id(op)
         if id(op) in emitted:
             return nid
         emitted.add(id(op))
         label = op._describe().replace("\\", "\\\\").replace('"', '\\"')
-        lines.append(f'  {nid} [label="{label}"];')
+        lines.append(f'  {nid} [label="{label}"{_node_storage_attrs(op)}];')
         for child in op.children():
             cid = emit(child)
             lines.append(f"  {cid} -> {nid};")
@@ -553,9 +633,14 @@ def plan_to_dot(plan: LogicalPlan) -> str:
             root = emit(df.op)
             sink = f"rule_{df.label}".replace("?", "q")
             arrow = "=> next" if df.next_state else "=>"
+            extra = (
+                _ROW_SINK_ATTRS
+                if storage.get(df.target) == "row-table"
+                else ""
+            )
             lines.append(
                 f'  {sink} [shape=ellipse, label="{df.label} {arrow} '
-                f'{df.target} [{section}]"];'
+                f'{df.target} [{section}]"{extra}];'
             )
             lines.append(f"  {root} -> {sink};")
     lines.append("}")

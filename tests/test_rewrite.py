@@ -38,6 +38,7 @@ from repro.core.listings import (
     negated_reach_program,
     parsed_negated_reach_program,
     same_generation_program,
+    transitive_closure_program,
 )
 from repro.core.rewrite import (
     RewriteError,
@@ -254,6 +255,30 @@ def test_plan_to_dot_renders_rules_and_shares_nodes():
     # in the program text.
     assert dot.count('label="ScanEDB[parent]') == 3
     assert dot.count('label="ScanEDB[parent](P, X)"') == 1
+
+
+def test_plan_to_dot_renders_storage_selection():
+    ex = compile_program(
+        transitive_closure_program(), {"edge": _fixture()["edge"]})
+    base = plan_to_dot(ex.logical)
+    # Default rendering is byte-identical with or without the argument.
+    assert plan_to_dot(ex.logical, storage=None) == base
+    assert "box3d" not in base
+
+    dot = plan_to_dot(ex.logical, storage={"tc": "row-table",
+                                           "edge": "dense-grid"})
+    # tc scans and the tc rule sinks are filled; the dense edge scan is not.
+    assert "box3d" in dot and "lightsteelblue" in dot
+    for line in dot.splitlines():
+        if 'label="ScanEDB[edge]' in line:
+            assert "box3d" not in line
+        if 'label="Delta[tc]' in line or 'label="ScanState[tc]' in line:
+            assert "box3d" in line
+    # Attribute-only change: stripping the fills recovers the base render.
+    stripped = dot.replace(
+        ", shape=box3d, style=filled, fillcolor=lightsteelblue", ""
+    ).replace(", style=filled, fillcolor=lightsteelblue", "")
+    assert stripped == base
 
 
 def test_rewrite_plan_requires_no_relations():

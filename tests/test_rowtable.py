@@ -1,0 +1,318 @@
+"""Row-table storage differential conformance.
+
+Properties defended:
+
+1. **Forced row-table == dense-grid** — every shipped generic program
+   (transitive closure, connected components naive AND semi-naive,
+   same-generation, negated-reach, the multi-stratum PageRank pipeline)
+   compiled with ``storage="row-table"`` matches the dense engine <= 1e-8
+   on the host driver and the on-device ``lax.while_loop`` driver.
+
+2. **Planner-selected row tables scale past the dense wall** — generic TC
+   over a 65536-vertex sparse edge set (where the dense ``n^2`` grid is a
+   4 GiB bool array) completes on planner-selected row tables and matches
+   a NumPy closure oracle *exactly*.
+
+3. **AntiJoin is exact set-difference** — ``difference_row_codes`` matches
+   Python set difference on key codes spanning the full uint32 range,
+   where no dense mask could even be materialized.
+
+4. **Lossless overflow fallback** — a row run that overflows its static
+   capacity transparently re-runs on dense grids (``storage_fallback`` set)
+   and produces the identical fixpoint; a ``RowRelation`` EDB (no dense
+   grid to fall back to) raises instead of silently truncating.
+
+5. **Input hardening** — ``Relation.from_columns`` / ``RowRelation.from_columns``
+   deduplicate rows (keep-last, Datalog update semantics) and fail loudly
+   on out-of-domain or negative vertex ids instead of index-wrapping.
+
+The 8-virtual-device mesh conformance lives in
+``tests/test_spmd_rowtable.py`` (subprocess launcher).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.executor import (
+    ExecutorError,
+    Relation,
+    RowRelation,
+    compile_program,
+)
+from repro.core.listings import (
+    connected_components_program,
+    negated_reach_program,
+    pagerank_threshold_program,
+    same_generation_program,
+    transitive_closure_program,
+)
+from repro.core.physical import difference_row_codes
+
+N = 32
+
+
+def _edges(seed=0, m=48, n=N):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, n, m), rng.integers(0, n, m)
+
+
+def _grid(rel):
+    """Dense bool/value grids from either relation representation."""
+    if isinstance(rel, RowRelation):
+        rel = rel.to_dense()
+    return np.asarray(rel.present), {
+        k: np.asarray(v) for k, v in rel.values.items()
+    }
+
+
+def _assert_state_close(dense_res, row_res, preds, atol=1e-8):
+    for p in preds:
+        dp, dv = _grid(dense_res.state[p])
+        rp, rv = _grid(row_res.state[p])
+        assert np.array_equal(dp, rp), p
+        for k in dv:
+            # value columns only compared where present
+            assert np.abs(np.where(dp, dv[k] - rv[k], 0.0)).max() <= atol, \
+                (p, k)
+
+
+# ---------------------------------------------------------------------------
+# 1. Forced row-table vs dense, all programs, host + device drivers
+# ---------------------------------------------------------------------------
+
+
+def _tc_setup():
+    src, dst = _edges()
+    rels = {"edge": Relation.from_columns(N, src, dst)}
+    return transitive_closure_program(), rels, ("tc",), {}
+
+
+def _cc_setup(semi_naive):
+    src, dst = _edges(seed=1, m=40)
+    s2, d2 = np.concatenate([src, dst]), np.concatenate([dst, src])
+    rels = {
+        "edge": Relation.from_columns(N, s2, d2),
+        "node": Relation.from_columns(
+            N, np.arange(N), np.arange(N, dtype=np.float32)),
+    }
+    return (connected_components_program(), rels, ("cc",),
+            {"semi_naive": semi_naive})
+
+
+def _sg_setup():
+    pp, pc = _edges(seed=4, m=36)
+    rels = {"parent": Relation.from_columns(N, pp, pc)}
+    return same_generation_program(), rels, ("sg",), {}
+
+
+def _nr_setup():
+    n = 64
+    src, dst = _edges(seed=0, m=96, n=n)
+    rels = {
+        "edge": Relation.from_columns(n, src, dst),
+        "source": Relation.from_columns(
+            n, np.arange(8), np.array([1, 0, 1, 1, 0, 1, 0, 1], np.float32)),
+        "blocked": Relation.from_columns(n, np.array([3, 9, 27])),
+        "node": Relation.from_columns(
+            n, np.arange(n), (np.arange(n) % 5).astype(np.float32)),
+    }
+    return negated_reach_program(), rels, ("reach",), {}
+
+
+def _pr_setup():
+    # Larger domain than the boolean programs: ranks scale as 1/n, so at
+    # n=256 a few ULPs of f32 summation-order drift between the two
+    # compiled programs sit near 1e-9 — comfortably inside the 1e-8 bar
+    # the boolean predicates meet exactly.
+    n = 256
+    rng = np.random.default_rng(2)
+    src = np.repeat(np.arange(n), 3)
+    dst = rng.integers(0, n, 3 * n)
+    deg = np.bincount(src, minlength=n).astype(np.float32)
+    rels = {
+        "edge": Relation.from_columns(n, src, dst),
+        "node": Relation.from_columns(
+            n, np.arange(n), np.full(n, 1.0 / n, np.float32), deg,
+            np.full(n, 0.15 / n, np.float32)),
+    }
+    return (pagerank_threshold_program(tau=1.5 / n), rels,
+            ("rank", "hot", "reach"), {"iters": 60})
+
+
+_PROGRAMS = {
+    "tc": _tc_setup,
+    "cc-naive": lambda: _cc_setup(False),
+    "cc-semi-naive": lambda: _cc_setup(True),
+    "sg": _sg_setup,
+    "negated-reach": _nr_setup,
+    "pagerank-pipeline": _pr_setup,
+}
+
+
+@pytest.mark.parametrize("name", sorted(_PROGRAMS))
+@pytest.mark.parametrize("on_device", [False, True])
+def test_forced_row_table_matches_dense(name, on_device):
+    program, rels, preds, kw = _PROGRAMS[name]()
+    iters = kw.pop("iters", 100)
+    dense = compile_program(program, dict(rels), **kw).run(
+        max_iters=iters, on_device=on_device)
+    row_ex = compile_program(
+        program, dict(rels), storage="row-table", **kw)
+    assert all(s == "row-table" for s in row_ex.storage.values())
+    row = row_ex.run(max_iters=iters, on_device=on_device)
+    assert row.converged == dense.converged
+    assert not row.storage_fallback
+    for p in preds:
+        assert isinstance(row.state[p], RowRelation)
+    _assert_state_close(dense, row, preds)
+
+
+# ---------------------------------------------------------------------------
+# 2. 64k-vertex sparse TC on planner-selected row tables (exact)
+# ---------------------------------------------------------------------------
+
+
+def test_tc_64k_sparse_matches_closure_oracle_exactly():
+    n, block = 65536, 8
+    starts = np.arange(0, n, block)
+    src = np.concatenate(
+        [np.arange(s, s + block - 1) for s in starts])
+    dst = src + 1
+    edge = RowRelation.from_columns(n, src, dst)
+
+    ex = compile_program(transitive_closure_program(), {"edge": edge})
+    # The planner must have picked row tables on its own: the dense n^2
+    # grid would be 4 GiB of bool.
+    assert ex.storage == {"edge": "row-table", "tc": "row-table"}
+
+    res = ex.run(max_iters=16)
+    assert res.converged and not res.storage_fallback
+    tc = res.state["tc"]
+    assert isinstance(tc, RowRelation)
+
+    oracle = set()
+    for s in range(0, n, block):
+        for i in range(s, s + block):
+            for j in range(i + 1, s + block):
+                oracle.add((i, j))
+    assert set(map(tuple, tc.rows.tolist())) == oracle
+
+
+# ---------------------------------------------------------------------------
+# 3. AntiJoin == exact set-difference (no dense mask possible)
+# ---------------------------------------------------------------------------
+
+
+def test_difference_row_codes_is_exact_set_difference():
+    rng = np.random.default_rng(7)
+    # Codes across the whole uint32 range — a dense mask over this key
+    # space would be 4 Gi entries, so only true set-difference can work.
+    left = rng.integers(0, 2**32, 512, dtype=np.uint32)
+    right = rng.integers(0, 2**32, 256, dtype=np.uint32)
+    right[:128] = left[:128]  # guarantee overlap
+    lv = rng.random(512) < 0.9
+    rv = rng.random(256) < 0.9
+
+    keep = np.asarray(difference_row_codes(
+        jnp.asarray(left), jnp.asarray(lv),
+        jnp.asarray(right), jnp.asarray(rv)))
+
+    rset = set(right[rv].tolist())
+    expect = lv & np.array([c not in rset for c in left.tolist()])
+    assert np.array_equal(keep, expect)
+
+
+def test_negated_reach_row_antijoin_excludes_blocked():
+    program, rels, _, _ = _nr_setup()
+    ex = compile_program(program, dict(rels), storage="row-table")
+    res = ex.run(max_iters=64)
+    reach = res.state["reach"]
+    assert isinstance(reach, RowRelation)
+    got = set(reach.rows[:, 0].tolist())
+    # Node 3 is blocked AND a source: N1 (no negation) admits it, but N2's
+    # AntiJoin must never extend reach INTO a blocked node, so the other
+    # blocked nodes stay out no matter how many edges point at them.
+    assert got & {9, 27} == set()
+    # The set-difference is not lossy either: unblocked neighbours of
+    # reached nodes with weight < 3 are present (dense engine agrees, per
+    # the differential test above — here we pin one hand-checked property).
+    assert 3 in got  # source survives stratum N1
+
+
+# ---------------------------------------------------------------------------
+# 4. Capacity overflow: lossless dense fallback
+# ---------------------------------------------------------------------------
+
+
+def test_row_cap_overflow_falls_back_to_dense_losslessly():
+    src, dst = _edges()
+    edge = Relation.from_columns(N, src, dst)
+    dense = compile_program(
+        transitive_closure_program(), {"edge": edge}).run(max_iters=64)
+
+    ex = compile_program(
+        transitive_closure_program(), {"edge": edge},
+        storage="row-table", row_cap=64)
+    res = ex.run(max_iters=64)
+    assert res.storage_fallback
+    assert isinstance(res.state["tc"], Relation)
+    assert np.array_equal(
+        np.asarray(res.state["tc"].present),
+        np.asarray(dense.state["tc"].present))
+
+
+def test_row_cap_overflow_with_row_edb_raises():
+    src, dst = _edges()
+    edge = RowRelation.from_columns(N, src, dst)
+    ex = compile_program(
+        transitive_closure_program(), {"edge": edge},
+        storage="row-table", row_cap=64)
+    with pytest.raises(ExecutorError, match="row-table capacity overflow"):
+        ex.run(max_iters=64)
+
+
+def test_row_edb_rejects_forced_dense():
+    src, dst = _edges()
+    edge = RowRelation.from_columns(N, src, dst)
+    with pytest.raises(ExecutorError, match="dense"):
+        compile_program(transitive_closure_program(), {"edge": edge},
+                        storage="dense-grid")
+
+
+# ---------------------------------------------------------------------------
+# 5. from_columns hardening (both representations)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cls", [Relation, RowRelation])
+@pytest.mark.parametrize("bad", [99, -1])
+def test_from_columns_rejects_out_of_domain_ids(cls, bad):
+    with pytest.raises(ExecutorError, match="outside the domain"):
+        cls.from_columns(8, np.array([0, bad]), np.array([1, 2]))
+
+
+def test_from_columns_deduplicates_keep_last():
+    keys = np.array([1, 1, 2])
+    vals = np.array([10.0, 20.0, 30.0], np.float32)
+
+    dense = Relation.from_columns(8, keys, np.array([3, 3, 4]), vals)
+    assert np.asarray(dense.present).sum() == 2
+    assert np.asarray(dense.values[2])[1, 3] == 20.0
+
+    row = RowRelation.from_columns(8, keys, np.array([3, 3, 4]), vals)
+    assert row.count() == 2
+    assert row.rows.tolist() == [[1, 3], [2, 4]]
+    assert row.values[2].tolist() == [20.0, 30.0]
+
+
+def test_row_relation_round_trips_to_dense():
+    src, dst = _edges(seed=9, m=20)
+    w = np.arange(20, dtype=np.float32)
+    row = RowRelation.from_columns(N, src, dst, w)
+    dense = Relation.from_columns(N, src, dst, w)
+    assert np.array_equal(
+        np.asarray(row.to_dense().present), np.asarray(dense.present))
+    assert np.array_equal(
+        np.asarray(row.to_dense().values[2]), np.asarray(dense.values[2]))
