@@ -1,0 +1,68 @@
+"""Shared argparse front door for the fig benchmarks.
+
+Every ``benchmarks/fig*.py`` declares a one-line ``DESCRIPTION`` (what
+figure/claim it reproduces) and hands its ``main(emit=print)`` to
+:func:`run_main`, which provides the uniform CLI: ``--json <path>``
+(write the emitted rows as a ``repro-bench-v1`` snapshot) and, for
+modules with acceptance bars, ``--check`` (exit non-zero when a bar
+fails).  ``benchmarks/run.py --help`` lists every module's DESCRIPTION,
+so the whole suite is self-documenting from one place.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Callable, Optional
+
+
+def build_parser(
+    description: str, *, check_help: Optional[str] = None
+) -> argparse.ArgumentParser:
+    """An ArgumentParser with the shared benchmark flags: ``--json``
+    always, ``--check`` when the module has acceptance bars."""
+
+    parser = argparse.ArgumentParser(description=description)
+    parser.add_argument(
+        "--json", metavar="PATH", default=None,
+        help="also write the emitted rows as a repro-bench-v1 snapshot",
+    )
+    if check_help is not None:
+        parser.add_argument(
+            "--check", action="store_true", help=check_help,
+        )
+    return parser
+
+
+def run_main(
+    main_fn: Callable[..., Optional[bool]],
+    description: str,
+    *,
+    check_help: Optional[str] = None,
+    argv=None,
+    **main_kwargs,
+) -> int:
+    """Parse the shared flags, run ``main_fn(emit=...)``, write the
+    optional snapshot, and turn a falsy return into a non-zero exit when
+    ``--check`` was requested."""
+
+    from benchmarks._json import parse_row, write_doc
+
+    ns = build_parser(description, check_help=check_help).parse_args(argv)
+    rows = []
+
+    def emit(line):
+        parsed = parse_row(line)
+        if parsed is not None:
+            rows.append(parsed)
+        print(line)
+
+    ok = main_fn(emit=emit, **main_kwargs)
+    if ns.json is not None:
+        path = os.path.abspath(ns.json)
+        write_doc(path, rows)
+        print(f"wrote {len(rows)} rows to {path}", file=sys.stderr)
+    if check_help is not None and getattr(ns, "check", False):
+        return 0 if (ok or ok is None) else 1
+    return 0

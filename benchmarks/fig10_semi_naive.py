@@ -149,6 +149,13 @@ def sweep(name, ex, state, emit):
     return speedups
 
 
+DESCRIPTION = (
+    "Fig. 10: semi-naive (delta-frontier) evaluation — dense vs "
+    "frontier-compacted sparse supersteps across frontier densities "
+    "(--sharded: the 8-virtual-device SPMD sweep)"
+)
+
+
 def main(emit=print, sharded: bool = False) -> bool:
     """Returns True when every workload clears its acceptance bar at 5%
     density (>= 3x single-shard, >= 2x sharded) — ``--check`` turns a miss
@@ -196,42 +203,51 @@ def main(emit=print, sharded: bool = False) -> bool:
 
 
 if __name__ == "__main__":
-    from benchmarks._json import parse_row, pop_json_arg, write_doc
+    from benchmarks._cli import build_parser
+    from benchmarks._json import parse_row, write_doc
 
-    want_sharded = "--sharded" in sys.argv
-    check = "--check" in sys.argv
-    try:
-        # Absolutized before the --sharded re-exec (which runs the child
-        # with cwd=_ROOT), so the snapshot lands in the caller's cwd.
-        json_path, argv_rest = pop_json_arg(sys.argv[1:])
-    except ValueError as err:
-        print(err, file=sys.stderr)
-        sys.exit(2)
+    parser = build_parser(
+        DESCRIPTION,
+        check_help="enforce the semi-naive bars: >= 3x sparse superstep "
+                   "speedup at <= 5%% density (>= 2x on the sharded sweep)",
+    )
+    parser.add_argument(
+        "--sharded", action="store_true",
+        help="run the sweep on an 8-virtual-device SPMD mesh (re-execs "
+             "itself with the device-count XLA flag when needed)",
+    )
+    ns = parser.parse_args()
     flags = os.environ.get("XLA_FLAGS", "")
-    if want_sharded and "xla_force_host_platform_device_count" not in flags:
-        # The device-count flag must be set before jax initializes: re-exec.
+    if ns.sharded and "xla_force_host_platform_device_count" not in flags:
+        # The device-count flag must be set before jax initializes: re-exec
+        # with the --json operand absolutized so the snapshot still lands in
+        # the caller's cwd (the child runs with cwd=_ROOT).
         from repro.launch.mesh import virtual_device_env
 
+        argv = ["--sharded"]
+        if ns.check:
+            argv.append("--check")
+        if ns.json is not None:
+            argv += ["--json", os.path.abspath(ns.json)]
         env = virtual_device_env(8)
         env["PYTHONPATH"] = os.pathsep.join(
             p for p in (_ROOT, env.get("PYTHONPATH", "")) if p
         )
         sys.exit(subprocess.call(
-            [sys.executable, os.path.abspath(__file__)] + argv_rest,
+            [sys.executable, os.path.abspath(__file__)] + argv,
             env=env, cwd=_ROOT,
         ))
-    if json_path is not None:
-        rows = []
+    rows = []
 
-        def emit(line):
-            parsed = parse_row(line)
-            if parsed is not None:
-                rows.append(parsed)
-            print(line)
+    def emit(line):
+        parsed = parse_row(line)
+        if parsed is not None:
+            rows.append(parsed)
+        print(line)
 
-        ok = main(emit=emit, sharded=want_sharded)
+    ok = main(emit=emit, sharded=ns.sharded)
+    if ns.json is not None:
+        json_path = os.path.abspath(ns.json)
         write_doc(json_path, rows)
         print(f"wrote {len(rows)} rows to {json_path}", file=sys.stderr)
-    else:
-        ok = main(sharded=want_sharded)
-    sys.exit(0 if (ok or not check) else 1)
+    sys.exit(0 if (ok or not ns.check) else 1)

@@ -156,6 +156,12 @@ def _stale_aggregate_row(emit) -> None:
     ))
 
 
+DESCRIPTION = (
+    "Fig. 12: elastic fault-tolerance costs — checkpoint overhead, "
+    "recovery replay, straggler tree fallback, bounded staleness"
+)
+
+
 def main(emit=print) -> bool:
     ok = _checkpoint_overhead(emit)
     ok = _recovery_replay(emit) and ok
@@ -164,26 +170,12 @@ def main(emit=print) -> bool:
 
 
 if __name__ == "__main__":
-    from benchmarks._json import parse_row, pop_json_arg, write_doc
+    import sys
 
-    check = "--check" in sys.argv
-    try:
-        json_path, _ = pop_json_arg(sys.argv[1:])
-    except ValueError as err:
-        print(err, file=sys.stderr)
-        sys.exit(2)
-    if json_path is not None:
-        rows = []
+    from benchmarks._cli import run_main
 
-        def emit(line):
-            parsed = parse_row(line)
-            if parsed is not None:
-                rows.append(parsed)
-            print(line)
-
-        ok = main(emit=emit)
-        write_doc(json_path, rows)
-        print(f"wrote {len(rows)} rows to {json_path}", file=sys.stderr)
-    else:
-        ok = main()
-    sys.exit(0 if (ok or not check) else 1)
+    sys.exit(run_main(
+        main, DESCRIPTION,
+        check_help="enforce the FT bars: checkpoint overhead <= 10% at cadence 8; "
+                   "recovery replays <= cadence iterations and matches to <= 1e-8",
+    ))

@@ -133,29 +133,20 @@ def _firing_rows(emit) -> None:
         ))
 
 
+DESCRIPTION = (
+    "Fig. 13: Datalog text frontend — parse+rewrite+compile latency and "
+    "rewritten- vs raw-plan per-iteration firing cost"
+)
+
+
 def main(emit=print) -> None:
     _frontend_rows(emit)
     _firing_rows(emit)
 
 
 if __name__ == "__main__":
-    from benchmarks._json import parse_row, pop_json_arg, write_doc
+    import sys
 
-    try:
-        json_path, _ = pop_json_arg(sys.argv[1:])
-    except ValueError as err:
-        print(err, file=sys.stderr)
-        sys.exit(2)
-    if json_path is not None:
-        rows = []
+    from benchmarks._cli import run_main
 
-        def emit(line):
-            parsed = parse_row(line)
-            if parsed is not None:
-                rows.append(parsed)
-            print(line)
-
-        main(emit=emit)
-        write_doc(json_path, rows)
-    else:
-        main()
+    sys.exit(run_main(main, DESCRIPTION))

@@ -89,30 +89,20 @@ def _row_only_rows(emit) -> None:
     ))
 
 
+DESCRIPTION = (
+    "Fig. 14: dense-grid vs row-table physical storage for the generic "
+    "engine — the crossover the storage-selection cost model navigates"
+)
+
+
 def main(emit=print) -> None:
     _crossover_rows(emit)
     _row_only_rows(emit)
 
 
 if __name__ == "__main__":
-    from benchmarks._json import parse_row, pop_json_arg, write_doc
+    import sys
 
-    try:
-        json_path, _ = pop_json_arg(sys.argv[1:])
-    except ValueError as err:
-        print(err, file=sys.stderr)
-        sys.exit(2)
-    if json_path is not None:
-        rows = []
+    from benchmarks._cli import run_main
 
-        def emit(line):
-            parsed = parse_row(line)
-            if parsed is not None:
-                rows.append(parsed)
-            print(line)
-
-        main(emit=emit)
-        write_doc(json_path, rows)
-        print(f"wrote {len(rows)} rows to {json_path}", file=sys.stderr)
-    else:
-        main()
+    sys.exit(run_main(main, DESCRIPTION))

@@ -42,6 +42,12 @@ def hyracks_like(machines: int, hw=YAHOO_2012) -> float:
     return 0.5 * sched.cost(STAT_BYTES, mesh, hw).seconds
 
 
+DESCRIPTION = (
+    "Fig. 7: BGD scale-up — proportional data+machine growth under the "
+    "cost-optimal Hyracks (C10) and Spark (C30) configurations"
+)
+
+
 def main(emit=print) -> None:
     for scale, machines_c10, machines_c30 in (
         (1, 10, 30), (2, 20, 60), (4, 40, 120), (6, 60, 180),
@@ -62,4 +68,8 @@ def main(emit=print) -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    from benchmarks._cli import run_main
+
+    sys.exit(run_main(main, DESCRIPTION))

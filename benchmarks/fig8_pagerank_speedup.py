@@ -65,6 +65,12 @@ def hadoop_iter(machines: int, hw=YAHOO_2012) -> float:
     return compute + 2 * comm.seconds + hdfs
 
 
+DESCRIPTION = (
+    "Fig. 8: PageRank speed-up — measured Pregel superstep throughput + "
+    "derived cluster iteration time/cost vs machines"
+)
+
+
 def main(emit=print) -> None:
     rate = _measured_edge_rate()
     emit(row("fig8/measured_superstep_this_host",
@@ -79,4 +85,8 @@ def main(emit=print) -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    from benchmarks._cli import run_main
+
+    sys.exit(run_main(main, DESCRIPTION))

@@ -30,6 +30,12 @@ def _prog(N, outdeg):
     )
 
 
+DESCRIPTION = (
+    "Fig. 9: connector alternatives — merging vs hash+sort group-by "
+    "supersteps, with the planner's derived at-scale crossover"
+)
+
+
 def main(emit=print) -> None:
     rng = np.random.default_rng(0)
     for N in (2048, 8192):
@@ -69,4 +75,8 @@ def main(emit=print) -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    from benchmarks._cli import run_main
+
+    sys.exit(run_main(main, DESCRIPTION))

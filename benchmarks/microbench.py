@@ -12,6 +12,12 @@ from repro.kernels.flash_attention.ref import attention_reference
 from repro.models.common import chunked_attention
 
 
+DESCRIPTION = (
+    "Microbenchmarks of the runtime's hot operators (scatter/segment "
+    "combine) on this host"
+)
+
+
 def main(emit=print) -> None:
     rng = np.random.default_rng(0)
 
@@ -58,4 +64,8 @@ def main(emit=print) -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    from benchmarks._cli import run_main
+
+    sys.exit(run_main(main, DESCRIPTION))

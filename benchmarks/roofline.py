@@ -133,6 +133,12 @@ def markdown_table(mesh: str = "single") -> str:
     return "\n".join(lines)
 
 
+DESCRIPTION = (
+    "Roofline readout: aggregate dry-run artifacts into the per-cell "
+    "compute/memory/collective table"
+)
+
+
 def main(emit=print) -> None:
     for mesh in ("single", "multi"):
         cells = load_cells(mesh)
@@ -158,4 +164,8 @@ def main(emit=print) -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    from benchmarks._cli import run_main
+
+    sys.exit(run_main(main, DESCRIPTION))

@@ -11,10 +11,15 @@ real compiled dense and sparse superstep paths.
 ``--json <path>`` additionally writes every emitted row as a
 ``repro-bench-v1`` snapshot (see :mod:`benchmarks._json`) — the format the
 CI ``bench-trend`` job diffs against the committed ``BENCH_baseline.json``.
+
+``--help`` lists every benchmark module with its one-line DESCRIPTION (the
+same line each module's own ``--help`` leads with), so the whole suite is
+self-documenting from here.
 """
 
 from __future__ import annotations
 
+import argparse
 import contextlib
 import io
 import sys
@@ -32,6 +37,7 @@ def _modules(smoke: bool):
         fig12_fault_tolerance,
         fig13_frontend,
         fig14_storage,
+        fig15_serving,
         table1_pagerank_scaleup,
         roofline,
         microbench,
@@ -40,28 +46,49 @@ def _modules(smoke: bool):
     if smoke:
         return (fig10_semi_naive, fig11_generic_engine,
                 fig12_fault_tolerance, fig13_frontend, fig14_storage,
-                fig9_connector_plans, roofline)
+                fig15_serving, fig9_connector_plans, roofline)
     return (fig6_bgd_speedup, fig7_bgd_scaleup, fig8_pagerank_speedup,
             table1_pagerank_scaleup, fig9_connector_plans,
             fig10_semi_naive, fig11_generic_engine, fig12_fault_tolerance,
-            fig13_frontend, fig14_storage, microbench, roofline)
+            fig13_frontend, fig14_storage, fig15_serving, microbench,
+            roofline)
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    lines = []
+    for mod in _modules(smoke=False):
+        name = mod.__name__.rsplit(".", 1)[-1]
+        desc = getattr(mod, "DESCRIPTION", "").split(" — ")[0] \
+            or mod.__doc__.splitlines()[0]
+        lines.append(f"  {name:<24} {desc}")
+    parser = argparse.ArgumentParser(
+        description="Run the benchmark suite (one module per paper "
+                    "table/figure); prints name,us_per_call,detail CSV.",
+        epilog="modules:\n" + "\n".join(lines)
+        + "\n\nEach module is also runnable standalone "
+          "(python benchmarks/<module>.py --help).",
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    parser.add_argument(
+        "--smoke", action="store_true",
+        help="run the fast CI subset instead of the full suite",
+    )
+    parser.add_argument(
+        "--json", metavar="PATH", default=None,
+        help="also write every row as a repro-bench-v1 snapshot",
+    )
+    return parser
 
 
 def main(argv=None) -> int:
-    from benchmarks._json import parse_lines, pop_json_arg, write_doc
+    from benchmarks._json import parse_lines, write_doc
 
-    args = sys.argv[1:] if argv is None else list(argv)
-    smoke = "--smoke" in args
-    try:
-        json_path, args = pop_json_arg(args)
-    except ValueError as err:
-        print(err, file=sys.stderr)
-        return 2
+    ns = _build_parser().parse_args(argv)
 
     print("name,us_per_call,derived")
     rows = []
     failures = 0
-    for mod in _modules(smoke):
+    for mod in _modules(ns.smoke):
         # Capture each module's CSV lines (echoed through) so --json sees
         # every row regardless of how the module emits them.
         buf = io.StringIO()
@@ -76,9 +103,9 @@ def main(argv=None) -> int:
         if out:
             sys.stdout.write(out)
         rows.extend(parse_lines(out))
-    if json_path is not None:
-        write_doc(json_path, rows)
-        print(f"wrote {len(rows)} rows to {json_path}", file=sys.stderr)
+    if ns.json is not None:
+        write_doc(ns.json, rows)
+        print(f"wrote {len(rows)} rows to {ns.json}", file=sys.stderr)
     return 1 if failures else 0
 
 

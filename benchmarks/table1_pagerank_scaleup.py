@@ -7,6 +7,12 @@ from benchmarks._hw import row
 from benchmarks.fig8_pagerank_speedup import hadoop_iter, hyracks_iter
 
 
+DESCRIPTION = (
+    "Table 1: PageRank scale-up (70/140 GB at C31/C88) — derived from the "
+    "Fig. 8 cost models in the paper's table structure"
+)
+
+
 def main(emit=print) -> None:
     rows = [
         ("Hyracks-C88", 70, hyracks_iter(88)),
@@ -31,4 +37,8 @@ def main(emit=print) -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    from benchmarks._cli import run_main
+
+    sys.exit(run_main(main, DESCRIPTION))

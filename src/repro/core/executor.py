@@ -1194,6 +1194,14 @@ class GenericExecutable:
     row_caps: Dict[str, int] = field(default_factory=dict)
     row_cap: int = 0
     row_edb: Dict[str, Dict[str, Any]] = field(default_factory=dict)
+    # Serving: memoized jitted per-phase steps.  Per-request inputs
+    # (materialized views, parameter grids) are traced *arguments* of the
+    # cached wrappers, so repeat dispatches against this executable — the
+    # plan-cache hit path — reuse one XLA compilation instead of retracing
+    # a fresh closure every run.
+    _step_cache: Dict[Any, Callable] = field(
+        default_factory=dict, repr=False, compare=False
+    )
 
     # -- state plumbing -----------------------------------------------------
 
@@ -1248,12 +1256,13 @@ class GenericExecutable:
 
         return place
 
-    def _ctx(self, state, views, materialized, j, label="") -> _Ctx:
+    def _ctx(self, state, views, materialized, j, label="",
+             relations=None) -> _Ctx:
         return _Ctx(
             program=self.program,
             n=self.domain,
             sigs=self.sigs,
-            relations=self.relations,
+            relations=self.relations if relations is None else relations,
             state=state,
             views=views,
             materialized=materialized,
@@ -1492,11 +1501,13 @@ class GenericExecutable:
 
     # -- per-phase step -----------------------------------------------------
 
-    def _phase_step(self, phase: _Phase, materialized) -> Callable:
+    def _phase_step(self, phase: _Phase, materialized,
+                    relations=None) -> Callable:
         def step(state, j):
             views: Dict[str, Dict[str, Any]] = {}
             acc: Dict[str, list] = {}
-            ctx = self._ctx(state, views, materialized, j)
+            ctx = self._ctx(state, views, materialized, j,
+                            relations=relations)
             for df in phase.body:
                 ctx.label = df.label
                 out = self._materialize(df, _eval(df.op, ctx), ctx)
@@ -1563,14 +1574,15 @@ class GenericExecutable:
         ):
             raise _RowCapacityOverflow()
 
-    def _run_rules_once(self, dataflows, state, materialized, j):
+    def _run_rules_once(self, dataflows, state, materialized, j,
+                        relations=None):
         """Fire a rule group once (init / final-view / post rules), merging
         multi-rule targets, and return {target: entry}."""
 
         acc: Dict[str, list] = {}
         order: List[str] = []
         views: Dict[str, Dict[str, Any]] = {}
-        ctx = self._ctx(state, views, materialized, j)
+        ctx = self._ctx(state, views, materialized, j, relations=relations)
         for df in dataflows:
             ctx.label = df.label
             out = self._materialize(df, _eval(df.op, ctx), ctx)
@@ -1581,6 +1593,259 @@ class GenericExecutable:
             views[df.target] = self._merge(df.target, acc[df.target], ctx)
         self._raise_on_overflow(ctx)
         return {t: views[t] for t in order}
+
+    # -- parameterized query bindings (online serving) ----------------------
+
+    def _param_grids(self, params) -> Dict[str, Dict[str, Any]]:
+        """Validate a per-query parameter binding ``{name: Relation}`` and
+        lower it to raw grid leaves (the traced arguments of the memoized
+        step wrappers).  Fail closed: a parameter may only rebind a dense
+        EDB relation of the compiled program, on the same signature."""
+
+        grids: Dict[str, Dict[str, Any]] = {}
+        for name, rel in (params or {}).items():
+            base = self.relations.get(name)
+            if base is None:
+                raise ExecutorError(
+                    f"parameter {name!r} is not an EDB relation of the "
+                    "compiled program"
+                )
+            if (isinstance(base, RowRelation) or isinstance(rel, RowRelation)
+                    or name in self.row_edb or self._is_row(name)):
+                raise ExecutorError(
+                    f"parameter {name!r} is row-table-stored; parameterized "
+                    "bindings need dense-grid storage (fail closed)"
+                )
+            if rel.n != self.domain:
+                raise ExecutorError(
+                    f"parameter {name!r}: domain {rel.n} != compiled "
+                    f"domain {self.domain}"
+                )
+            if (tuple(rel.key_positions) != tuple(base.key_positions)
+                    or set(rel.values) != set(base.values)):
+                raise ExecutorError(
+                    f"parameter {name!r} does not match the compiled "
+                    "relation signature (key/value positions differ)"
+                )
+            grids[name] = {
+                "present": jnp.asarray(rel.present),
+                "values": {p: jnp.asarray(g) for p, g in rel.values.items()},
+            }
+        return grids
+
+    def _bind_params(self, grids) -> Optional[Dict[str, Relation]]:
+        """An EDB view with the parameter grids swapped in (shared graph
+        relations stay the device-resident compile-time grids)."""
+
+        if not grids:
+            return None
+        rels = dict(self.relations)
+        for name, entry in grids.items():
+            base = self.relations[name]
+            rels[name] = Relation(
+                n=self.domain,
+                key_positions=base.key_positions,
+                present=entry["present"],
+                values=dict(entry["values"]),
+            )
+        return rels
+
+    def _jitted_step(self, phase: _Phase, batched: bool = False) -> Callable:
+        """The memoized jitted step of one fixpoint phase, as
+        ``step(state, materialized, param_grids, j)``.  Everything that
+        changes between requests is an argument; loop-invariant EDB grids
+        stay closure constants (cached device-resident).  ``batched=True``
+        vmaps the step over a leading query axis of (state, materialized,
+        params) with ``j`` broadcast — one fixpoint serving k queries."""
+
+        key = ("batched" if batched else "seq", phase.index)
+        fn = self._step_cache.get(key)
+        if fn is None:
+            def step_one(state, materialized, params, j, _phase=phase):
+                rels = self._bind_params(params)
+                return self._phase_step(
+                    _phase, materialized, relations=rels
+                )(state, j)
+
+            fn = jax.jit(
+                jax.vmap(step_one, in_axes=(0, 0, 0, None))
+                if batched else step_one
+            )
+            self._step_cache[key] = fn
+        return fn
+
+    def _batched_fn(self, kind: str, phase: Optional[_Phase] = None):
+        """Memoized jitted+vmapped non-step stages of a batched run —
+        prelude, per-phase init, per-phase finals — so plan-cache-hit
+        dispatches pay none of the eager-vmap interpretation cost
+        ``run_batched`` would otherwise spend outside the fixpoint loop."""
+
+        key = (kind, None if phase is None else phase.index)
+        fn = self._step_cache.get(key)
+        if fn is not None:
+            return fn
+
+        if kind == "prelude":
+            def one(params):
+                rels = self._bind_params(params)
+                state = {
+                    pred: self._empty_entry(pred)
+                    for ph in self.phases for pred in ph.carried
+                }
+                mat: Dict[str, Dict[str, Any]] = {}
+                mat.update(self._run_rules_once(
+                    self.prelude, state, mat, jnp.int32(0), relations=rels
+                ))
+                return state, mat
+
+            fn = jax.jit(jax.vmap(one))
+        elif kind == "init":
+            def one(state, mat, params, _phase=phase):
+                rels = self._bind_params(params)
+                inits = self._run_rules_once(
+                    _phase.init, state, mat, jnp.int32(0), relations=rels
+                )
+                out = dict(state)
+                for pred in _phase.carried:
+                    entry = inits.get(pred)
+                    if entry is not None:
+                        out[pred] = self._init_entry(entry)
+                return out
+
+            fn = jax.jit(jax.vmap(one))
+        elif kind == "finals":
+            def one(state, mat, params, j, _phase=phase):
+                rels = self._bind_params(params)
+                m = dict(mat)
+                m.update(self._run_rules_once(
+                    tuple(df for df in _phase.body if not df.next_state)
+                    + _phase.finals,
+                    state, m, j, relations=rels,
+                ))
+                m.update(self._run_rules_once(
+                    _phase.post, state, m, j, relations=rels
+                ))
+                return m
+
+            fn = jax.jit(jax.vmap(one, in_axes=(0, 0, 0, None)))
+        elif kind == "conv":
+            conv_one = self._phase_converged(phase)
+
+            def one(prev, new, _c=conv_one):
+                return jnp.all(jax.vmap(_c)(prev, new))
+
+            fn = jax.jit(one)
+        else:
+            raise ExecutorError(f"unknown batched stage {kind!r}")
+        self._step_cache[key] = fn
+        return fn
+
+    def run_batched(
+        self,
+        param_sets,
+        max_iters: int,
+        on_device: bool = False,
+    ) -> List[FixpointResult]:
+        """Run k parameterized queries through ONE shared fixpoint.
+
+        ``param_sets`` is a sequence of per-query bindings
+        ``{name: Relation}`` (every set must bind the same parameter
+        relations).  The per-phase step is vmapped over a leading query
+        axis; a phase iterates until *every* query's no-new-facts test
+        holds (extra iterations are no-ops for already-converged queries —
+        a converged state is a fixed point of the step).  Answers are
+        bit-comparable to k sequential ``run(..., params=...)`` calls.
+
+        Fail closed: batching needs all-dense storage (row-table slabs
+        carry host-checked overflow flags that cannot cross a vmap
+        boundary) — admission policies route such plans to sequential
+        dispatch (see ``repro.core.planner.serving_admission``).
+        """
+
+        if not param_sets:
+            raise ExecutorError("run_batched needs at least one param set")
+        if self._any_row or self.row_edb:
+            raise ExecutorError(
+                "query batching needs all-dense storage: row-table slabs "
+                "carry capacity-overflow flags the vmapped fixpoint cannot "
+                "check host-side (fail closed; dispatch sequentially)"
+            )
+        grids = [self._param_grids(ps) for ps in param_sets]
+        names = set(grids[0])
+        if any(set(g) != names for g in grids[1:]):
+            raise ExecutorError(
+                "every batched param set must bind the same relations"
+            )
+        if not names:
+            raise ExecutorError(
+                "run_batched needs parameterized bindings (identical "
+                "queries batch trivially — dispatch one run instead)"
+            )
+        k = len(grids)
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *grids
+        )
+
+        t0 = time.perf_counter()
+        state_b, mat_b = self._batched_fn("prelude")(stacked)
+
+        total = 0
+        phase_iters: List[int] = []
+        all_conv = True
+        for phase in self.phases:
+            state_b = self._batched_fn("init", phase)(
+                state_b, mat_b, stacked
+            )
+            bstep = self._jitted_step(phase, batched=True)
+            bconv = self._batched_fn("conv", phase)
+
+            if on_device:
+                res = device_fixpoint(
+                    lambda s, j, _b=bstep: _b(s, mat_b, stacked, j),
+                    bconv, state_b, max_iters,
+                )
+            else:
+                driver = HostFixpointDriver(
+                    step=lambda s, jj, _b=bstep: _b(
+                        s, mat_b, stacked, jnp.int32(jj)
+                    ),
+                    converged=bconv,
+                    config=DriverConfig(max_iters=max_iters),
+                )
+                res = driver.run(state_b)
+            state_b = res.state
+            total += res.iterations
+            phase_iters.append(res.iterations)
+            all_conv = all_conv and res.converged
+
+            mat_b = self._batched_fn("finals", phase)(
+                state_b, mat_b, stacked, jnp.int32(res.iterations)
+            )
+
+        seconds = time.perf_counter() - t0
+        entries = list(mat_b.items()) + [
+            (p, state_b[p]) for ph in self.phases for p in ph.carried
+        ]
+        results: List[FixpointResult] = []
+        for q in range(k):
+            out: Dict[str, Any] = {}
+            for pred, entry in entries:
+                keys, _ = self.sigs[pred]
+                out[pred] = Relation(
+                    n=self.domain,
+                    key_positions=keys,
+                    present=entry["present"][q],
+                    values={p: v[q] for p, v in entry["values"].items()},
+                )
+            results.append(FixpointResult(
+                state=out,
+                iterations=total,
+                converged=all_conv,
+                seconds=seconds,
+                phase_iterations=tuple(phase_iters),
+                remesh_events=self.remesh_events,
+            ))
+        return results
 
     def phase_step_fn(self) -> Tuple[Callable, Dict[str, Dict[str, Any]]]:
         """Benchmark hook: the jitted per-iteration step of the FIRST
@@ -1703,6 +1968,7 @@ class GenericExecutable:
         max_iters: int,
         on_device: bool = False,
         *,
+        params: Optional[Mapping[str, Relation]] = None,
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: int = 0,
         resume: bool = False,
@@ -1712,6 +1978,11 @@ class GenericExecutable:
     ) -> FixpointResult:
         """Run every fixpoint phase in sequence to the no-new-facts
         fixpoint (``max_iters`` bounds each phase).
+
+        ``params`` rebinds dense EDB relations for THIS run only (online
+        serving: per-query seed/source/target bindings).  The swapped
+        grids ride the memoized jitted steps as traced arguments, so a
+        cached plan dispatches new parameter values without recompiling.
 
         Fault tolerance (host driver only): ``checkpoint_dir`` plugs a
         :class:`~repro.checkpoint.CheckpointStore` into the driver's
@@ -1736,17 +2007,18 @@ class GenericExecutable:
 
         try:
             return self._run_phases(
-                max_iters, on_device,
+                max_iters, on_device, params=params,
                 checkpoint_dir=checkpoint_dir,
                 checkpoint_every=checkpoint_every, resume=resume,
                 injector=injector, max_restarts=max_restarts,
                 keep_checkpoints=keep_checkpoints,
             )
         except _RowCapacityOverflow:
-            return self._dense_fallback_run(max_iters, on_device)
+            return self._dense_fallback_run(max_iters, on_device, params)
 
     def _dense_fallback_run(
-        self, max_iters: int, on_device: bool
+        self, max_iters: int, on_device: bool,
+        params: Optional[Mapping[str, Relation]] = None,
     ) -> FixpointResult:
         for name, rel in self.relations.items():
             if isinstance(rel, RowRelation):
@@ -1764,7 +2036,7 @@ class GenericExecutable:
             semi_naive=self.semi_naive, domain=self.domain,
             storage="dense-grid", **kwargs,
         )
-        res = dense.run(max_iters, on_device)
+        res = dense.run(max_iters, on_device, params=params)
         return replace(res, storage_fallback=True)
 
     def _run_phases(
@@ -1772,6 +2044,7 @@ class GenericExecutable:
         max_iters: int,
         on_device: bool = False,
         *,
+        params: Optional[Mapping[str, Relation]] = None,
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: int = 0,
         resume: bool = False,
@@ -1779,6 +2052,8 @@ class GenericExecutable:
         max_restarts: int = 3,
         keep_checkpoints: int = 3,
     ) -> FixpointResult:
+        param_grids = self._param_grids(params)
+        prels = self._bind_params(param_grids)
         if (checkpoint_dir or injector) and on_device:
             raise ExecutorError(
                 "fault tolerance (checkpoint_dir/injector) needs the host "
@@ -1804,7 +2079,7 @@ class GenericExecutable:
                 )
         materialized: Dict[str, Dict[str, Any]] = {}
         for out, entry in self._run_rules_once(
-            self.prelude, state, materialized, jnp.int32(0)
+            self.prelude, state, materialized, jnp.int32(0), relations=prels
         ).items():
             materialized[out] = entry
 
@@ -1843,7 +2118,8 @@ class GenericExecutable:
             resumed = restored_from_disk and k == start_phase
             if not resumed:
                 inits = self._run_rules_once(
-                    phase.init, state, materialized, jnp.int32(0)
+                    phase.init, state, materialized, jnp.int32(0),
+                    relations=prels,
                 )
                 for pred in phase.carried:
                     entry = inits.get(pred)
@@ -1852,12 +2128,12 @@ class GenericExecutable:
                     state[pred] = jax.tree_util.tree_map(
                         place, self._init_entry(entry)
                     )
-            step = self._phase_step(phase, materialized)
+            step = self._phase_step(phase, materialized, relations=prels)
             conv = self._phase_converged(phase)
             if on_device:
                 res = device_fixpoint(step, conv, state, max_iters)
             else:
-                jitted = jax.jit(step)
+                jitted_req = self._jitted_step(phase)
                 save_hook = restore_hook = None
                 if store is not None:
                     base = total  # global step counter offset for this phase
@@ -1889,7 +2165,9 @@ class GenericExecutable:
                     if not resumed:
                         save_hook(state, 0)
                 driver = HostFixpointDriver(
-                    step=lambda s, jj: jitted(s, jnp.int32(jj)),
+                    step=lambda s, jj: jitted_req(
+                        s, materialized, param_grids, jnp.int32(jj)
+                    ),
                     converged=conv,
                     config=DriverConfig(
                         max_iters=max_iters,
@@ -1933,11 +2211,12 @@ class GenericExecutable:
             finals = self._run_rules_once(
                 tuple(df for df in phase.body if not df.next_state)
                 + phase.finals,
-                state, materialized, jnp.int32(it),
+                state, materialized, jnp.int32(it), relations=prels,
             )
             materialized.update(finals)
             posts = self._run_rules_once(
-                phase.post, state, materialized, jnp.int32(it)
+                phase.post, state, materialized, jnp.int32(it),
+                relations=prels,
             )
             materialized.update(posts)
         if store is not None:

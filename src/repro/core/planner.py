@@ -59,6 +59,8 @@ __all__ = [
     "plan_pregel",
     "plan_program",
     "pregel_superstep_costs",
+    "ServingDecision",
+    "serving_admission",
     "enumerate_reduce_schedules",
 ]
 
@@ -859,4 +861,102 @@ def plan_pregel(
         sparse_cap_floor=cap_floor,
         notes=tuple(notes),
         est_superstep_seconds=est,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serving admission: batch-vs-sequential for parameterized query fixpoints
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ServingDecision:
+    """The planner's batch-vs-sequential call for one serving request.
+
+    ``serving_admission`` costs a k-query batch with the same roofline
+    vocabulary as :func:`pregel_superstep_costs`: a vmapped fixpoint runs
+    every query's iteration back-to-back on device state k times as large,
+    so the batched estimate scales the per-iteration cost by ``batch`` but
+    pays the host dispatch overhead (driver loop, convergence readback,
+    result unpacking) once instead of ``batch`` times.  Sequential wins
+    only when the batch is degenerate (k == 1), the program is ineligible
+    (row-table storage, structured monoids that reject vmap), or the
+    stacked state would blow the HBM budget.
+    """
+
+    batch: int
+    batched: bool
+    est_batched_seconds: float
+    est_sequential_seconds: float
+    reason: str
+
+    def note(self) -> str:
+        """The ``serving(...)`` plan note recorded on serve results."""
+
+        mode = "batched" if self.batched else "sequential"
+        return (
+            f"serving(batch={self.batch}: {mode}, "
+            f"est {self.est_batched_seconds * 1e3:.3g}ms vs "
+            f"{self.est_sequential_seconds * 1e3:.3g}ms seq; {self.reason})"
+        )
+
+
+def serving_admission(
+    plan: ProgramPlan,
+    batch: int,
+    state_bytes: int,
+    hw: HardwareSpec = TPU_V5E,
+    *,
+    eligible: bool = True,
+    ineligible_reason: str = "",
+    dispatch_overhead_s: float = 2e-3,
+    expected_iters: int = 16,
+    memory_fraction: float = 0.5,
+) -> ServingDecision:
+    """Decide batched-vmap vs sequential dispatch for ``batch`` queries.
+
+    ``state_bytes`` is the per-query fixpoint state footprint (carried
+    predicate grids); the memory guard refuses to stack a batch whose
+    combined state exceeds ``memory_fraction`` of device HBM, since the
+    vmapped while_loop keeps every query's state live simultaneously.
+    ``dispatch_overhead_s`` is the per-request host-side constant the
+    batch amortizes (jit dispatch, convergence readback, unpacking) and
+    ``expected_iters`` the assumed fixpoint depth — both are knobs, not
+    measurements, and only the *relative* decision consumes them.
+    """
+
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    iter_s = max(plan.est_iteration_seconds, state_bytes / hw.hbm_bw)
+    seq = batch * (dispatch_overhead_s + expected_iters * iter_s)
+    batched = dispatch_overhead_s + expected_iters * batch * iter_s
+    if batch == 1:
+        return ServingDecision(
+            batch=1, batched=False,
+            est_batched_seconds=batched, est_sequential_seconds=seq,
+            reason="single query",
+        )
+    if not eligible:
+        return ServingDecision(
+            batch=batch, batched=False,
+            est_batched_seconds=batched, est_sequential_seconds=seq,
+            reason=ineligible_reason or "program ineligible for vmap",
+        )
+    hbm_budget = memory_fraction * hw.hbm_bytes
+    if batch * state_bytes > hbm_budget:
+        return ServingDecision(
+            batch=batch, batched=False,
+            est_batched_seconds=batched, est_sequential_seconds=seq,
+            reason=(
+                f"memory guard: {batch}x{state_bytes}B state > "
+                f"{memory_fraction:.0%} of {hw.hbm_bytes}B HBM"
+            ),
+        )
+    return ServingDecision(
+        batch=batch, batched=True,
+        est_batched_seconds=batched, est_sequential_seconds=seq,
+        reason=(
+            f"amortizes {batch - 1} dispatches "
+            f"({dispatch_overhead_s * 1e3:.3g}ms each)"
+        ),
     )

@@ -1,0 +1,451 @@
+"""The online serving layer: plan cache, EDB cache, query batching.
+
+Four properties defended:
+
+1. **Plan-cache keying** — hits on identical program text modulo
+   whitespace/comments (``Program.to_text`` canonicalization), misses on a
+   changed monoid, mesh topology, storage/rewrite override, or EDB epoch;
+   LRU eviction order with counted evictions.
+
+2. **Differential conformance** — a batched k-query fixpoint
+   (``run_batched`` / ``FixpointServer.query(force="batched")``) matches k
+   sequential single-query runs to <= 1e-8 on the host driver AND the
+   on-device ``lax.while_loop`` driver, for personalized PageRank and
+   point-to-point reachability.  (The 8-virtual-device mesh half lives in
+   ``tests/spmd_serving_program.py``.)
+
+3. **Fail-closed batching** — row-table storage rejects ``run_batched``
+   (traced overflow flags cannot cross the vmap boundary) and the
+   admission policy routes such programs to sequential dispatch.
+
+4. **Admission policy** — batch-1 and memory-guard requests dispatch
+   sequentially, eligible batches vmap, and every decision lands in the
+   result's ``serving(...)`` note.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.executor import ExecutorError, Relation, compile_program
+from repro.core.planner import serving_admission
+from repro.core.serving import (
+    EDBCache,
+    FixpointServer,
+    PlanCache,
+    POINT_REACHABILITY_TEXT,
+    personalized_pagerank_program,
+    plan_cache_key,
+    point_reachability_program,
+    top_k,
+)
+from repro.launch.query_serve import (
+    QueryRequest,
+    build_query_server,
+    serve_request_loop,
+)
+
+N = 24
+DAMPING = 0.85
+
+
+# ---------------------------------------------------------------------------
+# Shared fixtures
+# ---------------------------------------------------------------------------
+
+
+def _graph(seed=0, m=70):
+    rng = np.random.default_rng(seed)
+    pairs = sorted(set(zip(
+        rng.integers(0, N, m).tolist(), rng.integers(0, N, m).tolist()
+    )))
+    pairs = [(a, b) for a, b in pairs if a != b]
+    src = np.array([p[0] for p in pairs])
+    dst = np.array([p[1] for p in pairs])
+    deg = np.bincount(src, minlength=N).astype(np.float32)
+    return src, dst, deg
+
+
+SRC, DST, DEG = _graph()
+EDGE = Relation.from_columns(N, SRC, DST)
+DEGR = Relation.from_columns(N, np.arange(N), DEG)
+
+
+def _seed_rel(vertices):
+    vs = np.asarray(vertices)
+    return Relation.from_columns(
+        N, vs, np.full(len(vs), 1.0 / len(vs), np.float32)
+    )
+
+
+def _unary(vertices):
+    return Relation.from_columns(N, np.asarray(vertices))
+
+
+def _server(**kwargs):
+    return FixpointServer({"edge": EDGE, "deg": DEGR}, **kwargs)
+
+
+def _rank_vec(answers):
+    rank = answers["rank"]
+    return np.where(
+        np.asarray(rank.present), np.asarray(rank.values[1]), 0.0
+    )
+
+
+def _ppr_oracle(seed_vertices, iters):
+    A = np.zeros((N, N), np.float32)
+    A[SRC, DST] = 1.0
+    s = np.zeros(N, np.float32)
+    s[np.asarray(seed_vertices)] = 1.0 / len(seed_vertices)
+    seedmask = s > 0
+    r, pres = s.copy(), seedmask.copy()
+    for _ in range(iters):
+        contrib = np.where(pres, DAMPING * r / np.maximum(DEG, 1.0), 0.0)
+        r = A.T @ contrib + np.where(pres & seedmask, (1 - DAMPING) * s, 0.0)
+        pres = ((A.T @ pres.astype(np.float32)) > 0) | (pres & seedmask)
+    return np.where(pres, r, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Plan-cache keying
+# ---------------------------------------------------------------------------
+
+
+class TestPlanCacheKey:
+    def test_hit_modulo_whitespace_and_comments(self):
+        server = _server()
+        reformatted = (
+            "% a completely different comment\n\n"
+            + POINT_REACHABILITY_TEXT.replace(
+                "Q2: reach(J+1, Y) :- reach(J, X), edge(X, Y).",
+                "Q2:   reach(J+1,   Y)   :-   reach(J, X),  edge(X, Y)."
+            )
+        )
+        k1 = server.plan_key(POINT_REACHABILITY_TEXT, ("src", "dst"))
+        k2 = server.plan_key(reformatted, ("src", "dst"))
+        assert k1 == k2
+
+    def test_miss_on_changed_rule(self):
+        server = _server()
+        changed = POINT_REACHABILITY_TEXT.replace(
+            "Q2: reach(J+1, Y) :- reach(J, X), edge(X, Y).",
+            "Q2: reach(J+1, Y) :- reach(J, X), edge(Y, X)."
+        )
+        assert server.plan_key(POINT_REACHABILITY_TEXT) \
+            != server.plan_key(changed)
+
+    def test_miss_on_changed_monoid(self):
+        from repro.core.monoid import get_monoid
+        from repro.core.parser import parse
+
+        cc_min = """\
+C1: cc(0, X, L)        :- node(X, L).
+C2: cc(J+1, X, min<L>) :- cc(J, Y, L), edge(Y, X).
+C3: cc(J+1, X, L)      :- cc(J, X, L).
+"""
+        rels = {"edge": EDGE, "node": DEGR}
+        key = {}
+        for agg in ("min", "max"):
+            prog = parse(
+                cc_min.replace("min<L>", f"{agg}<L>"),
+                aggregates={agg: get_monoid(agg).as_aggregate()},
+            )
+            key[agg] = plan_cache_key(prog, rels)
+        assert key["min"] != key["max"]
+
+    def test_miss_on_mesh_storage_rewrite_and_epoch(self):
+        prog = point_reachability_program()
+        rels = {"edge": EDGE}
+        base = plan_cache_key(prog, rels)
+
+        class FakeMesh:
+            axis_names = ("data",)
+
+            class devices:
+                shape = (8,)
+
+        assert plan_cache_key(prog, rels, mesh=FakeMesh()) != base
+        assert plan_cache_key(prog, rels, storage="row-table") != base
+        assert plan_cache_key(prog, rels, rewrite=True) != base
+        assert plan_cache_key(prog, rels, epoch=1) != base
+        # None-valued overrides are "not set" — same artifact, same key.
+        assert plan_cache_key(prog, rels, storage=None) == base
+
+    def test_lru_eviction_order_and_counters(self):
+        cache = PlanCache(capacity=2)
+        cache.put("a", "exe_a")
+        cache.put("b", "exe_b")
+        assert cache.get("a") == "exe_a"      # refreshes a over b
+        cache.put("c", "exe_c")               # evicts b (LRU)
+        assert cache.keys() == ("a", "c")
+        assert "b" not in cache
+        assert cache.get("b") is None
+        assert cache.counters() == {
+            "hits": 1, "misses": 1, "evictions": 1, "size": 2,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Differential conformance: batched == sequential
+# ---------------------------------------------------------------------------
+
+
+SEED_SETS = ([0], [3, 5], [7], [1, 9])
+
+
+class TestBatchedDifferential:
+    @pytest.mark.parametrize("on_device", [False, True])
+    def test_ppr_batched_matches_sequential(self, on_device):
+        server = _server()
+        ppr = personalized_pagerank_program(DAMPING)
+        batch = [{"seed": _seed_rel(vs)} for vs in SEED_SETS]
+        batched = server.query(
+            ppr, batch, max_iters=6, on_device=on_device, force="batched"
+        )
+        seq = server.query(
+            ppr, batch, max_iters=6, on_device=on_device,
+            force="sequential",
+        )
+        assert batched.batched and not seq.batched
+        for vs, b, s in zip(SEED_SETS, batched.answers, seq.answers):
+            got_b, got_s = _rank_vec(b), _rank_vec(s)
+            assert np.abs(got_b - got_s).max() <= 1e-8
+            assert np.abs(
+                got_b - _ppr_oracle(vs, batched.iterations)
+            ).max() <= 1e-6
+
+    @pytest.mark.parametrize("on_device", [False, True])
+    def test_reachability_batched_matches_sequential(self, on_device):
+        server = _server()
+        reach = point_reachability_program()
+        probes = [
+            {"src": _unary([a]), "dst": _unary([b])}
+            for a, b in ((0, 9), (3, 3), (11, 2), (5, 20))
+        ]
+        batched = server.query(
+            reach, probes, max_iters=N, on_device=on_device,
+            force="batched",
+        )
+        seq = server.query(
+            reach, probes, max_iters=N, on_device=on_device,
+            force="sequential",
+        )
+        for b, s in zip(batched.answers, seq.answers):
+            for pred in ("reach", "hit"):
+                assert np.array_equal(
+                    np.asarray(b[pred].present), np.asarray(s[pred].present)
+                )
+
+    def test_run_params_matches_fresh_compile(self):
+        reach = point_reachability_program()
+        ex = compile_program(
+            reach, {"edge": EDGE, "src": _unary([0]), "dst": _unary([1])}
+        )
+        got = ex.run(
+            max_iters=N,
+            params={"src": _unary([3]), "dst": _unary([9])},
+        ).state
+        fresh = compile_program(
+            reach, {"edge": EDGE, "src": _unary([3]), "dst": _unary([9])}
+        ).run(max_iters=N).state
+        for pred in ("reach", "hit"):
+            assert np.array_equal(
+                np.asarray(got[pred].present),
+                np.asarray(fresh[pred].present),
+            )
+
+
+# ---------------------------------------------------------------------------
+# Fail-closed batching + parameter validation
+# ---------------------------------------------------------------------------
+
+
+class TestFailClosed:
+    def test_row_storage_rejects_run_batched(self):
+        reach = point_reachability_program()
+        ex = compile_program(
+            reach,
+            {"edge": EDGE, "src": _unary([0]), "dst": _unary([1])},
+            storage="row-table",
+        )
+        with pytest.raises(ExecutorError, match="row-table"):
+            ex.run_batched(
+                [{"src": _unary([0]), "dst": _unary([1])}], max_iters=4
+            )
+
+    def test_row_storage_server_dispatches_sequentially(self):
+        server = _server(storage="row-table")
+        reach = point_reachability_program()
+        res = server.query(
+            reach,
+            [{"src": _unary([0]), "dst": _unary([9])},
+             {"src": _unary([3]), "dst": _unary([2])}],
+            max_iters=8,
+        )
+        assert not res.batched
+        assert "sequential" in res.notes[-1]
+        with pytest.raises(ExecutorError, match="cannot force batched"):
+            server.query(
+                reach,
+                [{"src": _unary([0]), "dst": _unary([9])},
+                 {"src": _unary([3]), "dst": _unary([2])}],
+                max_iters=8, force="batched",
+            )
+
+    def test_unknown_and_mismatched_params_rejected(self):
+        reach = point_reachability_program()
+        ex = compile_program(
+            reach, {"edge": EDGE, "src": _unary([0]), "dst": _unary([1])}
+        )
+        with pytest.raises(ExecutorError, match="not an EDB relation"):
+            ex.run(max_iters=4, params={"nope": _unary([0])})
+        with pytest.raises(ExecutorError, match="domain"):
+            ex.run(max_iters=4, params={
+                "src": Relation.from_columns(N * 2, np.array([0]))
+            })
+        with pytest.raises(ExecutorError, match="same relations"):
+            ex.run_batched(
+                [{"src": _unary([0])}, {"dst": _unary([1])}], max_iters=4
+            )
+
+
+# ---------------------------------------------------------------------------
+# Admission policy
+# ---------------------------------------------------------------------------
+
+
+class TestAdmission:
+    def test_single_query_dispatches_sequentially(self):
+        server = _server()
+        res = server.query(
+            point_reachability_program(),
+            {"src": _unary([0]), "dst": _unary([9])},
+            max_iters=8,
+        )
+        assert not res.batched
+        assert res.decision.reason == "single query"
+        assert res.notes[-1].startswith("serving(batch=1: sequential")
+
+    def test_batch_vmaps_and_notes_decision(self):
+        server = _server()
+        res = server.query(
+            point_reachability_program(),
+            [{"src": _unary([v]), "dst": _unary([9])} for v in (0, 1, 2)],
+            max_iters=8,
+        )
+        assert res.batched
+        assert res.notes[-1].startswith("serving(batch=3: batched")
+        # The compiled plan itself stays pristine (shared across requests).
+        exe = server.plan_cache.get(res.plan_key)
+        assert not any(n.startswith("serving(") for n in exe.plan.notes)
+
+    def test_memory_guard_routes_to_sequential(self):
+        exe = compile_program(
+            point_reachability_program(),
+            {"edge": EDGE, "src": _unary([0]), "dst": _unary([1])},
+        )
+        decision = serving_admission(
+            exe.plan, batch=1024, state_bytes=1 << 24
+        )
+        assert not decision.batched
+        assert "memory guard" in decision.reason
+        ok = serving_admission(exe.plan, batch=8, state_bytes=1 << 24)
+        assert ok.batched
+
+    def test_batch_below_one_rejected(self):
+        exe = compile_program(
+            point_reachability_program(),
+            {"edge": EDGE, "src": _unary([0]), "dst": _unary([1])},
+        )
+        with pytest.raises(ValueError, match="batch"):
+            serving_admission(exe.plan, batch=0, state_bytes=1024)
+
+
+# ---------------------------------------------------------------------------
+# Caches across requests + invalidation
+# ---------------------------------------------------------------------------
+
+
+class TestServerCaches:
+    def test_warm_request_skips_compile(self):
+        server = _server()
+        ppr = personalized_pagerank_program()
+        cold = server.query(ppr, {"seed": _seed_rel([0])}, max_iters=4)
+        warm = server.query(ppr, {"seed": _seed_rel([5])}, max_iters=4)
+        assert not cold.cache_hit and cold.compile_seconds > 0
+        assert warm.cache_hit and warm.compile_seconds == 0.0
+        assert warm.plan_key == cold.plan_key
+        assert warm.cache["plan_hits"] == 1
+
+    def test_update_relation_bumps_epoch_and_invalidates(self):
+        server = _server()
+        reach = point_reachability_program()
+        params = {"src": _unary([0]), "dst": _unary([9])}
+        first = server.query(reach, params, max_iters=8)
+        hit_before = int(np.asarray(first.answers[0]["hit"].count()))
+        assert hit_before == 1  # 9 reachable from 0 in this graph
+        # Remove every edge: same program shape, different answer.
+        server.update_relation(
+            "edge", Relation.from_columns(N, np.array([], np.int64),
+                                          np.array([], np.int64))
+        )
+        second = server.query(reach, params, max_iters=8)
+        assert not second.cache_hit
+        assert second.plan_key != first.plan_key
+        assert int(np.asarray(second.answers[0]["hit"].count())) == 0
+
+    def test_edb_cache_counts_hits(self):
+        cache = EDBCache()
+        a = cache.place("edge", EDGE)
+        b = cache.place("edge", EDGE)
+        assert a is b
+        assert cache.counters() == {"hits": 1, "misses": 1, "size": 1}
+        cache.invalidate("edge")
+        assert cache.counters()["size"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Answer extraction + request loop
+# ---------------------------------------------------------------------------
+
+
+class TestServingFrontDoor:
+    def test_top_k_matches_argsort(self):
+        server = _server()
+        res = server.query(
+            personalized_pagerank_program(),
+            {"seed": _seed_rel([0, 4])}, max_iters=6,
+        )
+        ids, scores = top_k(res.answers[0]["rank"], 5)
+        ref = _rank_vec(res.answers[0])
+        ref = np.where(np.asarray(res.answers[0]["rank"].present),
+                       ref, -np.inf)
+        np.testing.assert_allclose(
+            scores, np.sort(ref)[::-1][:5], rtol=0, atol=0
+        )
+        assert np.array_equal(ref[ids], scores)
+
+    def test_request_loop_groups_and_preserves_order(self):
+        server = build_query_server({"edge": EDGE, "deg": DEGR})
+        ppr = personalized_pagerank_program()
+        reach = point_reachability_program()
+        requests = (
+            [QueryRequest(ppr, {"seed": _seed_rel([v])}, max_iters=4,
+                          tag=f"ppr{v}") for v in (0, 3, 7)]
+            + [QueryRequest(reach,
+                            {"src": _unary([0]), "dst": _unary([9])},
+                            max_iters=8, tag="probe")]
+            + [QueryRequest(ppr, {"seed": _seed_rel([11])}, max_iters=4,
+                            tag="late")]
+        )
+        responses = serve_request_loop(server, requests, max_batch=16)
+        assert [r.request.tag for r in responses] \
+            == ["ppr0", "ppr3", "ppr7", "probe", "late"]
+        assert responses[0].result.batch == 3 and responses[0].batched
+        assert responses[3].result.batch == 1
+        # Grouped answers match a solo dispatch of the same query.
+        solo = server.query(ppr, {"seed": _seed_rel([3])}, max_iters=4,
+                            force="sequential")
+        assert np.abs(
+            _rank_vec(responses[1].answers) - _rank_vec(solo.answers[0])
+        ).max() <= 1e-8

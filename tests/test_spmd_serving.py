@@ -1,0 +1,42 @@
+"""Sharded serving differential conformance (subprocess: needs 8 fake
+devices while the main pytest process must keep seeing 1 — same contract
+as test_spmd.py).
+
+The subprocess (spmd_serving_program.py) serves personalized-PageRank and
+point-reachability batches on an 8-virtual-device data mesh through
+:class:`repro.core.serving.FixpointServer` and compares batched-vmap,
+sharded-sequential, and single-device answers; these tests assert on its
+JSON report with the 1e-8 acceptance bar, plus the mesh-topology facet of
+the plan-cache key.
+"""
+
+import pytest
+
+from _spmd_subprocess import run_spmd_program
+
+
+@pytest.fixture(scope="module")
+def serving_results():
+    return run_spmd_program("spmd_serving_program.py")
+
+
+def test_runs_on_eight_devices(serving_results):
+    assert serving_results["devices"] == 8
+
+
+def test_sharded_batched_matches_sequential(serving_results):
+    assert serving_results["ppr_batched_dispatch"]
+    assert serving_results["ppr_batched_vs_sequential"] <= 1e-8
+
+
+def test_sharded_matches_single_device(serving_results):
+    assert serving_results["ppr_sharded_vs_single_device"] <= 1e-8
+
+
+def test_reachability_hit_sets_agree(serving_results):
+    assert serving_results["reach_hits_agree"]
+
+
+def test_plan_cache_keys_mesh_topology(serving_results):
+    assert serving_results["meshed_warm_hit"]
+    assert serving_results["mesh_changes_key"]
