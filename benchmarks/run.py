@@ -38,6 +38,7 @@ def _modules(smoke: bool):
         fig13_frontend,
         fig14_storage,
         fig15_serving,
+        fig16_outofcore,
         table1_pagerank_scaleup,
         roofline,
         microbench,
@@ -46,12 +47,13 @@ def _modules(smoke: bool):
     if smoke:
         return (fig10_semi_naive, fig11_generic_engine,
                 fig12_fault_tolerance, fig13_frontend, fig14_storage,
-                fig15_serving, fig9_connector_plans, roofline)
+                fig15_serving, fig16_outofcore, fig9_connector_plans,
+                roofline)
     return (fig6_bgd_speedup, fig7_bgd_scaleup, fig8_pagerank_speedup,
             table1_pagerank_scaleup, fig9_connector_plans,
             fig10_semi_naive, fig11_generic_engine, fig12_fault_tolerance,
-            fig13_frontend, fig14_storage, fig15_serving, microbench,
-            roofline)
+            fig13_frontend, fig14_storage, fig15_serving, fig16_outofcore,
+            microbench, roofline)
 
 
 def _build_parser() -> argparse.ArgumentParser:

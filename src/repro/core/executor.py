@@ -89,6 +89,7 @@ from repro.core.physical import (
     merging_exchange,
     reduce_tree,
     row_codes,
+    row_hash_exchange,
     row_linear_index,
     rows_to_grid,
     segment_combine_sorted,
@@ -406,6 +407,18 @@ class _Ctx:
     row_cap: int = 0
     row_edb: Mapping[str, Dict[str, Any]] = field(default_factory=dict)
     overflow: List[Any] = field(default_factory=list)
+    # Explicit sharded exchanges: the planner's per-predicate connector
+    # selection + receiver caps, the head predicate of the firing rule (the
+    # selection key), and the mesh/data-axes the shard_map lowering targets.
+    exchanges: Mapping[str, str] = field(default_factory=dict)
+    exchange_caps: Mapping[str, int] = field(default_factory=dict)
+    exchange_target: str = ""
+    mesh: Optional[Any] = None
+    batch_axes: Tuple[str, ...] = ()
+    # Out-of-core streaming: EDB predicates whose slabs are host-resident
+    # chunk lists — their scans may only fire under a chunk overlay
+    # (``row_edb`` rebound to one chunk inside the streaming loop).
+    chunked: FrozenSet[str] = frozenset()
 
 
 def _read_pred(ctx: _Ctx, name: str) -> Dict[str, Any]:
@@ -615,10 +628,242 @@ def _residual_valid(l: _Rows, r: _Rows, keys, li, ri, valid):
     return valid
 
 
+# ---------------------------------------------------------------------------
+# Explicit sharded row exchanges (planner-selected connectors)
+# ---------------------------------------------------------------------------
+
+
+def _exchange_site(ctx: _Ctx):
+    """The planner's explicit-exchange selection for the firing rule's head
+    predicate, resolved against the live mesh: ``(mode, axes, n_shards)``,
+    or ``None`` when the site stays on implicit GSPMD partitioning."""
+
+    if ctx.mesh is None or not ctx.batch_axes:
+        return None
+    mode = ctx.exchanges.get(ctx.exchange_target)
+    if mode in (None, "gspmd"):
+        return None
+    n_shards = int(np.prod([ctx.mesh.shape[a] for a in ctx.batch_axes]))
+    if n_shards <= 1:
+        return None
+    return mode, ctx.batch_axes, n_shards
+
+
+def _pad_lead(arr, pad: int):
+    if pad == 0:
+        return arr
+    widths = [(0, pad)] + [(0, 0)] * (arr.ndim - 1)
+    return jnp.pad(arr, widths)
+
+
+def _groupby_rows_exchange(op: algebra.GroupBy, child: _Rows, ctx: _Ctx):
+    """Lower a row-table GroupBy onto the explicit sharded connectors the
+    Listing-1 fast path uses, instead of letting GSPMD partition the slab
+    implicitly (cap-leading slabs replicate under the named-sharding rule,
+    so implicit partitioning leaves every shard reducing the full slab).
+
+    * ``bucket-a2a`` — each shard keeps a ``1/S`` slice of the input rows,
+      hashes group keys to owner shards, ships ``(code, ids, val)`` through
+      the key-hash bucket all-to-all, and the owner runs the pre-clustered
+      segmented combine on its buckets; unique group rows compact into the
+      planner's per-shard receiver cap (overflow-flagged, lossless dense
+      fallback) and an all-gather replicates the result slab.
+    * ``psum-scatter`` — monoid-admitted (``sum`` kernels on grids small
+      enough to materialize): shards scatter-add local partials into a
+      dense group grid and one ``psum`` combines them — no row traffic.
+
+    Returns ``None`` when the site keeps the implicit lowering (the planner
+    chose ``gspmd``, the mesh has no data axes, or the slab is degenerate).
+    """
+
+    site = _exchange_site(ctx)
+    if site is None or not op.keys:
+        return None
+    mode, axes, n_shards = site
+    cap = child.ids.shape[0]
+    if cap < n_shards:
+        return None
+    from jax.experimental.shard_map import shard_map
+
+    n = ctx.n
+    vals = jnp.broadcast_to(_operand_rows(child, op.agg_col, ctx), (cap,))
+    if not jnp.issubdtype(vals.dtype, jnp.floating):
+        vals = vals.astype(jnp.float32)
+    key_ids = jnp.stack(
+        [child.ids[:, child.dims.index(k)] for k in op.keys], axis=-1
+    )
+    valid = child.valid
+    pad = (-cap) % n_shards
+    key_ids = _pad_lead(key_ids, pad)
+    vals = _pad_lead(vals, pad)
+    valid = _pad_lead(valid, pad)
+    segments = n ** len(op.keys)
+    monoid = _monoid_for(op.agg)
+    if mode == "psum-scatter" and (
+        monoid.kernel_op != "sum"
+        or not 0 < segments <= _GROUPBY_GRID_CELLS
+    ):
+        mode = "bucket-a2a"  # forced override outside the mode's envelope
+
+    if mode == "psum-scatter":
+        def psum_fn(ids_l, vals_l, valid_l):
+            lin = row_linear_index(ids_l, valid_l, n)
+            part = jnp.zeros((segments,), jnp.float32).at[lin].add(
+                jnp.where(valid_l, vals_l, 0.0), mode="drop"
+            )
+            cnt = jnp.zeros((segments,), jnp.int32).at[lin].add(
+                valid_l.astype(jnp.int32), mode="drop"
+            )
+            return jax.lax.psum(part, axes), jax.lax.psum(cnt, axes)
+
+        part, cnt = shard_map(
+            psum_fn, mesh=ctx.mesh,
+            in_specs=(P(axes), P(axes), P(axes)),
+            out_specs=(P(), P()), check_rep=False,
+        )(key_ids, vals, valid)
+        shape = (n,) * len(op.keys)
+        inter = _Inter(
+            tuple(op.keys), (cnt > 0).reshape(shape),
+            {op.out_col: part.reshape(shape)},
+        )
+        return _inter_to_rows(inter, ctx)
+
+    ecap = int(ctx.exchange_caps.get(ctx.exchange_target, 0)) or cap
+    codes = _codes_for(
+        _Rows(tuple(op.keys), key_ids, valid, {}), tuple(op.keys), n
+    )
+
+    def bucket_fn(codes_l, ids_l, vals_l, valid_l):
+        owner = (codes_l % jnp.uint32(n_shards)).astype(jnp.int32)
+        shipped, valid_x, of1 = row_hash_exchange(
+            owner, {"codes": codes_l, "ids": ids_l, "vals": vals_l},
+            valid_l, n_shards, ecap, axes,
+        )
+        rcap = shipped["codes"].shape[0]
+        perm, skey, n_valid = sort_row_codes(shipped["codes"], valid_x)
+        is_new, seg = unique_row_runs(skey, n_valid)
+        in_valid = jnp.arange(rcap, dtype=jnp.int32) < n_valid
+        red = segment_combine_sorted(
+            shipped["vals"][perm], seg, rcap, op.agg, edge_active=in_valid
+        )
+        idx, u_valid = compact_active_edges(is_new, ecap)
+        of2 = jnp.sum(is_new.astype(jnp.int32)) > ecap
+        take = jnp.minimum(idx, rcap - 1)
+        out_ids = shipped["ids"][perm][take]
+        out_val = red[seg][take]
+        g_ids = jax.lax.all_gather(out_ids, axes, axis=0, tiled=True)
+        g_valid = jax.lax.all_gather(u_valid, axes, axis=0, tiled=True)
+        g_val = jax.lax.all_gather(out_val, axes, axis=0, tiled=True)
+        of = jax.lax.psum(jnp.logical_or(of1, of2).astype(jnp.int32), axes)
+        return g_ids, g_valid, g_val, of
+
+    g_ids, g_valid, g_val, of = shard_map(
+        bucket_fn, mesh=ctx.mesh,
+        in_specs=(P(axes), P(axes), P(axes), P(axes)),
+        out_specs=(P(), P(), P(), P()), check_rep=False,
+    )(codes, key_ids, vals, valid)
+    ctx.overflow.append(of > 0)
+    return _Rows(tuple(op.keys), g_ids, g_valid, {op.out_col: g_val})
+
+
+def _join_rows_exchange(l: _Rows, r: _Rows, keys, ctx: _Ctx):
+    """Hash-partitioned sort-merge join inside ``shard_map``: both slabs
+    split ``1/S`` per shard, rows ship to ``hash(shared-code) % S`` through
+    the bucket all-to-all, each owner joins exactly its key partition (the
+    partition is disjoint and complete, so the gathered union is the exact
+    join), and pair capacity splits ``S`` ways per shard.  Returns ``None``
+    when the site stays implicit (no shared dims, planner chose ``gspmd``,
+    or psum-scatter — an aggregation-only connector)."""
+
+    site = _exchange_site(ctx)
+    if site is None:
+        return None
+    mode, axes, n_shards = site
+    shared = tuple(d for d in l.dims if d in r.dims)
+    if mode != "bucket-a2a" or not shared:
+        return None
+    lcap, rcap = l.ids.shape[0], r.ids.shape[0]
+    if lcap < n_shards or rcap < n_shards:
+        return None
+    from jax.experimental.shard_map import shard_map
+
+    n = ctx.n
+    out_dims = l.dims + tuple(d for d in r.dims if d not in l.dims)
+    ecap = int(ctx.exchange_caps.get(ctx.exchange_target, 0)) \
+        or max(lcap, rcap)
+    pair_cap = -(-max(ctx.row_cap, 1) // n_shards)
+
+    def pack_side(rows: _Rows, cap: int):
+        pad = (-cap) % n_shards
+        codes = _codes_for(rows, shared, n)
+        return {
+            "codes": _pad_lead(codes, pad),
+            "ids": _pad_lead(rows.ids, pad),
+            "cols": {
+                c: _pad_lead(jnp.broadcast_to(g, (cap,)), pad)
+                for c, g in rows.cols.items()
+            },
+        }, _pad_lead(rows.valid, pad)
+
+    l_in, l_valid = pack_side(l, lcap)
+    r_in, r_valid = pack_side(r, rcap)
+
+    def join_fn(l_t, lv, r_t, rv):
+        lx, lvx, of_l = row_hash_exchange(
+            (l_t["codes"] % jnp.uint32(n_shards)).astype(jnp.int32),
+            l_t, lv, n_shards, ecap, axes,
+        )
+        rx, rvx, of_r = row_hash_exchange(
+            (r_t["codes"] % jnp.uint32(n_shards)).astype(jnp.int32),
+            r_t, rv, n_shards, ecap, axes,
+        )
+        li, ri, valid, of_j = join_row_codes(
+            lx["codes"], lvx, rx["codes"], rvx, pair_cap
+        )
+        l2 = _Rows(l.dims, lx["ids"], lvx, lx["cols"])
+        r2 = _Rows(r.dims, rx["ids"], rvx, rx["cols"])
+        valid = _residual_valid(l2, r2, keys, li, ri, valid)
+        id_cols = []
+        for d in out_dims:
+            if d in l.dims:
+                id_cols.append(l2.ids[:, l.dims.index(d)][li])
+            else:
+                id_cols.append(r2.ids[:, r.dims.index(d)][ri])
+        ids = jnp.stack(id_cols, axis=-1)
+        cols: Dict[str, Any] = {}
+        for c, g in l2.cols.items():
+            if c not in out_dims:
+                cols[c] = g[li]
+        for c, g in r2.cols.items():
+            if c not in cols and c not in out_dims:
+                cols[c] = g[ri]
+        g_ids = jax.lax.all_gather(ids, axes, axis=0, tiled=True)
+        g_valid = jax.lax.all_gather(valid, axes, axis=0, tiled=True)
+        g_cols = {
+            c: jax.lax.all_gather(g, axes, axis=0, tiled=True)
+            for c, g in cols.items()
+        }
+        of = jax.lax.psum(
+            (of_l | of_r | of_j).astype(jnp.int32), axes
+        )
+        return g_ids, g_valid, g_cols, of
+
+    g_ids, g_valid, g_cols, of = shard_map(
+        join_fn, mesh=ctx.mesh,
+        in_specs=(P(axes), P(axes), P(axes), P(axes)),
+        out_specs=(P(), P(), P(), P()), check_rep=False,
+    )(l_in, l_valid, r_in, r_valid)
+    ctx.overflow.append(of > 0)
+    return _Rows(out_dims, g_ids, g_valid, g_cols)
+
+
 def _join_rows(l: _Rows, r: _Rows, keys, ctx: _Ctx) -> _Rows:
     """Sort-merge equi-join on the shared dims' row codes; pairs expand
     into the plan's intermediate capacity (overflow-flagged)."""
 
+    out = _join_rows_exchange(l, r, keys, ctx)
+    if out is not None:
+        return out
     n = ctx.n
     shared = tuple(d for d in l.dims if d in r.dims)
     out_dims = l.dims + tuple(d for d in r.dims if d not in l.dims)
@@ -718,6 +963,9 @@ def _groupby_rows(op: algebra.GroupBy, child: _Rows, ctx: _Ctx) -> _Rows:
             f"monoid {op.agg!r} carries a finalize step; the row-table "
             "backend only supports plain accumulator monoids"
         )
+    out = _groupby_rows_exchange(op, child, ctx)
+    if out is not None:
+        return out
     cells = float(n) ** len(child.dims)
     if 0 < cells <= _GROUPBY_GRID_CELLS:
         # Lower through the dense grid-reduce when the child's grid is
@@ -772,6 +1020,12 @@ def _eval_inner(op: algebra.LogicalOp, ctx: _Ctx):
             dims = tuple(op.columns[p] for p in rel.key_positions)
             cols = {op.columns[int(p)]: g for p, g in tbl["values"].items()}
             return _Rows(dims, tbl["ids"], tbl["valid"], cols)
+        if op.relation in ctx.chunked:
+            raise ExecutorError(
+                f"chunked EDB {op.relation!r} scanned outside a chunk "
+                "overlay — out-of-core slabs stream through the host chunk "
+                "loop only (fail closed)"
+            )
         rel = ctx.relations[op.relation]
         if isinstance(rel, RowRelation):
             raise ExecutorError(
@@ -1163,6 +1417,14 @@ class _ShiftedInjector:
     def maybe_fail(self, j: int) -> None:
         self.inner.maybe_fail(self.base + j)
 
+    def maybe_fail_chunk(self, j: int, chunk: int) -> None:
+        """Chunk-granular crash point of the out-of-core streaming loop
+        (no-op for injectors without a chunk schedule)."""
+
+        hook = getattr(self.inner, "maybe_fail_chunk", None)
+        if hook is not None:
+            hook(self.base + j, chunk)
+
 
 @dataclass
 class GenericExecutable:
@@ -1194,6 +1456,12 @@ class GenericExecutable:
     row_caps: Dict[str, int] = field(default_factory=dict)
     row_cap: int = 0
     row_edb: Dict[str, Dict[str, Any]] = field(default_factory=dict)
+    # Out-of-core streaming: per-predicate HOST-resident chunk lists (numpy
+    # row slabs, all chunks of a predicate identically shaped) for EDB scans
+    # whose working set exceeds the planner's HBM budget.  The fixpoint step
+    # streams them through the device with double-buffered transfers,
+    # accumulating per-chunk partials through the merge-monoid registry.
+    chunked_edb: Dict[str, List[Dict[str, Any]]] = field(default_factory=dict)
     # Serving: memoized jitted per-phase steps.  Per-request inputs
     # (materialized views, parameter grids) are traced *arguments* of the
     # cached wrappers, so repeat dispatches against this executable — the
@@ -1237,12 +1505,17 @@ class GenericExecutable:
             entry["overflow"] = jnp.asarray(False)
         return entry
 
+    def _batch_axes(self) -> Tuple[str, ...]:
+        if self.mesh is None:
+            return ()
+        return tuple(
+            a for a in ("pod", "data") if self.mesh.shape.get(a, 1) > 1
+        )
+
     def _placer(self):
         if self.mesh is None:
             return lambda a: a
-        batch_axes = tuple(
-            a for a in ("pod", "data") if self.mesh.shape.get(a, 1) > 1
-        )
+        batch_axes = self._batch_axes()
         if not batch_axes:
             return lambda a: a
         n_shards = int(np.prod([self.mesh.shape[a] for a in batch_axes]))
@@ -1274,6 +1547,11 @@ class GenericExecutable:
             row_caps=self.row_caps,
             row_cap=self.row_cap,
             row_edb=self.row_edb,
+            exchanges=dict(getattr(self.plan, "exchanges", {}) or {}),
+            exchange_caps=dict(getattr(self.plan, "exchange_caps", {}) or {}),
+            mesh=self.mesh,
+            batch_axes=self._batch_axes(),
+            chunked=frozenset(self.chunked_edb),
         )
 
     def _materialize(self, df, inter, ctx: _Ctx) -> Dict[str, Any]:
@@ -1501,51 +1779,61 @@ class GenericExecutable:
 
     # -- per-phase step -----------------------------------------------------
 
+    def _apply_body(self, phase: _Phase, ctx: _Ctx, state, dataflows, acc,
+                    of_extra):
+        """Fire a phase's body dataflows and seal the carried entries.
+        ``acc`` pre-seeds per-target out lists (the chunked streaming loop
+        passes its accumulated partials) and ``of_extra`` folds overflow
+        flags raised outside this trace (per-chunk firings) into the
+        carried overflow leaves."""
+
+        views = ctx.views
+        for df in dataflows:
+            ctx.label = df.label
+            ctx.exchange_target = df.target
+            out = self._materialize(df, _eval(df.op, ctx), ctx)
+            if df.next_state:
+                acc.setdefault(df.target, []).append(out)
+            else:
+                if df.target in views:
+                    views[df.target] = self._merge(
+                        df.target, [views[df.target], out], ctx
+                    )
+                else:
+                    views[df.target] = out
+        new_state = dict(state)
+        for pred in phase.carried:
+            out = self._merge(pred, acc.get(pred, []), ctx)
+            if self._is_row(pred):
+                delta, _ = self._diff_rows(state[pred], out)
+            else:
+                delta = jnp.logical_and(
+                    out["present"],
+                    self._diff(state[pred], out["present"], out["values"]),
+                )
+            entry = dict(out)
+            entry["delta"] = delta
+            if self._any_row:
+                # Fold every capacity flag this step raised (including
+                # the merges above) into the carried overflow leaf.
+                step_of = functools.reduce(
+                    jnp.logical_or, ctx.overflow, of_extra
+                )
+                entry["overflow"] = jnp.logical_or(
+                    state[pred].get("overflow", False), step_of
+                )
+            new_state[pred] = entry
+        return new_state
+
     def _phase_step(self, phase: _Phase, materialized,
                     relations=None) -> Callable:
         def step(state, j):
             views: Dict[str, Dict[str, Any]] = {}
-            acc: Dict[str, list] = {}
             ctx = self._ctx(state, views, materialized, j,
                             relations=relations)
-            for df in phase.body:
-                ctx.label = df.label
-                out = self._materialize(df, _eval(df.op, ctx), ctx)
-                if df.next_state:
-                    acc.setdefault(df.target, []).append(out)
-                else:
-                    if df.target in views:
-                        views[df.target] = self._merge(
-                            df.target, [views[df.target], out], ctx
-                        )
-                    else:
-                        views[df.target] = out
-            new_state = dict(state)
-            step_of = functools.reduce(
-                jnp.logical_or, ctx.overflow, jnp.asarray(False)
+            return self._apply_body(
+                phase, ctx, state, phase.body, {}, jnp.asarray(False)
             )
-            for pred in phase.carried:
-                out = self._merge(pred, acc.get(pred, []), ctx)
-                if self._is_row(pred):
-                    delta, _ = self._diff_rows(state[pred], out)
-                else:
-                    delta = jnp.logical_and(
-                        out["present"],
-                        self._diff(state[pred], out["present"], out["values"]),
-                    )
-                entry = dict(out)
-                entry["delta"] = delta
-                if self._any_row:
-                    # Fold every capacity flag this step raised (including
-                    # the merges above) into the carried overflow leaf.
-                    step_of = functools.reduce(
-                        jnp.logical_or, ctx.overflow, jnp.asarray(False)
-                    )
-                    entry["overflow"] = jnp.logical_or(
-                        state[pred].get("overflow", False), step_of
-                    )
-                new_state[pred] = entry
-            return new_state
 
         return step
 
@@ -1583,9 +1871,28 @@ class GenericExecutable:
         order: List[str] = []
         views: Dict[str, Dict[str, Any]] = {}
         ctx = self._ctx(state, views, materialized, j, relations=relations)
+        base_edb = ctx.row_edb
         for df in dataflows:
             ctx.label = df.label
-            out = self._materialize(df, _eval(df.op, ctx), ctx)
+            ctx.exchange_target = df.target
+            refs = self._chunk_refs(df)
+            if refs:
+                # Out-of-core scan in a once-fired rule group: stream the
+                # chunks eagerly and fold the partials through the merge
+                # monoid (chunk-count-invariant by monoid associativity).
+                pred = refs[0]
+                outs = []
+                for chunk in self.chunked_edb[pred]:
+                    ctx.row_edb = dict(base_edb)
+                    ctx.row_edb[pred] = self._put_chunk(chunk)
+                    outs.append(
+                        self._materialize(df, _eval(df.op, ctx), ctx)
+                    )
+                ctx.row_edb = base_edb
+                out = self._merge(df.target, outs, ctx) \
+                    if len(outs) > 1 else outs[0]
+            else:
+                out = self._materialize(df, _eval(df.op, ctx), ctx)
             if df.target not in acc:
                 order.append(df.target)
             acc.setdefault(df.target, []).append(out)
@@ -1593,6 +1900,155 @@ class GenericExecutable:
             views[df.target] = self._merge(df.target, acc[df.target], ctx)
         self._raise_on_overflow(ctx)
         return {t: views[t] for t in order}
+
+    # -- out-of-core chunked streaming (host-resident EDB slabs) ------------
+
+    def _chunk_refs(self, df) -> Tuple[str, ...]:
+        """The chunked EDB predicates a dataflow's body scans (compile-time
+        validation guarantees at most one)."""
+
+        if not self.chunked_edb:
+            return ()
+        return tuple(sorted(
+            _referenced_preds(df.op) & set(self.chunked_edb)
+        ))
+
+    def _put_chunk(self, chunk) -> Dict[str, Any]:
+        """Device-place one host chunk as a row-EDB overlay table."""
+
+        place = self._placer()
+        return {
+            "ids": place(jnp.asarray(chunk["ids"])),
+            "valid": place(jnp.asarray(chunk["valid"])),
+            "values": {
+                p: place(jnp.asarray(v))
+                for p, v in chunk["values"].items()
+            },
+        }
+
+    def _chunk_fire_fn(self, phase: _Phase, pred: str, dfs) -> Callable:
+        """Memoized jitted firing of the body rules scanning one chunked
+        predicate: evaluates them against a chunk overlay and folds the
+        outs into the running per-target accumulators through the merge
+        monoids — ``fire(state, acc, materialized, params, overlay, j)``."""
+
+        key = ("chunk-fire", phase.index, pred)
+        fn = self._step_cache.get(key)
+        if fn is None:
+            def fire(state, acc, materialized, params, overlay, j,
+                     _dfs=dfs, _pred=pred):
+                rels = self._bind_params(params)
+                ctx = self._ctx(state, {}, materialized, j, relations=rels)
+                ctx.row_edb = dict(self.row_edb)
+                ctx.row_edb[_pred] = overlay
+                # Chunk-proportional intermediates: the planner's join /
+                # convert cap carries 4x headroom over the largest slab,
+                # and a firing that scans 1/m of the chunked slab expects
+                # ~1/m of the join pairs — so the per-chunk intermediate
+                # keeps the same headroom at 1/m the sort/gather cost.
+                # Skew beyond it trips the usual lossless overflow path.
+                m = len(self.chunked_edb[_pred])
+                if ctx.row_cap and m > 1:
+                    per = -(-ctx.row_cap // m)
+                    ctx.row_cap = max(
+                        256, 1 << max(per - 1, 0).bit_length()
+                    )
+                out_acc = dict(acc)
+                for df in _dfs:
+                    ctx.label = df.label
+                    ctx.exchange_target = df.target
+                    out = self._materialize(df, _eval(df.op, ctx), ctx)
+                    out_acc[df.target] = self._merge(
+                        df.target, [out_acc[df.target], out], ctx
+                    )
+                of = functools.reduce(
+                    jnp.logical_or, ctx.overflow, jnp.asarray(False)
+                )
+                return out_acc, of
+
+            fn = jax.jit(fire)
+            self._step_cache[key] = fn
+        return fn
+
+    def _chunk_finish_fn(self, phase: _Phase, plain_dfs,
+                         chunk_targets) -> Callable:
+        """Memoized jitted tail of a chunked phase step: fires the
+        non-chunked body rules and seals the carried entries, seeding the
+        per-target accumulators with the streamed partials (and folding the
+        chunk loop's overflow flags into the carried leaves)."""
+
+        key = ("chunk-finish", phase.index)
+        fn = self._step_cache.get(key)
+        if fn is None:
+            def finish(state, acc, of_chunks, materialized, params, j,
+                       _dfs=plain_dfs, _targets=chunk_targets):
+                rels = self._bind_params(params)
+                views: Dict[str, Dict[str, Any]] = {}
+                ctx = self._ctx(state, views, materialized, j,
+                                relations=rels)
+                accs = {t: [acc[t]] for t in _targets}
+                return self._apply_body(
+                    phase, ctx, state, _dfs, accs, of_chunks
+                )
+
+            fn = jax.jit(finish)
+            self._step_cache[key] = fn
+        return fn
+
+    def _chunked_phase_step(self, phase: _Phase, materialized, param_grids,
+                            injector=None) -> Callable:
+        """The host-driven per-iteration step of a phase whose body scans
+        chunked (out-of-core) EDB predicates: for each such predicate the
+        host streams its chunk list through the jitted ``fire`` stage with
+        double-buffered async host-to-device transfers (the next chunk's
+        ``device_put`` is issued before the current one is consumed), then
+        the jitted ``finish`` stage fires the remaining rules and seals the
+        carried state.  Partial accumulators live only inside one step
+        invocation, so a mid-chunk crash (``injector.maybe_fail_chunk``)
+        discards them and the driver's restore+replay recomputes the step
+        from checkpointed state — chunk cursors never need checkpointing.
+        """
+
+        chunk_dfs: Dict[str, List] = {}
+        for df in phase.body:
+            refs = self._chunk_refs(df)
+            if refs:
+                chunk_dfs.setdefault(refs[0], []).append(df)
+        plain = tuple(df for df in phase.body if not self._chunk_refs(df))
+        targets = tuple(dict.fromkeys(
+            df.target for dfs in chunk_dfs.values() for df in dfs
+        ))
+        place = self._placer()
+        fire_fns = {
+            pred: self._chunk_fire_fn(phase, pred, tuple(dfs))
+            for pred, dfs in chunk_dfs.items()
+        }
+        finish = self._chunk_finish_fn(phase, plain, targets)
+
+        def step(state, jj):
+            j = jnp.int32(jj)
+            acc = {
+                t: jax.tree_util.tree_map(place, self._empty_out(t))
+                for t in targets
+            }
+            of = jnp.asarray(False)
+            for pred, fire in fire_fns.items():
+                chunks = self.chunked_edb[pred]
+                cur = self._put_chunk(chunks[0])
+                for c in range(len(chunks)):
+                    # double buffering: enqueue the next H2D transfer
+                    # before dispatching compute on the current chunk
+                    nxt = self._put_chunk(chunks[c + 1]) \
+                        if c + 1 < len(chunks) else None
+                    if injector is not None:
+                        injector.maybe_fail_chunk(jj, c)
+                    acc, ov = fire(state, acc, materialized, param_grids,
+                                   cur, j)
+                    of = jnp.logical_or(of, ov)
+                    cur = nxt
+            return finish(state, acc, of, materialized, param_grids, j)
+
+        return step
 
     # -- parameterized query bindings (online serving) ----------------------
 
@@ -1764,11 +2220,12 @@ class GenericExecutable:
 
         if not param_sets:
             raise ExecutorError("run_batched needs at least one param set")
-        if self._any_row or self.row_edb:
+        if self._any_row or self.row_edb or self.chunked_edb:
             raise ExecutorError(
                 "query batching needs all-dense storage: row-table slabs "
                 "carry capacity-overflow flags the vmapped fixpoint cannot "
-                "check host-side (fail closed; dispatch sequentially)"
+                "check host-side, and chunked EDB streams need the host "
+                "chunk loop (fail closed; dispatch sequentially)"
             )
         grids = [self._param_grids(ps) for ps in param_sets]
         names = set(grids[0])
@@ -1852,6 +2309,11 @@ class GenericExecutable:
         fixpoint phase plus its initialized state — times exactly one rule
         firing of the recursive stratum, the unit the drivers repeat."""
 
+        if any(self._chunk_refs(df) for df in self.phases[0].body):
+            raise ExecutorError(
+                "phase_step_fn cannot time a chunked phase: the out-of-core "
+                "chunk stream is a host loop, not one jitted step"
+            )
         place = self._placer()
         state: Dict[str, Dict[str, Any]] = {}
         for phase in self.phases:
@@ -2029,13 +2491,17 @@ class GenericExecutable:
                 )
         kwargs = {
             k: v for k, v in self._compile_kwargs.items()
-            if k not in ("storage", "row_cap")
+            if k not in ("storage", "row_cap", "chunks")
         }
         dense = compile_program(
             self.program, self.relations, mesh=self.mesh,
             semi_naive=self.semi_naive, domain=self.domain,
             storage="dense-grid", **kwargs,
         )
+        # Result metadata survives the rerun: the fallback executable is
+        # this one's lineage, so remesh events accumulated before the
+        # overflow trip stay on the final FixpointResult.
+        dense.remesh_events = self.remesh_events
         res = dense.run(max_iters, on_device, params=params)
         return replace(res, storage_fallback=True)
 
@@ -2128,22 +2594,45 @@ class GenericExecutable:
                     state[pred] = jax.tree_util.tree_map(
                         place, self._init_entry(entry)
                     )
+            chunked_phase = any(self._chunk_refs(df) for df in phase.body)
             step = self._phase_step(phase, materialized, relations=prels)
             conv = self._phase_converged(phase)
             if on_device:
+                if chunked_phase:
+                    raise ExecutorError(
+                        "chunked streaming needs the host driver: the chunk "
+                        "loop issues host-to-device transfers inside every "
+                        "iteration (pass on_device=False)"
+                    )
                 res = device_fixpoint(step, conv, state, max_iters)
             else:
-                jitted_req = self._jitted_step(phase)
+                shifted = None if injector is None \
+                    else _ShiftedInjector(injector, total)
+                if chunked_phase:
+                    step_req = self._chunked_phase_step(
+                        phase, materialized, param_grids, injector=shifted
+                    )
+                else:
+                    jitted = self._jitted_step(phase)
+
+                    def step_req(s, jj, _jit=jitted):
+                        return _jit(
+                            s, materialized, param_grids, jnp.int32(jj)
+                        )
                 save_hook = restore_hook = None
                 if store is not None:
                     base = total  # global step counter offset for this phase
                     completed = list(phase_iters)
 
                     def save_hook(s, jj, _k=k, _b=base, _c=completed):
+                        # "chunk" is the out-of-core stream cursor: chunk
+                        # partials live only inside one step invocation
+                        # (never checkpointed), so a restored step always
+                        # replays its chunk stream from 0.
                         store.save(
                             _b + jj, self._ckpt_tree(s, materialized),
                             extra={"phase": _k, "iteration": jj,
-                                   "phase_iterations": _c},
+                                   "phase_iterations": _c, "chunk": 0},
                         )
 
                     def restore_hook(_k=k):
@@ -2165,9 +2654,7 @@ class GenericExecutable:
                     if not resumed:
                         save_hook(state, 0)
                 driver = HostFixpointDriver(
-                    step=lambda s, jj: jitted_req(
-                        s, materialized, param_grids, jnp.int32(jj)
-                    ),
+                    step=step_req,
                     converged=conv,
                     config=DriverConfig(
                         max_iters=max_iters,
@@ -2176,10 +2663,7 @@ class GenericExecutable:
                     ),
                     save=save_hook,
                     restore=restore_hook,
-                    injector=(
-                        None if injector is None
-                        else _ShiftedInjector(injector, total)
-                    ),
+                    injector=shifted,
                 )
                 try:
                     res = driver.run(
@@ -2277,6 +2761,9 @@ def compile_program(
     rewrite: bool = False,
     storage: Any = None,
     row_cap: Optional[int] = None,
+    exchange: Any = None,
+    hbm_budget: Optional[int] = None,
+    chunks: Any = None,
     **frontend_kwargs,
 ):
     """Compile ANY XY-stratified program onto the unified executor.
@@ -2308,6 +2795,21 @@ def compile_program(
     always row-table (their dense grid is infeasible).  ``row_cap=`` pins
     the row-table intermediate slab capacity.  The selection is recorded in
     ``plan.notes`` as the ``storage-selection(...)`` entry.
+
+    ``exchange=`` overrides the planner's explicit-exchange connector
+    selection for row-table GroupBy/Join sites on data-parallel meshes: a
+    string (``"bucket-a2a"`` / ``"psum-scatter"`` / ``"gspmd"``) forces
+    every row predicate, a mapping forces individual head predicates.  The
+    selection is recorded per predicate as ``exchange(<pred>: ...)`` notes.
+
+    ``hbm_budget=`` (bytes) overrides the per-device working-set budget the
+    planner chunks out-of-core EDB scans against (default: half the
+    hardware spec's HBM); ``chunks=`` forces chunk counts (an int for every
+    row-table EDB, or a per-predicate mapping).  Chunked predicates keep
+    their slabs host-resident and stream through the fixpoint step in
+    planner-chosen chunk counts (``chunking(<pred>: ...)`` notes),
+    accumulating per-chunk partials through the merge-monoid registry so
+    results are chunk-count-invariant.
     """
 
     shape = _listing_shape(program)
@@ -2517,11 +3019,28 @@ def compile_program(
                 )
             forced[name] = "row-table"
 
+    # Explicit-exchange selection inputs: the merge monoid's kernel op per
+    # head predicate decides psum-scatter admission; chunking applies to
+    # row-table EDB scans sized by their key arity + value-column count.
+    exchange_ops: Dict[str, Optional[str]] = {}
+    for pred, agg in merge_monoids.items():
+        if agg is not None:
+            try:
+                exchange_ops[pred] = get_monoid(agg).kernel_op
+            except MonoidError:
+                exchange_ops[pred] = None
+
     plan = plan_program(
         tuple(tuple(sorted(g)) for g in phase_groups),
         tuple(specs), domain, mesh_spec, hw,
         semi_naive=semi_naive, extra_notes=sn_notes + rw_notes,
         predicates=predicates, storage=forced or None, row_cap=row_cap,
+        exchange=exchange, exchange_ops=exchange_ops,
+        hbm_budget=hbm_budget, chunks=chunks,
+        edb=tuple(sorted(rels)),
+        row_value_cols={
+            name: len(rel.values) for name, rel in rels.items()
+        },
     )
 
     ex = GenericExecutable(
@@ -2539,7 +3058,8 @@ def compile_program(
         shared_ids=shared_ids,
         _compile_kwargs={"hw": hw, "force_connector": force_connector,
                          "rewrite": rewrite, "storage": storage,
-                         "row_cap": row_cap},
+                         "row_cap": row_cap, "exchange": exchange,
+                         "hbm_budget": hbm_budget, "chunks": chunks},
         storage=dict(plan.storage),
         row_caps=dict(plan.row_caps),
         row_cap=plan.row_cap,
@@ -2577,6 +3097,32 @@ def compile_program(
                 for p, g in rel.values.items()
             }
         count = rows.shape[0]
+        m = int(getattr(plan, "chunks", {}).get(name, 0))
+        if m > 1:
+            # Out-of-core streaming: split the slab into m identically
+            # shaped HOST-resident chunks (numpy) — the fixpoint step
+            # streams them through HBM instead of device-placing the
+            # whole slab.
+            per = max(-(-count // m), 1)
+            ccap = 1 << max(per - 1, 0).bit_length()
+            chunk_list: List[Dict[str, Any]] = []
+            for c in range(m):
+                sl = rows[c * per:(c + 1) * per]
+                cnt = sl.shape[0]
+                ids_c = np.zeros((ccap, k), np.int32)
+                ids_c[:cnt] = sl
+                valid_c = np.zeros((ccap,), bool)
+                valid_c[:cnt] = True
+                vals_c = {}
+                for p, v in raw_vals.items():
+                    col = np.zeros((ccap,), np.float32)
+                    col[:cnt] = v[c * per:(c + 1) * per].astype(np.float32)
+                    vals_c[p] = col
+                chunk_list.append(
+                    {"ids": ids_c, "valid": valid_c, "values": vals_c}
+                )
+            ex.chunked_edb[name] = chunk_list
+            continue
         if count > cap:
             raise ExecutorError(
                 f"EDB {name!r}: {count} rows exceed its row-table "
@@ -2596,7 +3142,94 @@ def compile_program(
             "valid": place(jnp.asarray(valid)),
             "values": values,
         }
+    if ex.chunked_edb:
+        _check_chunk_soundness(ex)
     return ex
+
+
+def _check_chunk_soundness(ex: GenericExecutable) -> None:
+    """Fail-closed validation that streaming a predicate's chunks through
+    the fixpoint is chunk-count-invariant: a rule scanning a chunked EDB
+    fires once per chunk and its partial outs fold through the
+    CombineMonoid registry, which is only sound when the rule decomposes
+    over a disjoint union of those scan rows."""
+
+    chunked = set(ex.chunked_edb)
+    body_views = {
+        ph.index: {df.target for df in ph.body if not df.next_state}
+        for ph in ex.phases
+    }
+
+    def check_df(df, phase: Optional[_Phase] = None,
+                 is_body: bool = False) -> None:
+        refs = _referenced_preds(df.op) & chunked
+        if not refs:
+            return
+        if len(refs) > 1:
+            raise ExecutorError(
+                f"rule {df.label}: scans {len(refs)} chunked EDBs "
+                f"({', '.join(sorted(refs))}) — the streaming loop "
+                "decomposes one chunked scan per rule (fail closed)"
+            )
+        pred = next(iter(refs))
+        if is_body and not df.next_state:
+            raise ExecutorError(
+                f"rule {df.label}: per-iteration view rule scans chunked "
+                f"EDB {pred!r} — only carried-state rules stream through "
+                "the chunk loop (fail closed)"
+            )
+        if is_body and phase is not None:
+            read_views = _referenced_preds(df.op) & body_views[phase.index]
+            if read_views:
+                raise ExecutorError(
+                    f"rule {df.label}: chunked rule reads same-phase view "
+                    f"{sorted(read_views)[0]!r}, which the streaming loop "
+                    "fires after the chunk partials (fail closed)"
+                )
+
+        def no_anti(op) -> None:
+            if isinstance(op, algebra.AntiJoin) and (
+                _referenced_preds(op.right) & chunked
+            ):
+                raise ExecutorError(
+                    f"rule {df.label}: chunked EDB {pred!r} on the negated "
+                    "side of an AntiJoin — set difference against a "
+                    "partial chunk is not chunk-invariant (fail closed)"
+                )
+            for child in op.children():
+                no_anti(child)
+
+        def check_gb(op, root: bool) -> None:
+            if isinstance(op, algebra.GroupBy) and (
+                _referenced_preds(op) & chunked
+            ):
+                if not root or ex.merge_monoids.get(df.target) != op.agg:
+                    raise ExecutorError(
+                        f"rule {df.label}: aggregation over chunked EDB "
+                        f"{pred!r} must be the rule's head aggregate (its "
+                        "per-chunk partials fold through the head monoid; "
+                        "fail closed)"
+                    )
+            for child in op.children():
+                check_gb(child, False)
+
+        no_anti(df.op)
+        check_gb(df.op, True)
+        _, vals = ex.sigs[df.target]
+        if vals and ex.merge_monoids.get(df.target) is None:
+            raise ExecutorError(
+                f"rule {df.label}: target {df.target!r} carries value "
+                f"columns but no merge monoid — per-chunk partials from "
+                f"chunked EDB {pred!r} cannot combine (fail closed)"
+            )
+
+    for df in ex.prelude:
+        check_df(df)
+    for ph in ex.phases:
+        for df in ph.init + ph.finals + ph.post:
+            check_df(df, phase=ph)
+        for df in ph.body:
+            check_df(df, phase=ph, is_body=True)
 
 
 def _collect_groupbys(df, sigs, relations, domain) -> List[GroupBySpec]:

@@ -85,6 +85,7 @@ __all__ = [
     "grid_to_rows",
     "row_linear_index",
     "rows_to_grid",
+    "row_hash_exchange",
 ]
 
 
@@ -994,3 +995,77 @@ def rows_to_grid(ids: jax.Array, valid: jax.Array, n: int) -> jax.Array:
     lin = row_linear_index(ids, valid, n)
     flat = jnp.zeros((size,), jnp.bool_).at[lin].set(True, mode="drop")
     return flat.reshape((n,) * k)
+
+
+def row_hash_exchange(
+    owner: jax.Array,
+    payload,
+    valid: jax.Array,
+    n_shards: int,
+    bucket_cap: int,
+    axes: Tuple[str, ...],
+):
+    """Key-hash bucket all-to-all for generic row slabs (the explicit
+    sharded connector of the row-table GroupBy/Join lowering).
+
+    Each valid row carries a destination shard ``owner`` (its key hash mod
+    ``n_shards``, chosen by the caller); rows are packed into fixed-capacity
+    ``bucket_cap`` per-owner buckets and exchanged with a tiled
+    ``all_to_all`` per mesh axis, mirroring :func:`_bucket_by_owner` /
+    :func:`_sparse_exchange` but for an arbitrary pytree ``payload`` of
+    ``[cap, ...]`` leaves rather than a single (ids, vals) pair.
+
+    Returns ``(payload_x, valid_x, overflow)``: the received flat
+    ``[n_shards * bucket_cap, ...]`` payload pytree, its validity mask, and
+    a traced flag set when any *valid* row exceeded its bucket's capacity
+    (dropped rows — the caller must honor the flag: the executor folds it
+    into the lossless dense-fallback overflow policy).
+
+    Invalid rows take the out-of-range owner ``n_shards``: they sort after
+    every real row, never compete for bucket slots, and their scatter
+    writes fall out of bounds and are dropped (``mode='drop'``).
+    """
+
+    axes = _axes_present(axes)
+    cap = owner.shape[0]
+    owner = jnp.where(valid, owner.astype(jnp.int32), jnp.int32(n_shards))
+    order = jnp.argsort(owner)
+    owner_s = owner[order]
+    pos = jnp.arange(cap, dtype=jnp.int32)
+    run_start = jnp.searchsorted(owner_s, owner_s, side="left").astype(jnp.int32)
+    rank = pos - run_start
+    keep = rank < bucket_cap
+    # A valid row beyond its bucket's capacity is dropped in transit.
+    overflow = jnp.any(jnp.logical_and(owner_s < n_shards, ~keep))
+    # Dropped and invalid rows scatter out of range (mode='drop').
+    slot = jnp.where(
+        jnp.logical_and(keep, owner_s < n_shards),
+        owner_s * bucket_cap + rank,
+        jnp.int32(n_shards * bucket_cap),
+    )
+
+    def pack(leaf):
+        leaf_s = leaf[order]
+        buf = jnp.zeros((n_shards * bucket_cap,) + leaf.shape[1:], leaf.dtype)
+        return buf.at[slot].set(leaf_s, mode="drop").reshape(
+            (n_shards, bucket_cap) + leaf.shape[1:]
+        )
+
+    packed = jax.tree_util.tree_map(pack, payload)
+    valid_b = jnp.zeros((n_shards * bucket_cap,), jnp.bool_)
+    valid_b = valid_b.at[slot].set(True, mode="drop").reshape(
+        (n_shards, bucket_cap)
+    )
+
+    def exchange(leaf):
+        for ax in axes:
+            leaf = lax.all_to_all(leaf, ax, 0, 0, tiled=True)
+        return leaf
+
+    packed_x = jax.tree_util.tree_map(exchange, packed)
+    valid_x = exchange(valid_b)
+    flat = jax.tree_util.tree_map(
+        lambda leaf: leaf.reshape((n_shards * bucket_cap,) + leaf.shape[2:]),
+        packed_x,
+    )
+    return flat, valid_x.reshape(-1), overflow

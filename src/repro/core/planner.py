@@ -356,6 +356,15 @@ class ProgramPlan:
     storage: Mapping[str, str] = field(default_factory=dict)
     row_caps: Mapping[str, int] = field(default_factory=dict)
     row_cap: int = 0
+    # Explicit sharded exchange selection: row predicate -> "bucket-a2a" |
+    # "psum-scatter" | "gspmd" (empty on single-shard meshes), with the
+    # per-shard receiver bucket capacity for the bucket all-to-all modes.
+    exchanges: Mapping[str, str] = field(default_factory=dict)
+    exchange_caps: Mapping[str, int] = field(default_factory=dict)
+    # Out-of-core streaming: row-stored EDB predicate -> chunk count (>= 2
+    # or forced), plus the per-device HBM budget the split was sized for.
+    chunks: Mapping[str, int] = field(default_factory=dict)
+    hbm_budget: int = 0
 
     def explain(self) -> str:
         lines = [
@@ -385,6 +394,15 @@ _ROW_EST_FACTOR = 16
 # underestimates); intermediates get 4x the largest predicate slab.
 _ROW_CAP_MAX = 1 << 20
 _ROW_INTER_CAP_MAX = 1 << 22
+# Explicit-exchange selection (see docs/optimizations.md "Out-of-core
+# streaming & explicit exchanges"): slabs below _EXCHANGE_MIN_ROWS are too
+# small for the shard_map bucket machinery to beat GSPMD's replicated
+# lowering (the all-to-all alpha terms dominate), so they stay implicit.
+# psum-scatter needs a dense per-shard partial grid, so it is only chosen
+# when the target's cell count keeps that grid cheap.
+_EXCHANGE_MIN_ROWS = 1 << 13
+_PSUM_SCATTER_MAX_CELLS = 1 << 20
+_EXCHANGE_MODES = ("bucket-a2a", "psum-scatter", "gspmd")
 
 
 def _next_pow2(x: int) -> int:
@@ -441,6 +459,12 @@ def plan_program(
     predicates: Optional[Mapping[str, Tuple[int, float]]] = None,
     storage: Optional[Mapping[str, str]] = None,
     row_cap: Optional[int] = None,
+    exchange: Optional[object] = None,
+    exchange_ops: Optional[Mapping[str, Optional[str]]] = None,
+    hbm_budget: Optional[int] = None,
+    chunks: Optional[object] = None,
+    edb: Sequence[str] = (),
+    row_value_cols: Optional[Mapping[str, int]] = None,
 ) -> ProgramPlan:
     """Cost-based lowering of a generic logical plan onto the dense-grid
     executor.
@@ -470,6 +494,26 @@ def plan_program(
     cse: n shared)`` entry from :func:`repro.core.rewrite.rewrite_plan`
     (when ``compile_program(..., rewrite=True)``) — so golden tests pin
     logical and physical decisions in one tuple.
+
+    On multi-shard meshes each row-stored predicate additionally gets an
+    **explicit-exchange selection** (``exchange(...)`` notes): slabs at
+    least ``_EXCHANGE_MIN_ROWS`` deep lower their GroupBy/Join sites onto
+    the explicit sharded connectors — a key-hash ``bucket-a2a`` whose
+    per-shard receiver capacity divides the global estimate by the shard
+    count (``exchange_caps``), or ``psum-scatter`` when the target's merge
+    monoid rides the sum kernel and its dense partial grid stays small —
+    while smaller slabs keep the implicit ``gspmd`` lowering.  ``exchange``
+    forces one mode for every predicate (a string) or per predicate (a
+    mapping); ``exchange_ops`` supplies each predicate's merge-monoid
+    kernel op.
+
+    **Out-of-core streaming** (``chunking(...)`` notes): row-stored EDB
+    predicates (``edb``) whose estimated device slab exceeds the per-device
+    ``hbm_budget`` (default: half of ``hw.hbm_bytes``) are split into
+    host-resident chunks streamed through the fixpoint step; ``chunks``
+    forces a count globally (int) or per predicate (mapping).
+    ``row_value_cols`` gives each predicate's value-column count for the
+    slab-byte estimate.
     """
 
     pred_storage, row_caps = _select_storage(
@@ -500,6 +544,97 @@ def plan_program(
     dp = mesh.data_parallel_size
     if dp > 1:
         notes.append(f"spmd(gspmd data-parallel x{dp})")
+
+    # Rule: explicit-exchange selection — on multi-shard meshes, decide per
+    # row-stored predicate whether its GroupBy/Join sites run on the
+    # explicit sharded connectors (shard_map bucket all-to-all /
+    # psum-scatter) or stay on the implicit GSPMD lowering.  The per-shard
+    # receiver capacity divides the global cardinality estimate by the
+    # shard count (each shard owns ~1/dp of the key-hash space) — deriving
+    # it from row_caps directly would leave buckets dp-x oversized.
+    pred_arity = {p: a for p, (a, _) in (predicates or {}).items()}
+    pred_est = {p: e for p, (_, e) in (predicates or {}).items()}
+    exchanges: Dict[str, str] = {}
+    exchange_caps: Dict[str, int] = {}
+    if dp > 1 and row_preds:
+        forced_exchange: Mapping[str, str]
+        if exchange is None:
+            forced_exchange = {}
+        elif isinstance(exchange, str):
+            forced_exchange = {p: exchange for p in row_preds}
+        else:
+            forced_exchange = dict(exchange)
+        for p in forced_exchange:
+            if forced_exchange[p] not in _EXCHANGE_MODES:
+                raise ValueError(
+                    f"unknown exchange {forced_exchange[p]!r} for "
+                    f"predicate {p!r} (expected one of {_EXCHANGE_MODES})"
+                )
+        ops = exchange_ops or {}
+        for p in row_preds:
+            cells = float(domain) ** pred_arity.get(p, 2)
+            mode = forced_exchange.get(p)
+            if mode is None:
+                if row_caps[p] >= _EXCHANGE_MIN_ROWS:
+                    if ops.get(p) == "sum" and cells <= _PSUM_SCATTER_MAX_CELLS:
+                        mode = "psum-scatter"
+                    else:
+                        mode = "bucket-a2a"
+                else:
+                    mode = "gspmd"
+            exchanges[p] = mode
+            if mode != "gspmd":
+                per_shard = int(8 * pred_est.get(p, row_caps[p] / 8.0)) // dp
+                exchange_caps[p] = min(
+                    _next_pow2(max(64, per_shard)), row_caps[p]
+                )
+                detail = (
+                    f"bucket-a2a[cap={exchange_caps[p]}]"
+                    if mode == "bucket-a2a" else mode
+                )
+            else:
+                detail = mode
+            notes.append(f"exchange({p}: {detail})")
+
+    # Rule: out-of-core streaming — split row-stored EDB scans whose device
+    # slab exceeds the per-device HBM budget into host-resident chunks.
+    budget = int(hbm_budget) if hbm_budget is not None else hw.hbm_bytes // 2
+    if budget <= 0:
+        raise ValueError(f"hbm_budget must be positive, got {budget}")
+    if chunks is None:
+        forced_chunks: Mapping[str, int] = {}
+    elif isinstance(chunks, int):
+        forced_chunks = {p: chunks for p in edb if pred_storage.get(p) == "row-table"}
+    else:
+        forced_chunks = dict(chunks)
+    for p, m in forced_chunks.items():
+        if p not in set(edb):
+            raise ValueError(
+                f"chunked streaming only applies to EDB scans; {p!r} is "
+                "not an EDB predicate of this program"
+            )
+        if pred_storage.get(p) != "row-table":
+            raise ValueError(
+                f"chunked streaming requires row-table storage for {p!r} "
+                f"(got {pred_storage.get(p, '<unknown>')!r})"
+            )
+        if int(m) < 1:
+            raise ValueError(f"chunk count must be >= 1, got {m} for {p!r}")
+    vals = row_value_cols or {}
+    chunk_counts: Dict[str, int] = {}
+    for p in sorted(set(edb)):
+        if pred_storage.get(p) != "row-table":
+            continue
+        arity = pred_arity.get(p, 2)
+        slab_bytes = row_caps[p] * (4 * arity + 1 + 4 * vals.get(p, 0))
+        m = forced_chunks.get(p)
+        if m is None:
+            m = int(math.ceil(slab_bytes / budget))
+        m = max(int(m), 1)
+        if m > 1:
+            chunk_counts[p] = m
+            notes.append(f"chunking({p}: {m} chunks, budget={budget}B)")
+
     if len(phases) > 1:
         notes.append(
             "fixpoint-phases("
@@ -541,6 +676,10 @@ def plan_program(
         storage=pred_storage,
         row_caps=row_caps,
         row_cap=inter_cap,
+        exchanges=exchanges,
+        exchange_caps=exchange_caps,
+        chunks=chunk_counts,
+        hbm_budget=budget,
     )
 
 

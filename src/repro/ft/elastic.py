@@ -51,9 +51,14 @@ class FailureInjector:
     """Deterministic failure schedule for FT tests."""
 
     def __init__(self, crashes: Sequence[int] = (),
-                 straggles: Sequence[Tuple[int, float]] = ()) -> None:
+                 straggles: Sequence[Tuple[int, float]] = (),
+                 chunk_crashes: Sequence[Tuple[int, int]] = ()) -> None:
         self.crashes = set(crashes)
         self.straggles = dict(straggles)
+        # (step, chunk) crash points inside the out-of-core streaming loop
+        # — the executor's chunked step fires them mid-stream, after some
+        # chunk partials have already been accumulated.
+        self.chunk_crashes = set(chunk_crashes)
         self.fired: List[FailureEvent] = []
 
     def maybe_fail(self, step: int) -> None:
@@ -65,6 +70,16 @@ class FailureInjector:
             delay = self.straggles.pop(step)
             self.fired.append(FailureEvent(step, "straggle", f"{delay}s"))
             time.sleep(delay)
+
+    def maybe_fail_chunk(self, step: int, chunk: int) -> None:
+        if (step, chunk) in self.chunk_crashes:
+            self.chunk_crashes.discard((step, chunk))
+            self.fired.append(
+                FailureEvent(step, "crash", f"chunk {chunk}")
+            )
+            raise RuntimeError(
+                f"injected device failure at step {step} chunk {chunk}"
+            )
 
 
 class ElasticPlanner:

@@ -495,6 +495,84 @@ def test_parsed_program_rewrite_on_notes_golden():
             key, ex.plan.notes)
 
 
+# ---------------------------------------------------------------------------
+# Explicit sharded exchanges + out-of-core chunking (PR 10)
+# ---------------------------------------------------------------------------
+#
+# The exchange(...) / chunking(...) notes are the planner's public record of
+# the PR-10 physical decisions — which Join/GroupBy sites leave GSPMD for the
+# explicit key-hash bucket all-to-all (and its per-shard receiver capacity),
+# where the monoid admits the psum-scatter fast path, and which EDB slabs
+# stream host-resident chunks through the fixpoint step.  Pinned straight
+# through plan_program so no device mesh is needed.
+
+_X_PREDICATES = {"edge": (2, 3e6), "tc": (2, 1e7), "rank": (1, 16384.0)}
+_X_KW = dict(
+    predicates=_X_PREDICATES,
+    storage={"rank": "row-table"},
+    exchange_ops={"tc": None, "rank": "sum"},
+    edb=("edge",),
+    row_value_cols={"edge": 0},
+)
+
+
+def test_exchange_and_chunking_plan_notes_golden():
+    from repro.core.planner import plan_program
+
+    plan = plan_program(
+        (("rank", "tc"),), (), 1 << 20, MeshSpec((("data", 8),)),
+        hbm_budget=1 << 22, **_X_KW,
+    )
+    assert plan.notes == (
+        "storage-selection(n=1048576, edge=row-table[cap=1048576], "
+        "rank=row-table[cap=131072], tc=row-table[cap=1048576])",
+        "loop-invariant-caching(edb-grids)",
+        "spmd(gspmd data-parallel x8)",
+        "exchange(edge: bucket-a2a[cap=1048576])",
+        "exchange(rank: psum-scatter)",
+        "exchange(tc: bucket-a2a[cap=1048576])",
+        "chunking(edge: 3 chunks, budget=4194304B)",
+    ), plan.notes
+    assert plan.exchanges == {
+        "edge": "bucket-a2a", "rank": "psum-scatter", "tc": "bucket-a2a"}
+    assert plan.exchange_caps == {
+        "edge": 1048576, "rank": 16384, "tc": 1048576}
+    assert plan.chunks == {"edge": 3}
+
+
+def test_single_shard_plan_has_no_exchange_notes():
+    """dp=1 (and dp>1 under the default HBM budget) must not grow new
+    notes — every pre-PR-10 golden snapshot above stays byte-identical."""
+
+    from repro.core.planner import plan_program
+
+    plan = plan_program(
+        (("rank", "tc"),), (), 1 << 20, MESHES["1way"], **_X_KW,
+    )
+    assert not any(
+        n.startswith(("exchange(", "chunking(")) for n in plan.notes
+    ), plan.notes
+    assert plan.exchanges == {} and plan.chunks == {}
+
+
+def test_exchange_caps_divide_estimate_by_shard_count():
+    """The bucket-a2a receiver capacity is sized from the planner's global
+    cardinality estimate divided across the data shards (then rounded to a
+    power of two, clamped to the slab cap) — more shards, smaller
+    per-shard buckets."""
+
+    from repro.core.planner import plan_program
+
+    caps = {
+        dp: plan_program(
+            (("rank", "tc"),), (), 1 << 20, MeshSpec((("data", dp),)),
+            **_X_KW,
+        ).exchange_caps["rank"]
+        for dp in (2, 4, 8)
+    }
+    assert caps == {2: 65536, 4: 32768, 8: 16384}
+
+
 def test_parsed_program_rewrite_structure_golden():
     for key, ex in _parsed_executables(rewrite=True).items():
         name, semi_naive = key

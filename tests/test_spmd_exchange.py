@@ -1,0 +1,199 @@
+"""Explicit-exchange + out-of-core streaming conformance.
+
+Two layers:
+
+* An 8-virtual-device subprocess (tests/spmd_exchange_program.py, shared
+  _spmd_subprocess runner) proving every shipped workload lands on the
+  same answer under all three exchange lowerings — implicit ``gspmd``,
+  the key-hash ``bucket-a2a`` connector, and ``psum-scatter`` — and that
+  the explicit connectors actually planned (``exchange(...)`` notes).
+* In-process (1 device) differentials proving chunked streaming is
+  chunk-count-invariant ({1, 2, 7} — including a count that does not
+  divide the slab), survives crash-mid-chunk + checkpoint restore, and
+  fails closed on the batched/on-device dispatch paths.
+"""
+
+import numpy as np
+import pytest
+
+from tests._spmd_subprocess import run_spmd_program
+
+EXCHANGE_TAGS = (
+    "tc/gspmd", "tc/bucket-a2a",
+    "tc-chunked/bucket-a2a",
+    "cc-semi/bucket-a2a",
+    "negated-reach/bucket-a2a",
+    "pipeline/gspmd", "pipeline/bucket-a2a", "pipeline/psum-scatter",
+)
+
+
+@pytest.fixture(scope="module")
+def results():
+    return run_spmd_program("spmd_exchange_program.py")
+
+
+@pytest.mark.parametrize("tag", EXCHANGE_TAGS)
+def test_exchange_mode_matches_single_shard_dense(results, tag):
+    assert tag in results["errs"], sorted(results["errs"])
+    assert results["errs"][tag] <= 1e-8, (tag, results["errs"][tag])
+    assert results["fallbacks"][tag] is False, \
+        f"{tag} fell back to dense storage on the mesh"
+
+
+def test_explicit_connectors_are_planned(results):
+    notes = results["notes"]
+    assert any(n.startswith("exchange(") and "bucket-a2a[cap=" in n
+               for n in notes["tc/bucket-a2a"]), notes["tc/bucket-a2a"]
+    assert any("psum-scatter" in n
+               for n in notes["pipeline/psum-scatter"]), \
+        notes["pipeline/psum-scatter"]
+    assert any(n.startswith("chunking(edge: 3 chunks")
+               for n in notes["tc-chunked/bucket-a2a"]), \
+        notes["tc-chunked/bucket-a2a"]
+    # gspmd override pins every site to the implicit partitioner
+    gspmd = [n for n in notes["tc/gspmd"] if n.startswith("exchange(")]
+    assert gspmd and all(n.endswith(": gspmd)") for n in gspmd), \
+        notes["tc/gspmd"]
+
+
+# --------------------------------------------------------------------------
+# In-process chunked streaming differentials (single device).
+# --------------------------------------------------------------------------
+
+N = 64
+
+
+def _grid(rel):
+    from repro.core.executor import RowRelation
+
+    if isinstance(rel, RowRelation):
+        rel = rel.to_dense()
+    return (np.asarray(rel.present),
+            {k: np.asarray(v) for k, v in rel.values.items()})
+
+
+def _max_err(a, b, preds):
+    err = 0.0
+    for p in preds:
+        ap, av = _grid(a.state[p])
+        bp, bv = _grid(b.state[p])
+        err = max(err, float(np.sum(ap != bp)))
+        for k in av:
+            err = max(err, float(
+                np.abs(np.where(ap, av[k] - bv[k], 0.0)).max()))
+    return err
+
+
+def _tc_setup():
+    from repro.core.executor import Relation
+    from repro.core.listings import transitive_closure_program
+
+    rng = np.random.default_rng(7)
+    edge = Relation.from_columns(
+        N, rng.integers(0, N, 96), rng.integers(0, N, 96))
+    return transitive_closure_program(), {"edge": edge}
+
+
+@pytest.mark.parametrize("m", (1, 2, 7))
+def test_chunked_tc_matches_unchunked_exactly(m):
+    from repro.core.executor import compile_program
+
+    program, rels = _tc_setup()
+    base = compile_program(program, dict(rels), storage="row-table")
+    chunked = compile_program(
+        program, dict(rels), storage="row-table", chunks={"edge": m})
+    if m > 1:
+        assert f"chunking(edge: {m} chunks" in "".join(chunked.plan.notes)
+        assert set(chunked.chunked_edb) == {"edge"}
+        assert len(chunked.chunked_edb["edge"]) == m
+    a = base.run(max_iters=64)
+    b = chunked.run(max_iters=64)
+    assert not a.storage_fallback and not b.storage_fallback
+    assert _max_err(a, b, ("tc",)) == 0.0
+
+
+@pytest.mark.parametrize("m", (2, 7))
+def test_chunked_pipeline_matches_unchunked(m):
+    from repro.core.executor import Relation, compile_program
+    from repro.core.listings import pagerank_threshold_program
+
+    rng = np.random.default_rng(3)
+    n = 256
+    psrc = np.repeat(np.arange(n), 3)
+    pdst = rng.integers(0, n, 3 * n)
+    deg = np.bincount(psrc, minlength=n).astype(np.float32)
+    rels = {
+        "edge": Relation.from_columns(n, psrc, pdst),
+        "node": Relation.from_columns(
+            n, np.arange(n), np.full(n, 1.0 / n, np.float32), deg,
+            np.full(n, 0.15 / n, np.float32)),
+    }
+    program = pagerank_threshold_program(tau=1.5 / n)
+    base = compile_program(
+        program, dict(rels), storage="row-table", semi_naive=True
+    ).run(max_iters=60)
+    chunked = compile_program(
+        program, dict(rels), storage="row-table", semi_naive=True,
+        chunks={"edge": m},
+    ).run(max_iters=60)
+    assert not base.storage_fallback and not chunked.storage_fallback
+    assert _max_err(base, chunked, ("rank", "hot", "reach")) <= 1e-8
+
+
+def test_auto_chunking_from_hbm_budget():
+    """A budget smaller than the EDB slab splits the scan automatically and
+    the streamed fixpoint still matches the in-memory one exactly."""
+
+    from repro.core.executor import compile_program
+
+    program, rels = _tc_setup()
+    base = compile_program(program, dict(rels), storage="row-table")
+    auto = compile_program(
+        program, dict(rels), storage="row-table", hbm_budget=256)
+    assert len(auto.chunked_edb.get("edge", [])) > 1
+    assert any(n.startswith("chunking(edge:") and "budget=256B" in n
+               for n in auto.plan.notes), auto.plan.notes
+    assert _max_err(base.run(max_iters=64), auto.run(max_iters=64),
+                    ("tc",)) == 0.0
+
+
+def test_chunked_crash_mid_chunk_restores_and_converges(tmp_path):
+    """Satellite (d): a crash part-way through the chunk stream — some
+    chunk partials already accumulated — discards the partial step and the
+    driver restores from the last checkpoint; the replayed run must land on
+    the uninterrupted answer exactly."""
+
+    from repro.core.executor import compile_program
+    from repro.ft.elastic import FailureInjector
+
+    program, rels = _tc_setup()
+    clean = compile_program(
+        program, dict(rels), storage="row-table", chunks={"edge": 3}
+    ).run(max_iters=64)
+    inj = FailureInjector(chunk_crashes=((3, 1), (6, 2)))
+    faulted = compile_program(
+        program, dict(rels), storage="row-table", chunks={"edge": 3}
+    ).run(
+        max_iters=64,
+        checkpoint_dir=str(tmp_path / "ckpt"),
+        checkpoint_every=2,
+        injector=inj,
+    )
+    assert faulted.restarts == 2
+    fired = [e for e in inj.fired if e.kind == "crash"]
+    assert [e.detail for e in fired] == ["chunk 1", "chunk 2"]
+    assert _max_err(clean, faulted, ("tc",)) == 0.0
+
+
+def test_chunked_fails_closed_on_device_and_batched():
+    from repro.core.executor import ExecutorError, compile_program
+
+    program, rels = _tc_setup()
+    ex = compile_program(
+        program, dict(rels), storage="row-table", chunks={"edge": 2})
+    with pytest.raises(ExecutorError, match="host"):
+        ex.run(max_iters=4, on_device=True)
+    with pytest.raises(ExecutorError, match="chunk"):
+        ex.run_batched([{}], max_iters=4)
+    with pytest.raises(ExecutorError, match="chunked"):
+        ex.phase_step_fn()
